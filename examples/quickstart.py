@@ -1,0 +1,51 @@
+"""Quickstart: event-driven mixed-precision GCN inference with AMPLE-on-TPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a synthetic Cora-statistics graph, runs GCN through the AmpleEngine
+(event-driven tiles + Degree-Quant int8/float split), and compares against
+the dense float oracle — the 60-second tour of the paper's three ideas.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AmpleEngine, EngineConfig
+from repro.graphs import add_self_loops, make_dataset
+from repro.models.gnn import gcn
+
+
+def main():
+    # 1. A graph with Cora's published statistics (Table 4).
+    g = add_self_loops(make_dataset("cora", seed=0))
+    g = g.with_features(make_dataset("cora", seed=0).features)
+    print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges, "
+          f"mean degree {g.mean_degree:.1f}, features {g.feature_dim}")
+
+    # 2. The engine compiles the event-driven ExecutionPlan (the nodeslot
+    #    schedule) and the Degree-Quant precision tags.
+    eng = AmpleEngine(g, EngineConfig(mixed_precision=True, edges_per_tile=256))
+    rep = eng.occupancy_report()
+    print(f"event-driven lane occupancy:  {rep['event_driven_lane_occupancy']:.3f}")
+    print(f"double-buffer pipeline gaps:  {rep['double_buffer_pipeline_gap_ratio']:.3f}")
+    print(f"float-protected nodes:        {rep['float_node_ratio']:.1%} (Table 4: 2.1%)")
+
+    # 3. Two-layer GCN, mixed precision vs dense float oracle.
+    params = gcn.init(jax.random.PRNGKey(0), [g.feature_dim, 64, 7])
+    x = jnp.asarray(g.features)
+    t0 = time.time()
+    y = gcn.apply(params, eng, x)
+    y.block_until_ready()
+    print(f"mixed-precision inference: {(time.time() - t0) * 1e3:.1f} ms "
+          f"(CPU; the Pallas kernels target TPU)")
+
+    yref = gcn.apply_reference(params, g, x)
+    rel = float(jnp.abs(y - yref).max() / (jnp.abs(yref).max() + 1e-9))
+    agree = float((jnp.argmax(y, -1) == jnp.argmax(yref, -1)).mean())
+    print(f"vs float oracle: max rel err {rel:.4f}, argmax agreement {agree:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""The paper's own workload: GCN/GIN/GraphSAGE inference over Table-4 graphs.
+
+Registered so ``--arch ample-gcn`` works in the launcher and the distributed
+dry-run exercises the event-driven engine at Yelp scale (717k nodes) on the
+production mesh. d_model carries the feature width, d_ff the hidden width and
+vocab_size the class count (see launch/dryrun.py for the GNN input specs).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="ample-gcn", family="gnn",
+        num_layers=2, d_model=300, num_heads=1, num_kv_heads=1,
+        d_ff=256, vocab_size=100,  # yelp: 300 features, 100 classes
+        dtype="float32",
+    )
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="ample-gcn", family="gnn", reduced=True,
+        num_layers=2, d_model=32, num_heads=1, num_kv_heads=1,
+        d_ff=16, vocab_size=7, dtype="float32",
+    )
+
+
+register("ample-gcn", full, reduced)

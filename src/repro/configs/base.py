@@ -1,0 +1,243 @@
+"""Config system: every runnable model is a ``ModelConfig`` in a registry.
+
+``--arch <id>`` anywhere in the launcher resolves through ``get_config``.
+Each assigned architecture file registers a FULL config (dry-run only — the
+production mesh instantiates it as ShapeDtypeStructs) and a REDUCED config
+(same family/topology, tiny dims) that smoke tests run on CPU.
+
+Sharding-driven padding: the vocab is padded up to mesh divisibility at
+parameter-init time (padded rows are never targeted; the loss masks padded
+logits). Head/expert counts are NOT padded — projections shard on flat
+(H·hd) axes and non-divisible expert counts fall back per the sharding
+rules. FLOP accounting always uses the raw (unpadded) dimensions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional, Tuple
+
+__all__ = [
+    "ModelConfig",
+    "ShapeSpec",
+    "SHAPES",
+    "register",
+    "get_config",
+    "list_configs",
+    "pad_to_multiple",
+]
+
+
+def pad_to_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_layer_period: int = 1  # every k-th layer is MoE (llama4/jamba interleave)
+    moe_shared_expert: bool = False
+    capacity_factor: float = 1.25
+
+    # --- attention flavour ---
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    pos_embed: str = "rope"  # rope | mrope (qwen2-vl 3D) | sin (enc-dec) | none (jamba/mamba)
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t/h/w split of hd/2
+    attention_impl: str = "chunked"  # chunked | xla | flash(Pallas, TPU)
+
+    # --- MLP flavour ---
+    mlp: str = "swiglu"  # swiglu | relu2 | gelu
+    mlp_bias: bool = False
+
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    attn_layer_period: int = 0  # hybrid: 1 attention layer every k (jamba k=8)
+    attn_layer_offset: int = 4
+
+    # --- enc-dec ---
+    encoder_layers: int = 0  # >0 => encoder-decoder (seamless)
+
+    # --- frontend stubs (vlm/audio): inputs arrive as embeddings ---
+    embeds_input: bool = False
+
+    # --- numerics / training ---
+    norm: str = "rmsnorm"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    kv_cache_dtype: str = "model"  # model (= dtype) | int8 (decode-memory lever)
+    remat: str = "none"  # none | block  (activation checkpointing policy)
+    scan_layers: bool = True
+
+    # reduced smoke-config marker
+    reduced: bool = False
+
+    # ------------------------------------------------------------- derived
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.attn_layer_period > 0 and self.ssm_state > 0
+
+    @property
+    def is_ssm_only(self) -> bool:
+        return self.ssm_state > 0 and self.attn_layer_period == 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def padded_heads(self, tp: int) -> int:
+        return pad_to_multiple(self.num_heads, tp)
+
+    def padded_vocab(self, tp: int) -> int:
+        return pad_to_multiple(self.vocab_size, tp)
+
+    def param_count(self) -> int:
+        """Approximate raw (unpadded) parameter count; used for 6ND roofline."""
+        d, hd = self.d_model, self.resolved_head_dim
+        attn = d * (self.num_heads * hd) + 2 * d * (self.num_kv_heads * hd) + (
+            self.num_heads * hd
+        ) * d
+        if self.mlp == "swiglu":
+            mlp_dense = 3 * d * self.d_ff
+        else:
+            mlp_dense = 2 * d * self.d_ff
+        per_expert = mlp_dense
+        n_moe = (
+            self.num_layers // self.moe_layer_period if self.is_moe else 0
+        )
+        n_dense_mlp = self.num_layers - n_moe
+        n_attn = self.num_layers
+        ssm = 0
+        if self.ssm_state > 0:
+            di, ns, nh = self.d_inner, self.ssm_state, self.ssm_heads
+            per_ssm = (
+                d * (2 * di + 2 * ns + nh)  # in_proj (x, z, B, C, dt)
+                + di * d  # out_proj
+                + self.ssm_conv * (di + 2 * ns)
+                + 3 * nh
+            )
+            if self.is_ssm_only:
+                n_ssm = self.num_layers
+                n_attn = 0
+                n_dense_mlp = 0 if not self.is_moe else n_dense_mlp
+                if self.d_ff == 0:
+                    n_dense_mlp = 0
+            else:
+                n_attn = self.num_layers // self.attn_layer_period
+                n_ssm = self.num_layers - n_attn
+            ssm = n_ssm * per_ssm
+        total = (
+            n_attn * attn
+            + n_dense_mlp * mlp_dense
+            + n_moe * (self.num_experts * per_expert + d * self.num_experts)
+            + (per_expert if (self.is_moe and self.moe_shared_expert) else 0)
+            * (self.num_layers // self.moe_layer_period if self.is_moe else 0)
+            + ssm
+            + self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        )
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn + mlp_dense)  # encoder stack
+            total += self.num_layers * attn  # decoder cross-attention
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed experts only) for 6·N_active·D."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        per_expert = (3 if self.mlp == "swiglu" else 2) * d * self.d_ff
+        n_moe = self.num_layers // self.moe_layer_period
+        inactive = n_moe * (
+            (self.num_experts - self.experts_per_token) * per_expert
+        )
+        return int(self.param_count() - inactive)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """An assigned input-shape cell: what gets lowered for the dry-run."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+_REDUCED: Dict[str, Callable[[], ModelConfig]] = {}
+
+_ARCH_MODULES = [
+    "llama4_maverick_400b_a17b",
+    "granite_moe_3b_a800m",
+    "qwen3_8b",
+    "qwen2_1_5b",
+    "smollm_360m",
+    "nemotron_4_15b",
+    "jamba_v0_1_52b",
+    "seamless_m4t_medium",
+    "qwen2_vl_7b",
+    "mamba2_370m",
+    "ample_gnn",
+]
+
+
+def register(name: str, full: Callable[[], ModelConfig], reduced: Callable[[], ModelConfig]):
+    _REGISTRY[name] = full
+    _REDUCED[name] = reduced
+
+
+def _ensure_loaded():
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+
+
+def get_config(name: str, *, reduced: bool = False) -> ModelConfig:
+    _ensure_loaded()
+    name = name.replace("_", "-")
+    table = _REDUCED if reduced else _REGISTRY
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]()
+
+
+def list_configs() -> Tuple[str, ...]:
+    _ensure_loaded()
+    return tuple(sorted(_REGISTRY))

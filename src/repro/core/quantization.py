@@ -1,0 +1,143 @@
+"""Affine int8 quantization utilities (Eq. 5 of the paper) + fake-quant STE.
+
+These are the numerical foundations for both halves of the framework:
+* the GNN engine quantizes unprotected node embeddings / weights to int8 and
+  runs them through the int8 FTE stream (kernels/quant_matmul);
+* the LM half reuses per-channel weight quantization for int8 serving.
+
+Quantization follows Eq. 5:  x_q = clip(round(x/s + z), q_min, q_max)
+De-quantization:             x̂  = (x_q - z) * s
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "QuantParams",
+    "compute_scale_zp",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "quantize_per_channel",
+    "INT8_MIN",
+    "INT8_MAX",
+]
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Scale/zero-point pair; arrays broadcast against the quantized tensor."""
+
+    scale: jnp.ndarray  # f32, scalar or per-channel
+    zero_point: jnp.ndarray  # f32 (kept float; rounding applied at quantize)
+
+    def tree_flatten(self):  # noqa: D401 - pytree protocol
+        return (self.scale, self.zero_point), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    QuantParams, QuantParams.tree_flatten, QuantParams.tree_unflatten
+)
+
+
+def compute_scale_zp(
+    x: jnp.ndarray,
+    *,
+    axis: Optional[int] = None,
+    symmetric: bool = True,
+    qmin: int = INT8_MIN,
+    qmax: int = INT8_MAX,
+    eps: float = 1e-8,
+) -> QuantParams:
+    """Min/max calibration. ``axis`` keeps that axis (per-channel); None is
+    per-tensor. Symmetric mode (z=0) matches MXU-friendly int8 matmuls."""
+    if axis is None:
+        lo = jnp.min(x)
+        hi = jnp.max(x)
+    else:
+        red = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+        lo = jnp.min(x, axis=red, keepdims=True)
+        hi = jnp.max(x, axis=red, keepdims=True)
+    if symmetric:
+        amax = jnp.maximum(jnp.abs(lo), jnp.abs(hi))
+        scale = jnp.maximum(amax / qmax, eps)
+        zp = jnp.zeros_like(scale)
+    else:
+        scale = jnp.maximum((hi - lo) / (qmax - qmin), eps)
+        zp = qmin - lo / scale
+    return QuantParams(scale=scale.astype(jnp.float32), zero_point=zp.astype(jnp.float32))
+
+
+def quantize(
+    x: jnp.ndarray,
+    qp: QuantParams,
+    *,
+    qmin: int = INT8_MIN,
+    qmax: int = INT8_MAX,
+    dtype=jnp.int8,
+) -> jnp.ndarray:
+    """Eq. 5: clip(round(x/s + z))."""
+    q = jnp.round(x / qp.scale + qp.zero_point)
+    return jnp.clip(q, qmin, qmax).astype(dtype)
+
+
+def dequantize(xq: jnp.ndarray, qp: QuantParams, dtype=jnp.float32) -> jnp.ndarray:
+    return ((xq.astype(jnp.float32) - qp.zero_point) * qp.scale).astype(dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def fake_quant(
+    x: jnp.ndarray,
+    qp: QuantParams,
+    axis: Optional[int] = None,
+    qmin: int = INT8_MIN,
+    qmax: int = INT8_MAX,
+) -> jnp.ndarray:
+    """Quantize-dequantize with a straight-through estimator (QAT forward).
+
+    Gradients pass through unchanged inside the representable range and are
+    zeroed outside it (the standard STE with range clipping used by
+    Degree-Quant)."""
+    return dequantize(quantize(x, qp, qmin=qmin, qmax=qmax, dtype=jnp.int32), qp)
+
+
+def _fq_fwd(x, qp, axis, qmin, qmax):
+    y = fake_quant(x, qp, axis, qmin, qmax)
+    inside = jnp.logical_and(
+        x / qp.scale + qp.zero_point >= qmin, x / qp.scale + qp.zero_point <= qmax
+    )
+    return y, (inside, qp)
+
+
+def _fq_bwd(axis, qmin, qmax, res, g):
+    inside, qp = res
+    gx = jnp.where(inside, g, 0.0)
+    zero_qp = QuantParams(
+        scale=jnp.zeros_like(qp.scale), zero_point=jnp.zeros_like(qp.zero_point)
+    )
+    return gx, zero_qp
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def quantize_per_channel(
+    w: np.ndarray | jnp.ndarray, *, axis: int = -1
+) -> Tuple[jnp.ndarray, QuantParams]:
+    """Symmetric per-channel weight quantization; returns (int8 weights, qp)."""
+    w = jnp.asarray(w)
+    qp = compute_scale_zp(w, axis=axis, symmetric=True)
+    return quantize(w, qp), qp

@@ -1,0 +1,404 @@
+"""Event-driven execution planning — the TPU analogue of AMPLE's NID/nodeslots.
+
+AMPLE's Node Instruction Decoder lets the host program each node independently
+into a nodeslot; slots are freed the moment a node finishes, so low-degree
+nodes never wait behind high-degree stragglers (the double-buffering problem of
+HyGCN). On an SPMD machine the equivalent is built *ahead of time*: this module
+compiles a graph (or any skewed bag of variable-length segments — MoE token
+routing reuses it) into dense, fixed-shape **edge tiles** whose total compute
+is proportional to Σ degree(v), not n_batches × max_degree.
+
+Three schedules are produced, mirroring the paper's comparison axis:
+
+* ``EdgeTilePlan``   — the event-driven schedule (AMPLE). Edges are packed
+  back-to-back into tiles of ``edges_per_tile`` lanes; a node whose degree
+  exceeds the remaining lane budget of the current tile is *split across
+  tiles* and its aggregate assembled by scatter-add — this is exactly the
+  Feature Bank's partial-response mechanism (§3.3 of the paper).
+* ``BucketPlan``     — degree-bucketed padding (power-of-two capacities);
+  bounded ≤2× lane waste. Used for max-aggregation and as a mid point.
+* ``PaddedPlan``     — the HyGCN-style double-buffer baseline: fixed batches
+  padded to the per-batch max degree. Its ``pipeline_gap_ratio`` is the
+  quantity AMPLE eliminates.
+
+Mixed precision (§3.2): ``build_mixed_precision_plans`` partitions nodes by
+their Degree-Quant tag and emits one plan per precision group — the analogue
+of the isolated per-precision NoC sub-networks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.graphs.csr import Graph
+
+__all__ = [
+    "EdgeTilePlan",
+    "Bucket",
+    "BucketPlan",
+    "PaddedPlan",
+    "build_edge_tile_plan",
+    "build_bucket_plan",
+    "build_padded_plan",
+    "build_mixed_precision_plans",
+    "pack_segments",
+]
+
+
+# ---------------------------------------------------------------------------
+# Event-driven schedule: edge tiles (compute ∝ number of edges)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeTilePlan:
+    """Dense tile arrays consumed by the aggregation engine / Pallas kernel.
+
+    Shapes: T = num_tiles, E = edges_per_tile, S = segments_per_tile.
+
+      gather_idx: int32[T, E]  source node id per lane (0 where invalid).
+      coeff:      f32[T, E]    per-edge weight; 0 on invalid lanes, so it acts
+                               as both the aggregation coefficient (GCN norm,
+                               1/deg for mean, 1 for sum) and the lane mask.
+      seg_ids:    int32[T, E]  local segment (nodeslot) within the tile.
+      out_node:   int32[T, S]  global node each local segment accumulates into;
+                               sentinel ``num_nodes`` for unused segments.
+      node_ids:   int32[M]     nodes covered by this plan (plan may cover a
+                               precision subset of the graph).
+    """
+
+    gather_idx: np.ndarray
+    coeff: np.ndarray
+    seg_ids: np.ndarray
+    out_node: np.ndarray
+    node_ids: np.ndarray
+    num_nodes: int  # of the full graph (scatter target row count)
+    edges_per_tile: int
+    segments_per_tile: int
+    total_edges: int  # real (unpadded) edges covered
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.gather_idx.shape[0])
+
+    @property
+    def lane_occupancy(self) -> float:
+        """Fraction of gather lanes carrying a real edge (1.0 = no gaps)."""
+        lanes = self.gather_idx.size
+        return float(self.total_edges) / float(lanes) if lanes else 1.0
+
+
+def build_edge_tile_plan(
+    g: Graph,
+    *,
+    edges_per_tile: int = 256,
+    segments_per_tile: Optional[int] = None,
+    coeff: Optional[np.ndarray] = None,
+    node_ids: Optional[np.ndarray] = None,
+    sort_by_degree: bool = True,
+) -> EdgeTilePlan:
+    """Pack (a subset of) a graph's edges into dense tiles.
+
+    Nodes are visited longest-first by default (LPT list scheduling — the same
+    greedy order the event-driven NID induces, since long nodes start early and
+    short nodes backfill slots). Packing is first-fit into the current tile;
+    a node overflowing the tile is split (partial response). Segment budget per
+    tile bounds the scatter fan-out.
+    """
+    if node_ids is None:
+        node_ids = np.arange(g.num_nodes, dtype=np.int64)
+    else:
+        node_ids = np.asarray(node_ids, np.int64)
+    deg = g.degrees
+    if coeff is None:
+        coeff = np.ones(g.num_edges, np.float32)
+    if segments_per_tile is None:
+        # A tile can hold up to one segment per lane (all degree-1 nodes), so a
+        # full segment budget keeps lane occupancy ~1 regardless of degree mix;
+        # callers with scatter-bandwidth concerns can lower it.
+        segments_per_tile = edges_per_tile
+
+    order = node_ids
+    if sort_by_degree:
+        order = node_ids[np.argsort(-deg[node_ids], kind="stable")]
+
+    E, S = edges_per_tile, segments_per_tile
+    tiles_g: List[np.ndarray] = []  # per-tile gather idx
+    tiles_c: List[np.ndarray] = []
+    tiles_s: List[np.ndarray] = []
+    tiles_o: List[np.ndarray] = []
+
+    cur_g = np.zeros(E, np.int32)
+    cur_c = np.zeros(E, np.float32)
+    cur_s = np.full(E, S - 1, np.int32)
+    cur_o = np.full(S, g.num_nodes, np.int32)
+    lane = 0
+    seg = 0
+    total_edges = 0
+
+    def flush():
+        nonlocal cur_g, cur_c, cur_s, cur_o, lane, seg
+        tiles_g.append(cur_g)
+        tiles_c.append(cur_c)
+        tiles_s.append(cur_s)
+        tiles_o.append(cur_o)
+        cur_g = np.zeros(E, np.int32)
+        cur_c = np.zeros(E, np.float32)
+        cur_s = np.full(E, S - 1, np.int32)
+        cur_o = np.full(S, g.num_nodes, np.int32)
+        lane = 0
+        seg = 0
+
+    for v in order:
+        lo, hi = int(g.indptr[v]), int(g.indptr[v + 1])
+        nbrs = g.indices[lo:hi]
+        cfs = coeff[lo:hi]
+        pos = 0
+        d = hi - lo
+        if d == 0:
+            continue  # zero-degree nodes contribute nothing; output row stays 0
+        total_edges += d
+        while pos < d:
+            if lane >= E or seg >= S:
+                flush()
+            take = min(d - pos, E - lane)
+            cur_g[lane : lane + take] = nbrs[pos : pos + take]
+            cur_c[lane : lane + take] = cfs[pos : pos + take]
+            cur_s[lane : lane + take] = seg
+            cur_o[seg] = v
+            lane += take
+            pos += take
+            seg += 1  # a split node re-opens a fresh segment in the next tile
+    if lane > 0 or seg > 0:
+        flush()
+    if not tiles_g:  # empty graph: one all-padding tile keeps shapes static
+        flush()
+
+    return EdgeTilePlan(
+        gather_idx=np.stack(tiles_g),
+        coeff=np.stack(tiles_c),
+        seg_ids=np.stack(tiles_s),
+        out_node=np.stack(tiles_o),
+        node_ids=node_ids.astype(np.int32),
+        num_nodes=g.num_nodes,
+        edges_per_tile=E,
+        segments_per_tile=S,
+        total_edges=total_edges,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Degree buckets (power-of-two capacities)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    capacity: int
+    node_ids: np.ndarray  # int32[M]
+    gather_idx: np.ndarray  # int32[M, capacity]
+    coeff: np.ndarray  # f32[M, capacity] (0 on padding lanes)
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.node_ids.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    buckets: Tuple[Bucket, ...]
+    num_nodes: int
+
+    @property
+    def lane_occupancy(self) -> float:
+        lanes = sum(b.gather_idx.size for b in self.buckets)
+        edges = sum(int((b.coeff != 0).sum()) for b in self.buckets)
+        return edges / lanes if lanes else 1.0
+
+
+def build_bucket_plan(
+    g: Graph,
+    *,
+    max_capacity: int = 1 << 14,
+    coeff: Optional[np.ndarray] = None,
+    node_ids: Optional[np.ndarray] = None,
+) -> BucketPlan:
+    """Group nodes into power-of-two-capacity degree buckets.
+
+    A node of degree d lands in the bucket of capacity 2^⌈log2 d⌉ (≥ that
+    degree); nodes above ``max_capacity`` are clamped into the top bucket and
+    split across rows (rare hubs). Lane waste is < 2× by construction.
+    """
+    if node_ids is None:
+        node_ids = np.arange(g.num_nodes, dtype=np.int64)
+    else:
+        node_ids = np.asarray(node_ids, np.int64)
+    if coeff is None:
+        coeff = np.ones(g.num_edges, np.float32)
+    deg = g.degrees[node_ids]
+    buckets: List[Bucket] = []
+    active = node_ids[deg > 0]
+    if active.size:
+        adeg = g.degrees[active]
+        caps = 1 << np.ceil(np.log2(adeg.clip(min=1))).astype(np.int64)
+        caps = caps.clip(min=1, max=max_capacity)
+        for cap in np.unique(caps):
+            sel = active[caps == cap]
+            rows: List[np.ndarray] = []
+            cfr: List[np.ndarray] = []
+            ids: List[int] = []
+            for v in sel:
+                lo, hi = int(g.indptr[v]), int(g.indptr[v + 1])
+                nbrs, cfs = g.indices[lo:hi], coeff[lo:hi]
+                for pos in range(0, hi - lo, int(cap)):
+                    chunk = nbrs[pos : pos + int(cap)]
+                    cchunk = cfs[pos : pos + int(cap)]
+                    row = np.zeros(int(cap), np.int32)
+                    crow = np.zeros(int(cap), np.float32)
+                    row[: chunk.size] = chunk
+                    crow[: cchunk.size] = cchunk
+                    rows.append(row)
+                    cfr.append(crow)
+                    ids.append(int(v))
+            buckets.append(
+                Bucket(
+                    capacity=int(cap),
+                    node_ids=np.asarray(ids, np.int32),
+                    gather_idx=np.stack(rows),
+                    coeff=np.stack(cfr),
+                )
+            )
+    return BucketPlan(buckets=tuple(buckets), num_nodes=g.num_nodes)
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered baseline (HyGCN-style): fixed batches, max-degree padding
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PaddedPlan:
+    """Batches of ``batch_size`` nodeslots padded to the batch max degree."""
+
+    batches: Tuple[Bucket, ...]  # reuse Bucket container (capacity = batch max)
+    num_nodes: int
+    batch_size: int
+
+    @property
+    def pipeline_gap_ratio(self) -> float:
+        """Fraction of lane-cycles wasted waiting on the batch straggler."""
+        lanes = sum(b.gather_idx.size for b in self.batches)
+        edges = sum(int((b.coeff != 0).sum()) for b in self.batches)
+        return 1.0 - (edges / lanes) if lanes else 0.0
+
+
+def build_padded_plan(
+    g: Graph,
+    *,
+    batch_size: int = 64,
+    coeff: Optional[np.ndarray] = None,
+    node_ids: Optional[np.ndarray] = None,
+) -> PaddedPlan:
+    """The double-buffering baseline: node order as given (no degree sort —
+    HyGCN streams nodes in id order), each batch padded to its max degree."""
+    if node_ids is None:
+        node_ids = np.arange(g.num_nodes, dtype=np.int64)
+    else:
+        node_ids = np.asarray(node_ids, np.int64)
+    if coeff is None:
+        coeff = np.ones(g.num_edges, np.float32)
+    batches: List[Bucket] = []
+    for start in range(0, node_ids.size, batch_size):
+        sel = node_ids[start : start + batch_size]
+        cap = int(g.degrees[sel].max()) if sel.size else 1
+        cap = max(cap, 1)
+        gi = np.zeros((sel.size, cap), np.int32)
+        cf = np.zeros((sel.size, cap), np.float32)
+        for r, v in enumerate(sel):
+            lo, hi = int(g.indptr[v]), int(g.indptr[v + 1])
+            gi[r, : hi - lo] = g.indices[lo:hi]
+            cf[r, : hi - lo] = coeff[lo:hi]
+        batches.append(
+            Bucket(
+                capacity=cap,
+                node_ids=sel.astype(np.int32),
+                gather_idx=gi,
+                coeff=cf,
+            )
+        )
+    return PaddedPlan(
+        batches=tuple(batches), num_nodes=g.num_nodes, batch_size=batch_size
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mixed precision: one plan per Degree-Quant precision group
+# ---------------------------------------------------------------------------
+
+
+def build_mixed_precision_plans(
+    g: Graph,
+    precision_tags: np.ndarray,
+    *,
+    edges_per_tile: int = 256,
+    segments_per_tile: Optional[int] = None,
+    coeff: Optional[np.ndarray] = None,
+) -> Dict[str, EdgeTilePlan]:
+    """Split nodes by precision tag and build an EdgeTilePlan per group.
+
+    ``precision_tags``: array[N] of strings or small ints; conventionally
+    ``"float"`` for Degree-Quant-protected nodes and ``"int8"`` for the rest
+    (Table 2's Precision column). Empty groups are omitted.
+    """
+    precision_tags = np.asarray(precision_tags)
+    plans: Dict[str, EdgeTilePlan] = {}
+    for tag in np.unique(precision_tags):
+        ids = np.nonzero(precision_tags == tag)[0]
+        if ids.size == 0:
+            continue
+        plans[str(tag)] = build_edge_tile_plan(
+            g,
+            edges_per_tile=edges_per_tile,
+            segments_per_tile=segments_per_tile,
+            coeff=coeff,
+            node_ids=ids,
+        )
+    return plans
+
+
+# ---------------------------------------------------------------------------
+# Generic segment packing — reused by MoE token->expert dispatch
+# ---------------------------------------------------------------------------
+
+
+def pack_segments(
+    lengths: Sequence[int], capacity: int
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """First-fit-decreasing packing of variable-length segments into tiles.
+
+    Returns ``(tile_of_segment, offset_of_segment, num_tiles)`` where segment i
+    occupies lanes ``[offset, offset+len)`` of its tile, possibly spanning
+    multiple tiles when len > remaining capacity (partial response). Used by
+    the MoE dispatcher to bound expert-capacity padding the same way the
+    nodeslot scheduler bounds degree padding.
+    """
+    lengths = np.asarray(lengths, np.int64)
+    order = np.argsort(-lengths, kind="stable")
+    tile_of = np.zeros(lengths.size, np.int64)
+    offset_of = np.zeros(lengths.size, np.int64)
+    tile, lane = 0, 0
+    for i in order:
+        ln = int(lengths[i])
+        if ln > capacity - lane:
+            tile += 1
+            lane = 0
+        tile_of[i], offset_of[i] = tile, lane
+        lane += ln
+        while lane > capacity:  # segment longer than a whole tile: spill
+            tile += 1
+            lane -= capacity
+    num_tiles = tile + (1 if lane > 0 else 0)
+    return tile_of, offset_of, max(num_tiles, 1)

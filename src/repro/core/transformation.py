@@ -1,0 +1,122 @@
+"""Feature Transformation Engine (FTE) — the regular-compute phase.
+
+The paper's FTE is a systolic array fed diagonally from the Aggregation
+Buffer; on TPU this is simply the MXU, so the FTE is a (mixed-precision)
+matmul stream:
+
+* float stream  — fp32/bf16 ``h @ W`` for Degree-Quant-protected nodes;
+* int8 stream   — int8×int8→int32 with per-channel dequant for the rest
+  (kernels/quant_matmul is the Pallas version; the jnp path here is its
+  oracle and the CPU fallback).
+
+``transform_mixed_precision`` routes disjoint node sets through the two
+streams — the isolated per-precision NoC sub-networks of §3.2.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import (
+    QuantParams,
+    compute_scale_zp,
+    dequantize,
+    quantize,
+    quantize_per_channel,
+)
+
+__all__ = [
+    "transform_dense",
+    "transform_int8",
+    "transform_mixed_precision",
+]
+
+
+def transform_dense(
+    h: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    activation: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+) -> jnp.ndarray:
+    """Float FTE stream: y = act(h @ W + b)."""
+    y = h @ w
+    if b is not None:
+        y = y + b
+    if activation is not None:
+        y = activation(y)
+    return y
+
+
+def transform_int8(
+    h: jnp.ndarray,
+    w_q: jnp.ndarray,
+    w_qp: QuantParams,
+    b: Optional[jnp.ndarray] = None,
+    activation: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+    a_qp: Optional[QuantParams] = None,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """int8 FTE stream: symmetric-quantized activations × per-channel int8
+    weights, int32 accumulate, float de-quant — the MXU int8 path.
+
+    y ≈ (s_a s_w) · (h_q @ W_q), since both quantizations are symmetric (z=0).
+    """
+    if a_qp is None:
+        a_qp = compute_scale_zp(h, symmetric=True)
+    h_q = quantize(h, a_qp)
+    if use_kernel:
+        from repro.kernels.quant_matmul import ops as qm_ops
+
+        acc = qm_ops.quant_matmul(h_q, w_q)
+    else:
+        acc = jnp.dot(
+            h_q.astype(jnp.int32),
+            w_q.astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        )
+    y = acc.astype(jnp.float32) * (a_qp.scale * w_qp.scale.reshape(1, -1))
+    if b is not None:
+        y = y + b
+    if activation is not None:
+        y = activation(y)
+    return y
+
+
+def transform_mixed_precision(
+    h: jnp.ndarray,
+    node_group_ids: Dict[str, np.ndarray],
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    activation: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+    *,
+    w_q: Optional[jnp.ndarray] = None,
+    w_qp: Optional[QuantParams] = None,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Route each precision group's rows through its FTE stream.
+
+    ``node_group_ids`` maps precision tag → node indices (disjoint cover of
+    rows of ``h``). Weight int8 copies are derived once if not provided.
+    """
+    out = jnp.zeros((h.shape[0], w.shape[1]), jnp.float32)
+    for tag, ids in node_group_ids.items():
+        if ids.size == 0:
+            continue
+        ids_j = jnp.asarray(ids, jnp.int32)
+        rows = h[ids_j]
+        if tag == "float":
+            y = transform_dense(rows, w, b, activation)
+        elif tag == "int8":
+            if w_q is None or w_qp is None:
+                w_q, w_qp = quantize_per_channel(w, axis=-1)
+            y = transform_int8(
+                rows, w_q, w_qp, b, activation, use_kernel=use_kernel
+            )
+        else:
+            raise ValueError(f"unknown precision tag {tag!r}")
+        out = out.at[ids_j].set(y)
+    return out

@@ -1,0 +1,102 @@
+"""Gradient compression for slow inter-pod links: top-k + EF, int8 + SR.
+
+Data parallelism spans pods over DCN-class links (launch/mesh.py), so the
+gradient all-reduce is the one collective that crosses the slow domain. Two
+standard compressors, both with **error feedback** (the residual of what
+compression dropped is added back next step — provably preserves SGD
+convergence):
+
+* ``TopKCompressor``  — keep the k largest-|g| entries per tensor. On the
+  wire this is (values, indices): 2·k·4 bytes vs n·4, a n/(2k) reduction.
+* ``Int8Compressor``  — per-tensor symmetric int8 with *stochastic rounding*
+  (unbiased: E[q] = g), 4× reduction with no index overhead.
+
+``compress_decompress`` returns the gradients as the receiving end would see
+them — in SPMD the all-reduce happens over the compressed representation; the
+roundtrip here is the numerics contract the tests verify (compression error
+is bounded and EF drives the accumulated bias to zero).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TopKCompressor", "Int8Compressor", "wire_bytes_ratio"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor:
+    """Keep top ``ratio`` fraction of entries per leaf (by magnitude)."""
+
+    ratio: float = 0.01
+
+    def init_state(self, grads) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def compress_decompress(self, grads, state: Optional[Any]) -> Tuple[Any, Any]:
+        if state is None:
+            state = self.init_state(grads)
+
+        def one(g, err):
+            g32 = g.astype(jnp.float32) + err  # error feedback
+            flat = g32.reshape(-1)
+            k = max(1, int(flat.shape[0] * self.ratio))
+            thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+            mask = jnp.abs(flat) >= thresh
+            sent = jnp.where(mask, flat, 0.0)
+            new_err = (flat - sent).reshape(g.shape)
+            return sent.reshape(g.shape).astype(g.dtype), new_err
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = treedef.flatten_up_to(state)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (
+            treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Compressor:
+    """Per-tensor symmetric int8 with stochastic rounding + error feedback."""
+
+    seed: int = 0
+
+    def init_state(self, grads) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def compress_decompress(self, grads, state: Optional[Any]) -> Tuple[Any, Any]:
+        if state is None:
+            state = self.init_state(grads)
+        key = jax.random.PRNGKey(self.seed)
+
+        def one(i, g, err):
+            g32 = g.astype(jnp.float32) + err
+            scale = jnp.maximum(jnp.max(jnp.abs(g32)) / 127.0, 1e-12)
+            x = g32 / scale
+            lo = jnp.floor(x)
+            p = x - lo  # stochastic rounding: E[q] = x
+            u = jax.random.uniform(jax.random.fold_in(key, i), x.shape)
+            q = jnp.clip(lo + (u < p), -127, 127).astype(jnp.int8)
+            deq = q.astype(jnp.float32) * scale
+            return deq.astype(g.dtype), g32 - deq
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = treedef.flatten_up_to(state)
+        outs = [one(i, g, e) for i, (g, e) in enumerate(zip(flat_g, flat_e))]
+        return (
+            treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]),
+        )
+
+
+def wire_bytes_ratio(compressor) -> float:
+    """Bytes-on-wire ratio vs raw f32 all-reduce (for the roofline DP term)."""
+    if isinstance(compressor, TopKCompressor):
+        return 2.0 * compressor.ratio  # values + indices
+    if isinstance(compressor, Int8Compressor):
+        return 0.25
+    return 1.0

@@ -1,0 +1,415 @@
+"""GSPMD sharding rules: params, optimizer state, activations, caches.
+
+The layout follows the standard large-model hierarchy on a
+(pod, data, model) mesh:
+
+* batch over ("pod","data") — DP spans the slow inter-pod links (gradient
+  all-reduce is latency-tolerant and compressible);
+* attention heads / FFN hidden / vocab / experts over "model" (TP/EP inside
+  the fast ICI domain);
+* residual-stream activations sequence-sharded over "model" between blocks
+  (Megatron-SP): the per-block all-gather/reduce-scatter pair XLA inserts is
+  cheaper than holding replicated [B,S,D] residuals at 32k sequence length;
+* decode KV caches sequence-sharded over "model" (long-context serving).
+
+Rules are *name-based* over the parameter tree (leaf path suffix), with
+automatic left-padding of specs for stacked-unit leading axes, so the same
+table covers every architecture family. Non-divisible cases fall back
+explicitly: projections shard on flat (H*hd) axes when head counts don't
+divide, non-EP experts replicate over "model" with FSDP over "data"
+(granite), and vocab is padded at init. A divisibility guard drops any axis
+that doesn't divide its dim, so every arch lowers on every mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import data_axes, mesh_tp
+
+__all__ = [
+    "ShardingPolicy",
+    "make_policy",
+    "param_shardings",
+    "state_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "replicated",
+]
+
+
+# --------------------------------------------------------------- activations
+@dataclasses.dataclass
+class ShardingPolicy:
+    """Activation constraints threaded through model forward functions.
+
+    mode="tp"   — Megatron-style tensor parallel over "model" + FSDP+DP over
+                  "data" (the ≥20B-parameter regime).
+    mode="fsdp" — NO tensor parallelism: both mesh axes act as data/ZeRO-3
+                  axes; activations shard batch over "data"/"pod" and sequence
+                  over "model"; weights gather per layer. Measured to flip
+                  small/mid models from collective-bound to compute-bound
+                  (§Perf cells B/C) — TP all-reduces of activations are
+                  replaced by weight all-gathers, which are tiny for ≤20B.
+    """
+
+    mesh: Any
+    seq_shard: bool = False  # sequence-shard residuals over "model" (SP; §Perf lever)
+    mode: str = "tp"
+
+    def _c(self, x, spec):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def _batch_axes(self, b: int):
+        """Largest axis combo that divides the batch dim evenly."""
+        dp = data_axes(self.mesh)
+        if self.mode == "fsdp":
+            for axes in (dp + ("model",), dp, dp[-1:]):
+                n = 1
+                for a in axes:
+                    n *= self.mesh.shape[a]
+                if b % n == 0:
+                    return axes
+            return None
+        n = 1
+        for a in dp:
+            n *= self.mesh.shape[a]
+        return dp if b % n == 0 else None
+
+    def res(self, x):
+        dp = data_axes(self.mesh)
+        if x.ndim != 3:
+            return x
+        b, sq = x.shape[0], x.shape[1]
+        if self.mode == "fsdp":
+            ba = self._batch_axes(b)
+            seq_ax = None
+            if (ba is None or "model" not in (ba if ba else ())) and                sq % mesh_tp(self.mesh) == 0 and sq > 1:
+                seq_ax = "model"
+            return self._c(x, P(ba, seq_ax, None))
+        if self.seq_shard and sq % mesh_tp(self.mesh) == 0 and sq > 1:
+            return self._c(x, P(dp, "model", None))
+        return self._c(x, P(dp, None, None))
+
+    def logits(self, x):
+        dp = data_axes(self.mesh)
+        if self.mode == "fsdp":
+            if x.ndim == 3:
+                ba = self._batch_axes(x.shape[0])
+                seq_ax = "model" if (ba is None or "model" not in ba) and                     x.shape[1] % mesh_tp(self.mesh) == 0 and x.shape[1] > 1 else None
+                return self._c(x, P(ba, seq_ax, None))
+            return self._c(x, P(self._batch_axes(x.shape[0]), None))
+        if x.ndim == 3:
+            return self._c(x, P(dp, None, "model"))
+        return self._c(x, P(dp, "model"))
+
+    def qkv(self, q, k, v):
+        """Attention-internal layout (§Perf iteration 2): queries shard their
+        SEQUENCE dim over "model" (context parallelism) — every shard computes
+        attention for S/tp query rows against replicated K/V. No redundant
+        compute, no per-block all-reduces; the residual constraint re-gathers
+        afterwards. Decode (S=1) keeps batch-only sharding."""
+        tp = mesh_tp(self.mesh)
+        dp = data_axes(self.mesh)
+        if self.mode == "fsdp":
+            ba = self._batch_axes(q.shape[0]) or dp
+            ba = tuple(a for a in ba if a != "model")
+        else:
+            ba = dp
+        if q.ndim == 4 and q.shape[1] % tp == 0 and q.shape[1] > 1:
+            q = self._c(q, P(ba, "model", None, None))
+        elif q.ndim == 4:
+            q = self._c(q, P(ba, None, None, None))
+        if k.ndim == 4:
+            k = self._c(k, P(ba, None, None, None))
+            v = self._c(v, P(ba, None, None, None))
+        return q, k, v
+
+    def moe_groups(self, t: int) -> int:
+        """Dispatch groups = one local nodeslot pool per token shard."""
+        dp = 1
+        for a in data_axes(self.mesh):
+            dp *= self.mesh.shape[a]
+        if self.mode == "fsdp":
+            full = dp * mesh_tp(self.mesh)
+            if t % full == 0:
+                return full
+        return dp if t % dp == 0 else 1
+
+    def ebuf(self, xin):
+        """MoE dispatch buffer [G, E, C, D] entering the experts: groups stay
+        on their data shards, experts shard over "model" (EP) — the reshard
+        from the group-local scatter layout is a [G, E] block all-to-all."""
+        if xin.ndim != 4:
+            return xin
+        g, e, c, _ = xin.shape
+        dp = data_axes(self.mesh)
+        full = self._dp_size() * mesh_tp(self.mesh)
+        if self.mode == "fsdp" and g % full == 0 and g > 1:
+            return self._c(xin, P(dp + ("model",), None, None, None))
+        g_ax = dp if g % self._dp_size() == 0 and g > 1 else None
+        e_ax = "model" if e % mesh_tp(self.mesh) == 0 else None
+        if g_ax is None and e_ax is None:
+            return xin
+        return self._c(xin, P(g_ax, e_ax, None, None))
+
+    def ebuf_out(self, y):
+        """Expert outputs: same layout as ebuf (combine happens group-local)."""
+        return self.ebuf(y)
+
+    def _dp_size(self) -> int:
+        n = 1
+        for a in data_axes(self.mesh):
+            n *= self.mesh.shape[a]
+        return n
+
+
+class _NoPolicy:
+    def res(self, x):
+        return x
+
+    def logits(self, x):
+        return x
+
+    def qkv(self, q, k, v):
+        return q, k, v
+
+    def ebuf(self, xin):
+        return xin
+
+    def ebuf_out(self, y):
+        return y
+
+    def moe_groups(self, t):
+        return 1
+
+
+def make_policy(mesh, *, seq_shard: bool = False, mode: str = "tp") -> ShardingPolicy:
+    return ShardingPolicy(mesh=mesh, seq_shard=seq_shard, mode=mode)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# -------------------------------------------------------------------- params
+def _rule_for(path: str, cfg: ModelConfig, tp: int) -> Optional[Tuple]:
+    """Partition spec for a parameter leaf, by name (None = replicate).
+
+    Specs are written for the *unstacked* shape; leading unit axes are padded
+    by the caller. "model" is the TP/EP axis; "data" entries are the FSDP
+    (ZeRO-3) placement — ALWAYS on a dimension such that XLA resolves the use
+    as a weight all-gather over "data", never as an all-reduce of
+    activation-sized partial products: i.e. on the weight's input/contraction
+    dim for column-parallel matrices and on the output dim for row-parallel
+    ones. (The weight AG is O(weight); the wrong choice costs O(activation)
+    per use — measured 20 GB all-reduces per MoE unit before this rule.)
+    The caller strips "data" entries when fsdp is off or the leaf is small.
+    """
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+    ep = cfg.num_experts > 0 and cfg.num_experts % tp == 0
+    ff_div = cfg.d_ff % tp == 0
+
+    if parent == "experts" or "/experts/" in path:
+        # stacked expert FFN [E, D, F] / [E, F, D]; FSDP on the contraction dim.
+        # Non-EP fallback (E % tp != 0, e.g. granite's 40 experts): REPLICATE
+        # over "model" with FSDP over "data" — TP-on-FFN for 512-wide experts
+        # was measured to force an [E,C,D]-sized all-reduce per layer (44.6 s
+        # collective term on prefill_32k); replicated tiny experts cost only
+        # a per-unit weight all-gather. §Perf cell A iteration 1.
+        if name in ("w_gate", "w_up", "w_in"):
+            return ("model", "data", None) if ep else (None, "data", None)
+        if name in ("w_down", "w_out"):
+            return ("model", "data", None) if ep else (None, None, "data")
+        return None
+    if name == "router":
+        return None
+    if name == "embed":
+        return ("model", "data")
+    if name == "lm_head":
+        return ("data", "model")
+    if name in ("wq", "wk", "wv"):
+        return ("data", "model")
+    if name == "wo":
+        return ("model", "data")
+    if name == "bq":
+        return ("model",)
+    if name in ("bk", "bv"):
+        return ("model",)
+    # MLP
+    if name in ("w_gate", "w_up", "w_in"):
+        return ("data", "model") if ff_div else ("data", None)
+    if name in ("w_down", "w_out"):
+        return ("model", "data") if ff_div else (None, "data")
+    if name in ("b_gate", "b_up", "b_in"):
+        return ("model",) if ff_div else None
+    # Mamba
+    di_div = cfg.ssm_state > 0 and cfg.d_inner % tp == 0
+    h_div = cfg.ssm_state > 0 and cfg.ssm_heads % tp == 0
+    if name in ("wx", "wz"):
+        return ("data", "model") if di_div else ("data", None)
+    if name == "out_proj":
+        return ("model", "data") if di_div else (None, "data")
+    if name == "wdt":
+        return (None, "model") if h_div else None
+    if parent == "conv_x" and name == "w":
+        return (None, "model") if di_div else None
+    if parent == "conv_x" and name == "b":
+        return ("model",) if di_div else None
+    if name in ("A_log", "D", "dt_bias"):
+        return ("model",) if h_div else None
+    if parent == "norm_scale" and name == "scale":
+        return ("model",) if di_div else None
+    return None  # norms, small biases, B/C projections: replicate
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+FSDP_MIN_ELEMENTS = 1 << 20  # leaves below this stay replicated over "data"
+
+
+def param_shardings(cfg: ModelConfig, params_shape, mesh, *, fsdp: bool = True,
+                    mode: str = "tp") -> Any:
+    """NamedSharding pytree matching ``params_shape`` (shapes or arrays).
+
+    With ``fsdp=True`` (§Perf iteration 1 / ZeRO-3), every large leaf
+    additionally shards one spare dimension over "data": parameters and AdamW
+    moments then scale with the FULL chip count, not just the model axis —
+    the only way 400B-class models fit v5e HBM. XLA inserts the per-layer
+    weight all-gather (fwd) / gradient reduce-scatter (bwd) this implies.
+    """
+    tp = mesh_tp(mesh)
+
+    def assign(path, leaf):
+        spec = _rule_for(_path_str(path), cfg, tp)
+        nd = len(leaf.shape)
+        if spec is None:
+            spec = ()
+        spec = tuple(spec)
+        if mode == "fsdp":  # no TP: FSDP dim spans both axes, model dims free
+            spec = tuple(
+                ("data", "model") if ax == "data" else (None if ax == "model" else ax)
+                for ax in spec
+            )
+        if len(spec) < nd:  # stacked unit/layer leading axes -> replicate them
+            spec = (None,) * (nd - len(spec)) + spec
+        elif len(spec) > nd:
+            spec = (None,) * nd
+        size = 1
+        for d in leaf.shape:
+            size *= int(d)
+        if not fsdp or size < FSDP_MIN_ELEMENTS or "data" not in mesh.axis_names:
+            spec = tuple(None if ax == "data" else ax for ax in spec)
+        # divisibility guard: drop axes that do not divide evenly
+        def ok(dim, ax):
+            if ax is None:
+                return None
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if dim % n == 0:
+                return ax
+            # fsdp pair: fall back to the single "data" axis if that divides
+            if isinstance(ax, tuple) and dim % mesh.shape[ax[0]] == 0:
+                return ax[0]
+            return None
+
+        spec = tuple(ok(dim, ax) for dim, ax in zip(leaf.shape, spec))
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def state_shardings(cfg: ModelConfig, state_shape: Dict, mesh, *, mode: str = "tp") -> Dict:
+    """Train-state shardings: params rules for params and AdamW moments."""
+    ps = param_shardings(cfg, state_shape["params"], mesh, mode=mode)
+    out = {
+        "params": ps,
+        "opt": type(state_shape["opt"])(
+            step=replicated(mesh),
+            m=param_shardings(cfg, state_shape["opt"].m, mesh, mode=mode),
+            v=param_shardings(cfg, state_shape["opt"].v, mesh, mode=mode),
+        ),
+        "step": replicated(mesh),
+    }
+    if "compress" in state_shape:
+        out["compress"] = param_shardings(cfg, state_shape["compress"], mesh, mode=mode)
+    return out
+
+
+# --------------------------------------------------------------------- batch
+def batch_shardings(cfg: ModelConfig, batch_shape: Dict, mesh, *, mode: str = "tp") -> Dict:
+    dp = data_axes(mesh)
+    pol = ShardingPolicy(mesh=mesh, mode=mode)
+    out = {}
+    for k, v in batch_shape.items():
+        nd = len(v.shape)
+        lead = pol._batch_axes(v.shape[0])
+        if mode == "fsdp" and lead is not None and "model" in lead and nd >= 2:
+            pass  # batch fully covers the mesh; no seq sharding needed
+        if nd == 1:
+            out[k] = NamedSharding(mesh, P(lead))
+        elif nd == 2:
+            out[k] = NamedSharding(mesh, P(lead, None))
+        elif nd == 3:  # embeds
+            out[k] = NamedSharding(mesh, P(lead, None, None))
+        else:
+            out[k] = NamedSharding(mesh, P(lead, *([None] * (nd - 1))))
+    return out
+
+
+def _dp_size(mesh) -> int:
+    return int(jnp.prod(jnp.asarray([mesh.shape[a] for a in data_axes(mesh)])))
+
+
+# --------------------------------------------------------------------- cache
+def cache_shardings(cfg: ModelConfig, cache_shape, mesh, *, batch: int):
+    """Decode-cache shardings.
+
+    KV caches [U, B, L, KV, hd]: batch over DP when divisible; the sequence
+    axis L shards over "model" (sequence-parallel KV — the only way a 32k+
+    cache fits at high batch, and the long_500k requirement). Mamba states
+    shard d_inner/heads over "model".
+    """
+    dp = data_axes(mesh)
+    tp = mesh_tp(mesh)
+    bdiv = batch % _dp_size(mesh) == 0
+    b_ax = dp if bdiv else None
+
+    def assign(path, leaf):
+        p = _path_str(path)
+        name = p.split("/")[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v", "cross_k", "cross_v") and nd == 5:
+            u, b, l, kv, hd = leaf.shape
+            l_ax = "model" if l % tp == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, l_ax, None, None))
+        if name in ("k_scale", "v_scale") and nd == 4:  # int8 KV scales
+            l_ax = "model" if leaf.shape[2] % tp == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, l_ax, None))
+        if name == "ssm" and nd == 5:  # [U, B, H, P, N]
+            h_ax = "model" if leaf.shape[2] % tp == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, h_ax, None, None))
+        if name.startswith("conv_") and nd == 4:  # [U, B, K-1, C]
+            c_ax = "model" if leaf.shape[3] % tp == 0 else None
+            return NamedSharding(mesh, P(None, b_ax, None, c_ax))
+        return NamedSharding(mesh, P(*((None,) * nd)))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)

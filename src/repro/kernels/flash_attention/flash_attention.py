@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: block-tiled flash attention (GQA-aware, causal).
+
+Classic online-softmax tiling: grid (B, H, S/BQ, T/BK) with the KV block axis
+innermost as the reduction dimension. VMEM scratch carries the running max m,
+normalizer l, and output accumulator across KV steps; the output block is
+written once on the last KV step. GQA is folded into the BlockSpec index map —
+q-head h reads kv-head h // group, so KV is never materially repeated.
+
+This is the TPU deployment path for attention; the ``chunked`` XLA
+implementation in models/lm/attention.py computes the identical recurrence and
+serves as the oracle (plus the dry-run lowering path, since Pallas TPU kernels
+cannot lower on the CPU dry-run host).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_call"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal,
+            block_q, block_k, seq_q, seq_k):
+    i = pl.program_id(2)  # q block
+    kk = pl.program_id(3)  # kv block (reduction)
+    nk = pl.num_programs(3)
+
+    @pl.when(kk == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [BQ, hd]
+    k = k_ref[0, 0].astype(jnp.float32)  # [BK, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [BQ, BK]
+
+    qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = kk * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos >= seq_k  # KV padding
+    if causal:
+        # align causality to the *end* of both sequences (standard decode rule)
+        mask = mask | ((kpos - (seq_k - seq_q)) > qpos)
+    s = jnp.where(mask, NEG_INF, s)
+
+    m_prev = m_ref[...]  # [BQ, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kk == nk - 1)
+    def _():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention_call(
+    q: jnp.ndarray,  # [B, H, Sq, hd]
+    k: jnp.ndarray,  # [B, KV, Sk, hd]
+    v: jnp.ndarray,  # [B, KV, Sk, hd]
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, h, sq, hd = q.shape
+    _, kv, sk, _ = k.shape
+    group = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    bq, bk = min(block_q, _rup(sq)), min(block_k, _rup(sk))
+    sqp, skp = _ceil(sq, bq) * bq, _ceil(sk, bk) * bk
+    if sqp != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sqp - sq), (0, 0)))
+    if skp != sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skp - sk), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal,
+            block_q=bq, block_k=bk, seq_q=sq, seq_k=sk,
+        ),
+        grid=(b, h, sqp // bq, skp // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bb, hh, i, kk: (bb, hh, i, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, hd), lambda bb, hh, i, kk, g=group: (bb, hh // g, kk, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, hd), lambda bb, hh, i, kk, g=group: (bb, hh // g, kk, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda bb, hh, i, kk: (bb, hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)
+    return out[:, :, :sq]
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _rup(x: int, mult: int = 128) -> int:
+    return max(mult, _ceil(x, mult) * mult)

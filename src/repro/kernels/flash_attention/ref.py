@@ -1,0 +1,28 @@
+"""Pure-jnp GQA attention oracle for the flash kernel."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q [B,S,H,hd], k/v [B,T,KV,hd] -> [B,S,H,hd]; mask aligned to seq ends."""
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if causal:
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        scores = jnp.where((kpos - (t - s)) > qpos, -1e30, scores)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, s, h, hd)

@@ -1,0 +1,21 @@
+"""jit'd public wrapper for the int8 FTE kernel (auto interpret off-TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.quant_matmul import quant_matmul_kernel_call
+
+__all__ = ["quant_matmul"]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quant_matmul(
+    a_q: jnp.ndarray, b_q: jnp.ndarray, *, interpret: bool | None = None
+) -> jnp.ndarray:
+    """int32 = int8 @ int8; Pallas on TPU, interpret elsewhere."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return quant_matmul_kernel_call(a_q, b_q, interpret=interpret)

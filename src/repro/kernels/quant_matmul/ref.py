@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the int8 matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quant_matmul_ref"]
+
+
+@jax.jit
+def quant_matmul_ref(a_q: jnp.ndarray, b_q: jnp.ndarray) -> jnp.ndarray:
+    """int32[M, N] = a_q @ b_q, exact integer accumulation."""
+    return jnp.dot(
+        a_q.astype(jnp.int32), b_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )

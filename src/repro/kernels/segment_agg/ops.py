@@ -1,0 +1,58 @@
+"""jit'd public wrapper for the AGE kernel: tiles in, node aggregates out.
+
+The Pallas kernel produces per-tile partial sums; the partial-response combine
+(scatter-add of split-node partials) runs in XLA, which on TPU lowers to an
+efficient dynamic-update stream. Falls back to interpret mode automatically
+off-TPU so the same call site works everywhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_agg.segment_agg import (
+    DEFAULT_BLOCK_D,
+    gather_segment_tiles,
+)
+
+__all__ = ["aggregate_tiles"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_nodes", "segments_per_tile", "block_d", "interpret"),
+)
+def aggregate_tiles(
+    x: jnp.ndarray,
+    gather_idx: jnp.ndarray,
+    coeff: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    out_node: jnp.ndarray,
+    *,
+    num_nodes: int,
+    segments_per_tile: int,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Event-driven aggregation via the Pallas AGE kernel. f32[num_nodes, D]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    parts = gather_segment_tiles(
+        x,
+        gather_idx,
+        coeff,
+        seg_ids,
+        segments_per_tile=segments_per_tile,
+        block_d=block_d,
+        interpret=interpret,
+    )
+    t, s, d = parts.shape
+    out = jnp.zeros((num_nodes + 1, d), x.dtype)
+    out = out.at[out_node.reshape(t * s)].add(parts.reshape(t * s, d))
+    return out[:num_nodes]

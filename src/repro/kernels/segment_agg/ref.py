@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the segment-aggregation kernel (no Pallas)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gather_segment_tiles_ref", "aggregate_tiles_ref"]
+
+
+@functools.partial(jax.jit, static_argnames=("segments_per_tile",))
+def gather_segment_tiles_ref(
+    x: jnp.ndarray,
+    gather_idx: jnp.ndarray,
+    coeff: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    *,
+    segments_per_tile: int,
+) -> jnp.ndarray:
+    """f32[T, S, D] partial sums: for each tile, Σ_lanes coeff·x[idx] by seg."""
+
+    def per_tile(idx_t, coeff_t, seg_t):
+        gathered = x[idx_t] * coeff_t[:, None]  # [E, D]
+        return jax.ops.segment_sum(
+            gathered, seg_t, num_segments=segments_per_tile
+        )
+
+    return jax.vmap(per_tile)(gather_idx, coeff, seg_ids)
+
+
+@functools.partial(jax.jit, static_argnames=("segments_per_tile", "num_nodes"))
+def aggregate_tiles_ref(
+    x: jnp.ndarray,
+    gather_idx: jnp.ndarray,
+    coeff: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    out_node: jnp.ndarray,
+    *,
+    num_nodes: int,
+    segments_per_tile: int,
+) -> jnp.ndarray:
+    """Full oracle including the partial-response scatter-add combine."""
+    parts = gather_segment_tiles_ref(
+        x, gather_idx, coeff, seg_ids, segments_per_tile=segments_per_tile
+    )
+    t, s, d = parts.shape
+    out = jnp.zeros((num_nodes + 1, d), x.dtype)
+    out = out.at[out_node.reshape(t * s)].add(parts.reshape(t * s, d))
+    return out[:num_nodes]

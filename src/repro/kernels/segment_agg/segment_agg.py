@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: event-driven gather + segment-reduce (the AGE).
+
+This kernel is the hardware heart of the reproduction — it implements, in TPU
+terms, all three of AMPLE's circuit mechanisms at once:
+
+* **Address Queue → Message Queue** (Figure 3): the tile's neighbour indices
+  arrive via *scalar prefetch* (SMEM, available before the grid step runs) and
+  drive per-row async DMAs from HBM into a VMEM message buffer.
+* **Fetch-Tag prefetch / partial response** (§3.3): the gather for tile t+1 is
+  *started* before tile t is reduced, into the alternate half of a
+  double-buffered VMEM scratch — memory latency hides behind compute exactly
+  as the Feature Bank hides it behind aggregation.
+* **Aggregation NoC → MXU** (§3.2): the per-tile segment reduction is cast as
+  a one-hot × messages matmul, P[s,e] = coeff[e]·(seg[e]==s), so the MXU does
+  the permutation-invariant sum at full throughput instead of a lane-serial
+  scatter.
+
+Tile shapes are static (from the ExecutionPlan), so the kernel is a fixed
+pipeline; the irregularity lives entirely in the prefetched index stream.
+
+Layout:
+  grid = (D // BD, T)   — t varies fastest, so the double buffer alternates
+                          across consecutive tiles within one feature block.
+  x         : ANY (HBM) f32[N, D_pad]          (full array, DMA'd row-wise)
+  gather_idx: scalar-prefetch int32[T, E]
+  coeff     : VMEM f32[1, E] per step
+  seg_ids   : VMEM int32[1, E] per step
+  parts     : VMEM out f32[1, S, BD] per step
+  scratch   : xbuf f32[2, E, BD], sem DMA[2]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gather_segment_tiles", "DEFAULT_BLOCK_D"]
+
+DEFAULT_BLOCK_D = 512
+
+
+def _kernel(idx_ref, x_hbm, coeff_ref, segs_ref, parts_ref, xbuf, sems, *, bd: int):
+    j = pl.program_id(0)  # feature block
+    t = pl.program_id(1)  # tile (fastest)
+    num_tiles = pl.num_programs(1)
+    e = coeff_ref.shape[-1]
+    s = parts_ref.shape[1]
+    d0 = j * bd
+
+    def row_copy(tile, lane, slot):
+        row = idx_ref[tile, lane]
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(row, 1), pl.ds(d0, bd)],
+            xbuf.at[slot, pl.ds(lane, 1), :],
+            sems.at[slot],
+        )
+
+    def start_gather(tile, slot):
+        def body(i, _):
+            row_copy(tile, i, slot).start()
+            return 0
+
+        jax.lax.fori_loop(0, e, body, 0)
+
+    def wait_gather(tile, slot):
+        def body(i, _):
+            row_copy(tile, i, slot).wait()
+            return 0
+
+        jax.lax.fori_loop(0, e, body, 0)
+
+    slot = jax.lax.rem(t, 2)
+
+    # Warm-up: first tile of this feature block fetches synchronously.
+    @pl.when(t == 0)
+    def _():
+        start_gather(0, 0)
+
+    # Fetch-tag prefetch: next tile's messages start flowing now.
+    @pl.when(t + 1 < num_tiles)
+    def _():
+        start_gather(t + 1, 1 - slot)
+
+    wait_gather(t, slot)
+
+    # Segment reduce on the MXU: P[s, e] = coeff[e] * (seg_ids[e] == s).
+    seg = segs_ref[0, :]
+    s_iota = jax.lax.broadcasted_iota(jnp.int32, (s, e), 0)
+    p = jnp.where(s_iota == seg[None, :], coeff_ref[0, :][None, :], 0.0)
+    parts_ref[0] = jnp.dot(p, xbuf[slot], preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("segments_per_tile", "block_d", "interpret")
+)
+def gather_segment_tiles(
+    x: jnp.ndarray,  # f32[N, D]
+    gather_idx: jnp.ndarray,  # int32[T, E]
+    coeff: jnp.ndarray,  # f32[T, E]
+    seg_ids: jnp.ndarray,  # int32[T, E]
+    *,
+    segments_per_tile: int,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns per-tile partial sums f32[T, S, D]."""
+    n, d = x.shape
+    t, e = gather_idx.shape
+    s = segments_per_tile
+    d_pad = max(block_d, ((d + 127) // 128) * 128)
+    bd = min(block_d, d_pad)
+    d_pad = ((d_pad + bd - 1) // bd) * bd
+    if d_pad != d:
+        x = jnp.pad(x, ((0, 0), (0, d_pad - d)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(d_pad // bd, t),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # x stays in HBM
+            # index maps receive the scalar-prefetch ref as a trailing arg
+            pl.BlockSpec((1, e), lambda j, tt, idx: (tt, 0)),  # coeff
+            pl.BlockSpec((1, e), lambda j, tt, idx: (tt, 0)),  # seg_ids
+        ],
+        out_specs=pl.BlockSpec((1, s, bd), lambda j, tt, idx: (tt, 0, j)),
+        scratch_shapes=[
+            pltpu.VMEM((2, e, bd), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    parts = pl.pallas_call(
+        functools.partial(_kernel, bd=bd),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, s, d_pad), jnp.float32),
+        interpret=interpret,
+        name="ample_gather_segment_agg",
+    )(gather_idx, x, coeff, seg_ids)
+    return parts[:, :, :d]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel (mirrors mamba_apply)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_intra_chunk_ref"]
+
+
+@jax.jit
+def ssd_intra_chunk_ref(cc, bc, xdt, acum):
+    """cc/bc [B,NC,Q,N]; xdt [B,NC,H,Q,P]; acum [B,NC,H,Q] -> [B,NC,H,Q,P]."""
+    q = cc.shape[2]
+    li = acum[..., :, None] - acum[..., None, :]  # [B,NC,H,Q,Q]
+    iota = jnp.arange(q)
+    causal = iota[:, None] >= iota[None, :]
+    lmat = jnp.where(causal, jnp.exp(li), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # [B,NC,Q,Q]
+    return jnp.einsum("bcij,bchij,bchjp->bchip", cb, lmat, xdt)

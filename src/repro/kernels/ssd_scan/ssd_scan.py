@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: SSD intra-chunk block (Mamba2's compute hot-spot).
+
+The chunked SSD algorithm (models/lm/mamba.py) spends its FLOPs in the
+intra-chunk "attention-like" term
+
+    Y_diag[c] = ( (C_c B_cᵀ) ∘ L_c ) @ X_c·dt_c,   L_c[i,j] = e^{a_i - a_j}·1[i≥j]
+
+This kernel fuses the three steps — CBᵀ matmul, decay-mask multiply, and the
+value matmul — per (batch, chunk, head) grid cell, keeping the [Q, Q] score
+block in VMEM (never HBM). The inter-chunk recurrence stays in XLA (a scan
+with tiny state). Grid: (B, NC, H); blocks: C/B tiles [Q, N] shared across
+heads (G=1 as in the 370m config), X·dt and the log-decay vector per head.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_intra_chunk_call"]
+
+
+def _kernel(cc_ref, bc_ref, xdt_ref, acum_ref, out_ref):
+    q = cc_ref.shape[2]
+    cc = cc_ref[0, 0].astype(jnp.float32)        # [Q, N]
+    bc = bc_ref[0, 0].astype(jnp.float32)        # [Q, N]
+    xdt = xdt_ref[0, 0, 0].astype(jnp.float32)   # [Q, P]
+    a = acum_ref[0, 0, 0].astype(jnp.float32)    # [Q]
+    cb = jnp.dot(cc, bc.T, preferred_element_type=jnp.float32)  # [Q, Q]
+    li = a[:, None] - a[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmat = jnp.where(iota_i >= iota_j, jnp.exp(li), 0.0)
+    out_ref[0, 0, 0] = jnp.dot(cb * lmat, xdt, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk_call(
+    cc: jnp.ndarray,    # f32[B, NC, Q, N]
+    bc: jnp.ndarray,    # f32[B, NC, Q, N]
+    xdt: jnp.ndarray,   # f32[B, NC, H, Q, P]  (dt already folded in)
+    acum: jnp.ndarray,  # f32[B, NC, H, Q]     (cumulative log-decay)
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, nc, q, n = cc.shape
+    h, p = xdt.shape[2], xdt.shape[4]
+    grid = (b, nc, h)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, n), lambda bb, c, hh: (bb, c, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bb, c, hh: (bb, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, p), lambda bb, c, hh: (bb, c, hh, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda bb, c, hh: (bb, c, hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, q, p), lambda bb, c, hh: (bb, c, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nc, h, q, p), jnp.float32),
+        interpret=interpret,
+        name="ssd_intra_chunk",
+    )(cc, bc, xdt, acum)

@@ -1,0 +1,165 @@
+"""Post-SPMD HLO analysis: collective-byte accounting with loop multipliers.
+
+``compiled.as_text()`` is the per-device program after the SPMD partitioner —
+every cross-device transfer appears as an explicit collective op. Two
+subtleties make naive grepping wrong, both handled here:
+
+1. **Scan bodies**: layers are rolled into ``while`` loops, so a collective
+   inside the loop body executes ``trip_count`` times. We build the
+   computation call graph, extract trip counts from loop condition constants,
+   and multiply.
+2. **Byte semantics per collective**: for a ring implementation, per-device
+   bytes on the wire are approximately
+      all-gather      result_bytes · (n-1)/n
+      reduce-scatter  operand_bytes · (n-1)/n   (= result·(n-1))
+      all-reduce      2 · bytes · (n-1)/n       (RS + AG)
+      all-to-all      result_bytes · (n-1)/n
+      collective-permute  result_bytes
+   We report both raw op-byte sums per kind and the ring-adjusted wire total.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["CollectiveStats", "analyze_collectives", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)(?: \([^)]*\))? -> .* \{", re.M)
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)"
+)
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of the first shape (or tuple of shapes) in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+    wire_bytes: float  # ring-adjusted per-device bytes on the wire
+
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text (brace matching from each header)."""
+    comps: Dict[str, str] = {}
+    for m in re.finditer(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^\n]*\))?\s*->\s*[^\n{]*\{",
+                         hlo, re.M):
+        name = m.group(2)
+        start = m.end()
+        depth = 1
+        i = start
+        while i < len(hlo) and depth:
+            c = hlo[i]
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+            i += 1
+        comps[name] = hlo[start : i - 1]
+        if m.group(1):
+            comps["__entry__"] = name
+    return comps
+
+
+def _trip_count(cond_body: str) -> int:
+    """Largest integer constant in the loop condition ≈ trip count."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    consts = [c for c in consts if c > 0]
+    return max(consts) if consts else 1
+
+
+def analyze_collectives(hlo: str, *, ring_size: int) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:  # fall back: treat whole text as one computation
+        comps = {"main": hlo, "__entry__": "main"}
+        entry = "main"
+
+    # multipliers via DFS from entry through while bodies / calls
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        body = comps[name]
+        for line in body.splitlines():
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, wbody = wm.group(1), wm.group(2)
+                t = _trip_count(comps.get(cond, ""))
+                visit(wbody, m * t)
+                visit(cond, m * (t + 1))
+                continue
+            for cm in _CALL_RE.finditer(line):
+                callee = cm.group(1)
+                if callee != name:
+                    visit(callee, m)
+
+    visit(entry, 1.0)
+
+    n = max(ring_size, 2)
+    ring = (n - 1) / n
+    bytes_by: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    count_by: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    wire = 0.0
+    for name, body in comps.items():
+        if name == "__entry__" or name not in mult:
+            continue
+        m = mult[name]
+        for line in body.splitlines():
+            stripped = line.strip()
+            for kind in _COLLECTIVES:
+                # match the op kind right after '= shape kind(' to avoid
+                # matching fusions whose name merely contains it
+                if re.search(rf"=\s*[\w\[\],\s()]*\s{kind}(?:-start|-done)?\(", stripped) or \
+                   re.search(rf"=\s*\S+\s+{kind}\(", stripped):
+                    if f"{kind}-done" in stripped:
+                        continue  # counted at -start
+                    lhs = stripped.split("=", 1)[1] if "=" in stripped else stripped
+                    b = _shape_bytes(lhs.split(kind)[0]) * m
+                    bytes_by[kind] += b
+                    count_by[kind] += int(m)
+                    if kind == "all-reduce":
+                        wire += 2 * b * ring
+                    elif kind == "reduce-scatter":
+                        wire += b * (n - 1)  # result bytes × (n-1)
+                    elif kind == "collective-permute":
+                        wire += b
+                    else:
+                        wire += b * ring
+                    break
+    return CollectiveStats(bytes_by_kind=bytes_by, count_by_kind=count_by,
+                           wire_bytes=wire)

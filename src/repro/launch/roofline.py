@@ -1,0 +1,100 @@
+"""Roofline report: aggregate experiments/dryrun/*.json into §Roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh pod16x16] [--md]
+
+Per (arch × shape): the three terms (compute/memory/collective seconds), the
+dominant bottleneck, MODEL_FLOPS (6·N·D or 6·N_active·D), the useful-compute
+ratio, peak per-device memory, and a one-line "what would move the dominant
+term" note generated from the bottleneck structure.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+OUT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"
+)
+
+
+def load_records(dirname: str, mesh: str) -> List[Dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dirname, f"*__{mesh}.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def advice(rec: Dict) -> str:
+    dom = rec.get("dominant_term", "")
+    fam = rec.get("family", "")
+    shape = rec.get("shape", "")
+    if rec.get("skipped"):
+        return "skipped"
+    if dom == "collective_s":
+        if "train" in shape:
+            return (
+                "shrink TP for this size (map model axis to DP/FSDP) or "
+                "overlap AR with compute (collective matmul)"
+            )
+        if fam == "moe":
+            return "a2a-based EP dispatch instead of partitioner-chosen reshards"
+        return "reshard attention internals (context parallelism) / fewer TP hops"
+    if dom == "memory_s":
+        if "decode" in shape or "long" in shape:
+            return "int8 KV cache (halves cache stream) or larger decode batch"
+        return "bf16 logits + fused CE; remat less aggressively"
+    return "compute-bound: increase per-chip batch or reduce remat recompute"
+
+
+def fmt_row(rec: Dict) -> List[str]:
+    if rec.get("skipped"):
+        return [rec["arch"], rec["shape"], "—", "—", "—", "skip", "—", "—", "—",
+                "skipped: sub-quadratic attention required"]
+    t = rec["roofline_terms_s"]
+    mem = rec.get("memory", {}).get("peak_bytes_per_device", 0) / 2**30
+    mf = rec.get("model_flops_6nd", 0.0)
+    useful = rec.get("useful_ratio_model_over_step", 0.0)
+    return [
+        rec["arch"], rec["shape"],
+        f"{t['compute_s']:.3f}", f"{t['memory_s']:.3f}", f"{t['collective_s']:.3f}",
+        rec["dominant_term"].replace("_s", ""),
+        f"{rec.get('roofline_fraction', 0):.3f}",
+        f"{mf:.2e}", f"{useful:.2f}",
+        advice(rec),
+    ]
+
+
+HEADERS = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+           "bottleneck", "roofline_frac", "model_flops", "useful", "to improve"]
+
+
+def to_markdown(recs: List[Dict]) -> str:
+    lines = ["| " + " | ".join(HEADERS) + " |",
+             "|" + "|".join(["---"] * len(HEADERS)) + "|"]
+    for r in recs:
+        lines.append("| " + " | ".join(fmt_row(r)) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.normpath(OUT_DIR))
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load_records(args.dir, args.mesh)
+    if args.md:
+        print(to_markdown(recs))
+        return
+    for r in recs:
+        row = fmt_row(r)
+        print("  ".join(f"{c:<24s}" if i == 0 else f"{c:<12s}"
+                        for i, c in enumerate(row[:7])))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real hardware this runs under one process per host with jax.distributed;
+here it drives the same Trainer on CPU with reduced configs by default.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import get_config
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--full", action="store_true", help="full (not reduced) config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compress", choices=["none", "topk", "int8"], default="none")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    comp = None
+    if args.compress == "topk":
+        from repro.distributed.compression import TopKCompressor
+
+        comp = TopKCompressor(ratio=0.01)
+    elif args.compress == "int8":
+        from repro.distributed.compression import Int8Compressor
+
+        comp = Int8Compressor()
+    tcfg = TrainerConfig(
+        steps=args.steps, batch=args.batch, seq=args.seq,
+        ckpt_dir=args.ckpt_dir, opt=AdamWConfig(lr=args.lr), compressor=comp,
+    )
+    out = Trainer(cfg, tcfg).run()
+    for rec in out["metrics"]:
+        print(
+            f"step {rec['step']:5d}  loss {rec['loss']:.4f}  "
+            f"grad_norm {rec['grad_norm']:.3f}  lr {rec['lr']:.2e}  "
+            f"wall {rec['wall_s']:.1f}s"
+        )
+
+
+if __name__ == "__main__":
+    main()

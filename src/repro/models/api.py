@@ -1,0 +1,97 @@
+"""Family-agnostic model API: init / forward / prefill / decode by config.
+
+Everything downstream (trainer, server, dry-run, benchmarks) talks to models
+exclusively through these five functions, dispatched on ``cfg.family``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import encdec, transformer
+
+__all__ = [
+    "model_init",
+    "model_forward",
+    "model_prefill",
+    "model_init_cache",
+    "model_decode_step",
+    "loss_fn",
+]
+
+
+def _is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.encoder_layers > 0
+
+
+def model_init(cfg: ModelConfig, key, *, tp: int = 1):
+    if _is_encdec(cfg):
+        return encdec.init_encdec(cfg, key, tp=tp)
+    return transformer.init_lm(cfg, key, tp=tp)
+
+
+def model_forward(params, cfg: ModelConfig, batch: Dict, *, policy=transformer.NO_POLICY):
+    if _is_encdec(cfg):
+        return encdec.forward_encdec(params, cfg, batch, policy=policy)
+    return transformer.forward(params, cfg, batch, policy=policy)
+
+
+def model_prefill(params, cfg: ModelConfig, batch: Dict, max_len: int, *, policy=transformer.NO_POLICY):
+    if _is_encdec(cfg):
+        enc = encdec.encode(params, cfg, batch["src_embeds"], policy=policy)
+        cache = encdec.init_decoder_cache(params, cfg, enc, max_len)
+        logits, aux = encdec.forward_encdec(params, cfg, batch, policy=policy)
+        return logits, cache, jnp.asarray(batch["tgt_tokens"].shape[1], jnp.int32)
+    return transformer.prefill(params, cfg, batch, max_len, policy=policy)
+
+
+def model_init_cache(cfg: ModelConfig, params, batch: Dict, max_len: int, *, tp: int = 1):
+    """Empty decode cache (enc-dec needs the encoder pass to build cross-K/V)."""
+    if _is_encdec(cfg):
+        enc = encdec.encode(params, cfg, batch["src_embeds"])
+        return encdec.init_decoder_cache(params, cfg, enc, max_len)
+    b = (batch.get("tokens") if "tokens" in batch else batch["embeds"]).shape[0]
+    return transformer.init_cache(cfg, b, max_len, tp=tp)
+
+
+def model_decode_step(params, cfg: ModelConfig, batch: Dict, cache, cache_len, *, policy=transformer.NO_POLICY):
+    if _is_encdec(cfg):
+        return encdec.decode_step_encdec(
+            params, cfg, batch["tokens"], cache, cache_len, policy=policy
+        )
+    return transformer.decode_step(params, cfg, batch, cache, cache_len, policy=policy)
+
+
+def loss_fn(
+    params,
+    cfg: ModelConfig,
+    batch: Dict,
+    *,
+    policy=transformer.NO_POLICY,
+    aux_coef: float = 0.01,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Token cross-entropy (padded-vocab columns masked out) + MoE aux loss.
+
+    batch["labels"] int32[B, S]; positions with label < 0 are ignored.
+    """
+    logits, aux = model_forward(params, cfg, batch, policy=policy)
+    labels = batch["labels"]
+    vp = logits.shape[-1]
+    if vp > cfg.vocab_size:  # mask the sharding-padded vocab tail.
+        # elementwise iota mask — unlike a concat, this PRESERVES the vocab
+        # sharding of the logits (the concat boundary would force a reshard).
+        vmask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(vmask, logits, -1e30)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - tgt) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = nll.sum() / denom
+    loss = ce + aux_coef * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": denom}

@@ -1,0 +1,4 @@
+"""The paper's three benchmark GNNs (Table 3) on the AMPLE engine."""
+from repro.models.gnn import gcn, gin, sage
+
+MODELS = {"gcn": gcn, "gin": gin, "sage": sage}

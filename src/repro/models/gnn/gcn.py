@@ -1,0 +1,58 @@
+"""GCN (Kipf & Welling) on the AMPLE engine — Eq. 2 of the paper.
+
+    x_i' = W ( Σ_{j ∈ N(i) ∪ {i}}  e_ji / √(d̂_j d̂_i) · x_j )
+
+Aggregation: sum with GCN normalisation coefficients (folded into the plan);
+no residual; normalisation on the aggregation side (Table 3). The graph must
+carry explicit self-loops (``add_self_loops``) so the ∪{i} term is an edge.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.message_passing import AmpleEngine
+from repro.graphs.csr import Graph, gcn_norm_coeffs
+from repro.models.gnn.layers import glorot
+
+__all__ = ["init", "apply", "apply_reference"]
+
+
+def init(key, dims: List[int]) -> Dict:
+    """dims = [in, hidden..., out]; one weight per layer (Eq. 2 has no bias)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        "layers": [
+            {"w": glorot(k, (dims[i], dims[i + 1]))} for i, k in enumerate(keys)
+        ]
+    }
+
+
+def apply(params: Dict, engine: AmpleEngine, x: jnp.ndarray) -> jnp.ndarray:
+    n = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        m = engine.aggregate(x, mode="gcn")
+        x = engine.transform(
+            m, lyr["w"], activation=jax.nn.relu if i < n - 1 else None
+        )
+    return x
+
+
+def apply_reference(params: Dict, g: Graph, x: jnp.ndarray) -> jnp.ndarray:
+    """Dense-adjacency float oracle (test-scale only)."""
+    import numpy as np
+
+    a = g.dense_adjacency()
+    coeff = gcn_norm_coeffs(g)
+    rows = np.repeat(np.arange(g.num_nodes), g.degrees)
+    a_norm = np.zeros_like(a)
+    a_norm[rows, g.indices] = coeff
+    a_norm = jnp.asarray(a_norm)
+    n = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        x = (a_norm @ x) @ lyr["w"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,50 @@
+"""Shared initialisers and reference ops for the GNN model zoo."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["glorot", "linear_init", "mlp_init", "mlp_apply", "relu"]
+
+
+def glorot(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[0], shape[-1]
+    limit = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return jax.random.uniform(key, shape, dtype, -limit, limit)
+
+
+def linear_init(key, in_dim: int, out_dim: int, *, bias: bool = True) -> Dict:
+    kw, _ = jax.random.split(key)
+    p = {"w": glorot(kw, (in_dim, out_dim))}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), jnp.float32)
+    return p
+
+
+def mlp_init(key, dims: List[int], *, bias: bool = True) -> Dict:
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        "layers": [
+            linear_init(k, dims[i], dims[i + 1], bias=bias)
+            for i, k in enumerate(keys)
+        ]
+    }
+
+
+def mlp_apply(params: Dict, x: jnp.ndarray, *, final_activation=None) -> jnp.ndarray:
+    n = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        x = x @ lyr["w"]
+        if "b" in lyr:
+            x = x + lyr["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+        elif final_activation is not None:
+            x = final_activation(x)
+    return x
+
+
+relu = jax.nn.relu

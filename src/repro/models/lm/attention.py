@@ -1,0 +1,310 @@
+"""Multi-head attention: GQA/MQA, qk-norm, QKV bias, RoPE/M-RoPE, three impls.
+
+Implementations (cfg.attention_impl):
+* ``chunked`` — online-softmax over KV chunks via ``lax.scan`` (flash-attention
+  algorithm expressed in XLA). Default: O(S·C) activation memory instead of
+  O(S²), honest HLO for the dry-run roofline, and the same math as the Pallas
+  kernel.
+* ``xla``     — single einsum + softmax (small sequences / tests).
+* ``flash``   — the Pallas TPU kernel (kernels/flash_attention); deployment
+  fast path, validated in interpret mode against ``xla``.
+
+Sharding note: projections are sharded on their FLAT output axis (H·hd),
+which is 128-divisible for every assigned arch even when the head count is
+not (smollm's 15 heads, qwen2-vl's 28) — attention-internal layout is then
+chosen by the policy (context-parallel queries), not by head divisibility.
+
+GQA grouping is computed by reshaping q to [B, S, KV, group, hd] — kv tensors
+are never materially repeated.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.norm import rmsnorm, rmsnorm_init
+from repro.models.lm.rope import apply_mrope, apply_rope
+
+__all__ = ["attn_init", "attention", "decode_attention", "AttnStatics"]
+
+NEG_INF = -1e30
+
+
+def _he(key, shape, scale_dim):
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(scale_dim)).astype(
+        jnp.float32
+    )
+
+
+def attn_init(
+    key,
+    d_model: int,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    *,
+    padded_heads: Optional[int] = None,
+    qkv_bias: bool = False,
+    qk_norm: bool = False,
+    dtype=jnp.bfloat16,
+) -> Dict:
+    hp = padded_heads or num_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    wq = _he(k1, (d_model, hp * head_dim), d_model)
+    wo = _he(k4, (hp * head_dim, d_model), hp * head_dim)
+    if hp > num_heads:  # zero the inert padded heads (exactness, see module doc)
+        wq = wq.at[:, num_heads * head_dim :].set(0.0)
+        wo = wo.at[num_heads * head_dim :, :].set(0.0)
+    p = {
+        "wq": wq.astype(dtype),
+        "wk": _he(k2, (d_model, num_kv_heads * head_dim), d_model).astype(dtype),
+        "wv": _he(k3, (d_model, num_kv_heads * head_dim), d_model).astype(dtype),
+        "wo": wo.astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((hp * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim)
+        p["k_norm"] = rmsnorm_init(head_dim)
+    return p
+
+
+class AttnStatics:
+    """Static knobs threaded through the transformer (not traced)."""
+
+    def __init__(
+        self,
+        num_heads: int,
+        num_kv_heads: int,
+        head_dim: int,
+        *,
+        padded_heads: Optional[int] = None,
+        rope_theta: float = 1e4,
+        mrope: bool = False,
+        mrope_sections: Tuple[int, int, int] = (16, 24, 24),
+        qk_norm: bool = False,
+        impl: str = "chunked",
+        chunk: int = 512,
+        causal: bool = True,
+        norm_eps: float = 1e-6,
+        use_rope: bool = True,
+    ):
+        self.use_rope = use_rope
+        self.num_heads = padded_heads or num_heads
+        self.num_kv_heads = num_kv_heads
+        self.head_dim = head_dim
+        self.rope_theta = rope_theta
+        self.mrope = mrope
+        self.mrope_sections = mrope_sections
+        self.qk_norm = qk_norm
+        self.impl = impl
+        self.chunk = chunk
+        self.causal = causal
+        self.norm_eps = norm_eps
+
+
+def _project_qkv(params, x, st: AttnStatics, positions):
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, st.num_heads, st.head_dim)
+    k = k.reshape(b, s, st.num_kv_heads, st.head_dim)
+    v = v.reshape(b, s, st.num_kv_heads, st.head_dim)
+    if st.qk_norm:
+        q = rmsnorm(params["q_norm"], q, eps=st.norm_eps)
+        k = rmsnorm(params["k_norm"], k, eps=st.norm_eps)
+    if positions is not None:
+        if st.mrope:
+            q = apply_mrope(q, positions, st.rope_theta, st.mrope_sections)
+            k = apply_mrope(k, positions, st.rope_theta, st.mrope_sections)
+        else:
+            q = apply_rope(q, positions, st.rope_theta)
+            k = apply_rope(k, positions, st.rope_theta)
+    return q, k, v
+
+
+def _sdpa_xla(q, k, v, *, causal: bool, scale: float):
+    """[B,S,KV,G,hd] x [B,T,KV,hd] full-materialization attention."""
+    b, s, kv, g, hd = q.shape
+    t = k.shape[1]
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        scores = jnp.where((kpos - (t - s)) > qpos, NEG_INF, scores)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", probs, v)
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, scale: float, chunk: int):
+    """Q-block-chunked attention: ``scan`` over query blocks, exact softmax
+    per block over the full K/V (flash-attention memory shape in XLA).
+
+    Scanning over Q (not KV) means the scan has NO carry — each block is
+    independent — so autodiff saves only the per-block outputs, not an
+    O(B·S·H·hd) accumulator per step. The per-block score tensor is transient
+    and rematerialized in backward (``jax.checkpoint`` on the block body).
+    Peak activation: O(B·BQ·S) scores + O(B·S·H·hd) outputs, vs O(B·S²) for
+    the naive path.
+    """
+    b, s, kv, g, hd = q.shape
+    t = k.shape[1]
+    c = min(chunk, s)
+    nc = -(-s // c)
+    sp = nc * c
+    if sp != s:
+        q = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0), (0, 0)))
+    qc = q.reshape(b, nc, c, kv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kpos = jnp.arange(t)[None, :]
+
+    @jax.checkpoint
+    def block(ci, qb):
+        # qb: [B, c, kv, g, hd]
+        scores = jnp.einsum("bskgh,btkh->bkgst", qb, k).astype(jnp.float32) * scale
+        qpos = ci * c + jnp.arange(c)[:, None] + (t - s)
+        mask = qpos >= t + (t - s)  # q padding rows (never selected anyway)
+        m = kpos > qpos if causal else jnp.zeros((c, t), bool)
+        scores = jnp.where(m[None, None, None, :, :], NEG_INF, scores)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgst,btkh->bskgh", probs, v)
+
+    def body(_, inputs):
+        ci, qb = inputs
+        return None, block(ci, qb)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nc), qc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sp, kv, g, hd)
+    return out[:, :s]
+
+
+def attention(
+    params: Dict,
+    x: jnp.ndarray,  # [B, S, D]
+    st: AttnStatics,
+    positions: Optional[jnp.ndarray] = None,
+    kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cross-attn K/V source
+    return_kv: bool = False,
+    policy=None,
+):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    ``return_kv=True`` additionally returns this layer's (k, v) [B,S,KV,hd]
+    so prefill can populate the decode cache in one pass. ``policy`` applies
+    the attention-internal sharding layout (context-parallel queries)."""
+    b, s, d = x.shape
+    g = st.num_heads // st.num_kv_heads
+    scale = 1.0 / math.sqrt(st.head_dim)
+    if kv is None:
+        q, k, v = _project_qkv(params, x, st, positions)
+    else:  # cross-attention: q from x, k/v precomputed from the encoder
+        q = (x @ params["wq"]).reshape(b, s, st.num_heads, st.head_dim)
+        if st.qk_norm:
+            q = rmsnorm(params["q_norm"], q, eps=st.norm_eps)
+        k, v = kv
+    if policy is not None:
+        q, k, v = policy.qkv(q, k, v)
+    qg = q.reshape(b, s, st.num_kv_heads, g, st.head_dim)
+    if st.impl == "flash" and kv is None and st.causal:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(q, k, v, causal=True)
+        out = out.reshape(b, s, st.num_kv_heads, g, st.head_dim)
+    elif st.impl == "chunked":
+        out = _sdpa_chunked(qg, k, v, causal=st.causal and kv is None, scale=scale, chunk=st.chunk)
+    else:
+        out = _sdpa_xla(qg, k, v, causal=st.causal and kv is None, scale=scale)
+    out = out.reshape(b, s, st.num_heads * st.head_dim)
+    out = out @ params["wo"]
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def project_kv(params: Dict, x: jnp.ndarray, st: AttnStatics):
+    """K/V projection alone (cross-attention source, computed once)."""
+    b, s, _ = x.shape
+    k = (x @ params["wk"]).reshape(b, s, st.num_kv_heads, st.head_dim)
+    v = (x @ params["wv"]).reshape(b, s, st.num_kv_heads, st.head_dim)
+    if "bk" in params:
+        k = k + params["bk"].reshape(st.num_kv_heads, st.head_dim)
+        v = v + params["bv"].reshape(st.num_kv_heads, st.head_dim)
+    if st.qk_norm:
+        k = rmsnorm(params["k_norm"], k, eps=st.norm_eps)
+    return k, v
+
+
+def quantize_kv(k: jnp.ndarray):
+    """Per-(batch, position, kv-head) symmetric int8: k [B,S,KV,hd] ->
+    (int8 same shape, f32 scale [B,S,KV]). The 4× lighter cache stream is the
+    decode-roofline lever (EXPERIMENTS.md §Perf, decode cells)."""
+    amax = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1)
+    s = jnp.maximum(amax / 127.0, 1e-8)
+    kq = jnp.clip(jnp.round(k.astype(jnp.float32) / s[..., None]), -127, 127)
+    return kq.astype(jnp.int8), s
+
+
+def decode_attention(
+    params: Dict,
+    x: jnp.ndarray,  # [B, 1, D] current token
+    st: AttnStatics,
+    k_cache: jnp.ndarray,  # [B, L, KV, hd] (bf16/f32 or int8)
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,  # int32[] tokens already in cache
+    k_scale: Optional[jnp.ndarray] = None,  # f32[B, L, KV] when int8
+    v_scale: Optional[jnp.ndarray] = None,
+):
+    """One decode step: append this token's K/V at ``cache_len``, attend over
+    the valid prefix. Returns (out, k_cache, v_cache[, k_scale, v_scale]).
+
+    With an int8 cache, dequantization folds into the einsums: scores pick up
+    the per-position K scale; the V scale multiplies the (already f32) probs —
+    the MXU stream stays int8 end-to-end."""
+    b, _, d = x.shape
+    l = k_cache.shape[1]
+    g = st.num_heads // st.num_kv_heads
+    scale = 1.0 / math.sqrt(st.head_dim)
+    if not st.use_rope:
+        pos = None
+    elif st.mrope:
+        pos = jnp.broadcast_to(cache_len, (3, b, 1)).astype(jnp.int32)
+    else:
+        pos = jnp.broadcast_to(cache_len, (b, 1)).astype(jnp.int32)
+    q, k, v = _project_qkv(params, x, st, pos)
+    int8_cache = k_cache.dtype == jnp.int8
+    if int8_cache:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, cache_len, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, cache_len, axis=1)
+        k, v = kq, vq
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), cache_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), cache_len, axis=1)
+    qg = q.reshape(b, st.num_kv_heads, g, st.head_dim)
+    if int8_cache:
+        scores = jnp.einsum(
+            "bkgh,btkh->bkgt", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+        ) * scale
+        scores = scores * k_scale.transpose(0, 2, 1)[:, :, None, :]
+    else:
+        scores = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache).astype(jnp.float32) * scale
+    valid = jnp.arange(l)[None, :] <= cache_len  # includes the new token
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if int8_cache:
+        pv = probs * v_scale.transpose(0, 2, 1)[:, :, None, :]  # fold V scale
+        out = jnp.einsum("bkgt,btkh->bkgh", pv, v_cache.astype(jnp.float32))
+        out = out.astype(x.dtype)
+    else:
+        out = jnp.einsum("bkgt,btkh->bkgh", probs.astype(v_cache.dtype), v_cache)
+    out = out.reshape(b, 1, st.num_heads * st.head_dim) @ params["wo"]
+    if int8_cache:
+        return out, k_cache, v_cache, k_scale, v_scale
+    return out, k_cache, v_cache

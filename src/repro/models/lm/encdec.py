@@ -1,0 +1,224 @@
+"""Encoder-decoder backbone (Seamless-M4T medium's transformer core).
+
+Encoder: bidirectional attention units. Decoder: causal self-attention +
+cross-attention over encoder output + FFN. The speech/text modality frontend
+is a STUB per the assignment — ``src_embeds`` arrive precomputed (frame
+embeddings); the decoder consumes token ids.
+
+Both stacks scan over stacked unit params like transformer.py. Cross-attention
+K/V are projected once from the encoder output and reused across decode steps
+(the standard serving split).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.lm.attention import (
+    AttnStatics,
+    attn_init,
+    attention,
+    decode_attention,
+    project_kv,
+)
+from repro.models.lm.mlp import mlp_apply, mlp_init
+from repro.models.lm.norm import make_norm
+from repro.models.lm.transformer import NO_POLICY, make_statics
+
+__all__ = [
+    "init_encdec",
+    "forward_encdec",
+    "encode",
+    "init_decoder_cache",
+    "decode_step_encdec",
+]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _sin_pos(x: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    s = x.shape[1]
+    half = d_model // 2
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) / half * 9.21)
+    ang = pos * freq[None]
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+    return x + pe[None].astype(x.dtype)
+
+
+def _init_unit(cfg: ModelConfig, key, *, cross: bool, tp: int) -> Dict:
+    norm_init, _ = make_norm(cfg.norm)
+    k1, k2, k3 = jax.random.split(key, 3)
+    kw = dict(
+        qkv_bias=cfg.qkv_bias,
+        qk_norm=cfg.qk_norm,
+        dtype=_dtype(cfg),
+    )
+    p = {
+        "norm_attn": norm_init(cfg.d_model),
+        "attn": attn_init(
+            k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, **kw,
+        ),
+        "norm_ffn": norm_init(cfg.d_model),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp, bias=cfg.mlp_bias,
+                        dtype=_dtype(cfg)),
+    }
+    if cross:
+        p["norm_cross"] = norm_init(cfg.d_model)
+        p["cross"] = attn_init(
+            k3, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.resolved_head_dim, **kw,
+        )
+    return p
+
+
+def init_encdec(cfg: ModelConfig, key, *, tp: int = 1) -> Dict:
+    assert cfg.encoder_layers > 0
+    norm_init, _ = make_norm(cfg.norm)
+    ke, kd, kv, kh = jax.random.split(key, 4)
+    vp = cfg.padded_vocab(tp)
+    dt = _dtype(cfg)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "embed": (
+            jax.random.normal(kv, (vp, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dt),
+        "lm_head": (
+            jax.random.normal(kh, (cfg.d_model, vp), jnp.float32)
+            / cfg.d_model**0.5
+        ).astype(dt),
+        "encoder": jax.vmap(lambda k: _init_unit(cfg, k, cross=False, tp=tp))(
+            enc_keys
+        ),
+        "decoder": jax.vmap(lambda k: _init_unit(cfg, k, cross=True, tp=tp))(
+            dec_keys
+        ),
+        "enc_norm": norm_init(cfg.d_model),
+        "final_norm": norm_init(cfg.d_model),
+    }
+
+
+def encode(params, cfg: ModelConfig, src_embeds: jnp.ndarray, *, policy=NO_POLICY):
+    """Bidirectional encoder over precomputed frontend embeddings."""
+    _, norm_apply = make_norm(cfg.norm)
+    st = make_statics(cfg, causal=False)
+    x = policy.res(_sin_pos(src_embeds.astype(_dtype(cfg)), cfg.d_model))
+
+    def unit(x, p):
+        h = norm_apply(p["norm_attn"], x, eps=cfg.norm_eps)
+        x = policy.res(x + attention(p["attn"], h, st, None, policy=policy))
+        h = norm_apply(p["norm_ffn"], x, eps=cfg.norm_eps)
+        x = policy.res(x + mlp_apply(p["mlp"], h, cfg.mlp))
+        return x, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(unit, x, params["encoder"])
+    else:
+        n = jax.tree_util.tree_leaves(params["encoder"])[0].shape[0]
+        for u in range(n):
+            x, _ = unit(x, jax.tree.map(lambda a: a[u], params["encoder"]))
+    return norm_apply(params["enc_norm"], x, eps=cfg.norm_eps)
+
+
+def forward_encdec(
+    params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], *, policy=NO_POLICY
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Teacher-forced training forward. batch: src_embeds, tgt_tokens."""
+    _, norm_apply = make_norm(cfg.norm)
+    enc = encode(params, cfg, batch["src_embeds"], policy=policy)
+    st_self = make_statics(cfg, causal=True)
+    st_cross = make_statics(cfg, causal=False)
+    x = params["embed"][batch["tgt_tokens"]]
+    x = policy.res(_sin_pos(x, cfg.d_model))
+
+    def unit(x, p):
+        h = norm_apply(p["norm_attn"], x, eps=cfg.norm_eps)
+        x = policy.res(x + attention(p["attn"], h, st_self, None, policy=policy))
+        h = norm_apply(p["norm_cross"], x, eps=cfg.norm_eps)
+        kvv = project_kv(p["cross"], enc, st_cross)
+        x = policy.res(x + attention(p["cross"], h, st_cross, None, kv=kvv, policy=policy))
+        h = norm_apply(p["norm_ffn"], x, eps=cfg.norm_eps)
+        x = policy.res(x + mlp_apply(p["mlp"], h, cfg.mlp))
+        return x, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(unit, x, params["decoder"])
+    else:
+        n = jax.tree_util.tree_leaves(params["decoder"])[0].shape[0]
+        for u in range(n):
+            x, _ = unit(x, jax.tree.map(lambda a: a[u], params["decoder"]))
+    x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = policy.logits((x @ params["lm_head"]).astype(jnp.float32))
+    aux = jnp.zeros((), jnp.float32)
+    return logits, aux
+
+
+def init_decoder_cache(params, cfg: ModelConfig, enc: jnp.ndarray, max_len: int):
+    """Self-attn KV cache + cross K/V precomputed from the encoder output."""
+    b = enc.shape[0]
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = _dtype(cfg)
+    st_cross = make_statics(cfg, causal=False)
+    cross_k, cross_v = jax.vmap(
+        lambda p: project_kv(p, enc, st_cross)
+    )(params["decoder"]["cross"])
+    return {
+        "k": jnp.zeros((cfg.num_layers, b, max_len, kv, hd), dt),
+        "v": jnp.zeros((cfg.num_layers, b, max_len, kv, hd), dt),
+        "cross_k": cross_k,  # [L, B, S_src, kv, hd]
+        "cross_v": cross_v,
+    }
+
+
+def decode_step_encdec(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # [B, 1]
+    cache: Dict,
+    cache_len: jnp.ndarray,
+    *,
+    policy=NO_POLICY,
+):
+    _, norm_apply = make_norm(cfg.norm)
+    st_self = make_statics(cfg, causal=True)
+    st_cross = make_statics(cfg, causal=False)
+    x = params["embed"][tokens]
+    half = cfg.d_model // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) / half * 9.21)
+    ang = cache_len.astype(jnp.float32) * freq
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+    x = x + pe[None, None].astype(x.dtype)
+
+    def unit(x, scanned):
+        p, ck, cv, xk, xv = scanned
+        h = norm_apply(p["norm_attn"], x, eps=cfg.norm_eps)
+        h, k_new, v_new = decode_attention(p["attn"], h, st_self, ck, cv, cache_len)
+        x = x + h
+        h = norm_apply(p["norm_cross"], x, eps=cfg.norm_eps)
+        x = x + attention(p["cross"], h, st_cross, None, kv=(xk, xv))
+        h = norm_apply(p["norm_ffn"], x, eps=cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h, cfg.mlp)
+        return x, (k_new, v_new)
+
+    scanned = (params["decoder"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"])
+    if cfg.scan_layers:
+        x, (k_new, v_new) = jax.lax.scan(unit, x, scanned)
+    else:
+        n = cfg.num_layers
+        ks, vs = [], []
+        for u in range(n):
+            x, (k1, v1) = unit(x, jax.tree.map(lambda a: a[u], scanned))
+            ks.append(k1)
+            vs.append(v1)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = policy.logits((x @ params["lm_head"]).astype(jnp.float32))
+    cache = dict(cache, k=k_new, v=v_new)
+    return logits[:, 0], cache

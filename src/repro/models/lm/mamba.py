@@ -1,0 +1,234 @@
+"""Mamba2 — SSD (state-space duality) blocks, chunked form + decode recurrence.
+
+Implements the Mamba2 mixer (arXiv:2405.21060): gated x/z projection, causal
+depthwise conv on (x, B, C), softplus-dt input-dependent discretization with a
+scalar decay per head (A), and the SSD chunked algorithm:
+
+  * intra-chunk: quadratic "attention-like" term (C_i·B_j masked by the decay
+    kernel L[i,j] = exp(Σ_{j<k≤i} a_k)) — MXU-dense;
+  * inter-chunk: linear recurrence over per-chunk states via ``lax.scan``.
+
+Decode is the pure recurrence: state ← decay·state + B·(dt·x), y = C·state.
+Single B/C group (G=1), shared across heads, as in the 370m config.
+
+Unlike the reference CUDA implementation's packed ``in_proj``, the five
+projections (x, z, B, C, dt) are stored as separate weights: the packed layout
+cuts across tensor-parallel shard boundaries, while separate weights shard
+cleanly (x/z on d_inner over "model"; B/C/dt are small and replicate).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.norm import rmsnorm
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "mamba_state_init"]
+
+
+def _he(key, shape, scale_dim, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(scale_dim)).astype(dtype)
+
+
+def mamba_init(
+    key,
+    d_model: int,
+    *,
+    d_inner: int,
+    ssm_state: int,
+    heads: int,
+    conv: int = 4,
+    dtype=jnp.bfloat16,
+) -> Dict:
+    keys = jax.random.split(key, 8)
+    n, h = ssm_state, heads
+    # dt bias: inverse-softplus of dt in [1e-3, 1e-1] (mamba2 default init)
+    u = jax.random.uniform(keys[7], (h,), jnp.float32)
+    dt0 = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+    return {
+        "wx": _he(keys[0], (d_model, d_inner), d_model, dtype),
+        "wz": _he(keys[1], (d_model, d_inner), d_model, dtype),
+        "wb": _he(keys[2], (d_model, n), d_model, dtype),
+        "wc": _he(keys[3], (d_model, n), d_model, dtype),
+        "wdt": _he(keys[4], (d_model, h), d_model, dtype),
+        "conv_x": {"w": _he(keys[5], (conv, d_inner), conv, jnp.float32),
+                   "b": jnp.zeros((d_inner,), jnp.float32)},
+        "conv_b": {"w": _he(keys[5], (conv, n), conv, jnp.float32),
+                   "b": jnp.zeros((n,), jnp.float32)},
+        "conv_c": {"w": _he(keys[6], (conv, n), conv, jnp.float32),
+                   "b": jnp.zeros((n,), jnp.float32)},
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt0 + jnp.log(-jnp.expm1(-dt0)),  # softplus^-1(dt0)
+        "norm_scale": {"scale": jnp.ones((d_inner,), jnp.float32)},
+        "out_proj": _he(keys[6], (d_inner, d_model), d_inner, dtype),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, conv: Dict) -> jnp.ndarray:
+    """Depthwise causal conv1d: u [B, L, C], w [K, C] -> silu(conv) [B, L, C]."""
+    w, b = conv["w"], conv["b"]
+    k = w.shape[0]
+    u32 = u.astype(jnp.float32)
+    pad = jnp.pad(u32, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u32)
+    for i in range(k):  # K is tiny (4): unrolled taps beat a conv op in HLO
+        out = out + pad[:, i : i + u.shape[1], :] * w[i]
+    return jax.nn.silu(out + b).astype(u.dtype)
+
+
+def mamba_apply(
+    params: Dict,
+    x: jnp.ndarray,  # [B, L, D]
+    *,
+    d_inner: int,
+    ssm_state: int,
+    heads: int,
+    headdim: int,
+    chunk: int = 256,
+    norm_eps: float = 1e-6,
+    return_state: bool = False,
+):
+    b, l, _ = x.shape
+    n, h, p = ssm_state, heads, headdim
+    z = x @ params["wz"]
+    xc = _causal_conv(x @ params["wx"], params["conv_x"])
+    bb = _causal_conv(x @ params["wb"], params["conv_b"]).astype(jnp.float32)
+    cc = _causal_conv(x @ params["wc"], params["conv_c"]).astype(jnp.float32)
+    dt = x @ params["wdt"]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,L,H]
+    a = -jnp.exp(params["A_log"])  # [H]
+    adt = dt * a  # log-decay per step [B, L, H]
+
+    # ---- chunking ----
+    q = min(chunk, l)
+    nc = -(-l // q)
+    lp = nc * q
+    if lp != l:
+        pad = ((0, 0), (0, lp - l), (0, 0))
+        xc, z = jnp.pad(xc, pad), jnp.pad(z, pad)
+        bb, cc = jnp.pad(bb, pad), jnp.pad(cc, pad)
+        adt = jnp.pad(adt, pad)
+        dt = jnp.pad(dt, pad)
+    xh = xc.reshape(b, nc, q, h, p).astype(jnp.float32)
+    xdt = xh * dt.reshape(b, nc, q, h)[..., None]  # fold dt into B·x
+    bc = bb.reshape(b, nc, q, n)
+    cch = cc.reshape(b, nc, q, n)
+    adt_c = adt.reshape(b, nc, q, h)
+    acum = jnp.cumsum(adt_c, axis=2)  # [B,nc,Q,H]
+
+    # intra-chunk (diagonal block): L[i,j] = exp(acum_i - acum_j) for i>=j
+    li = acum[:, :, :, None, :] - acum[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    iota = jnp.arange(q)
+    causal = iota[:, None] >= iota[None, :]
+    lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cch, bc)  # [B,nc,Q,Q] (G=1 shared)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, lmat, xdt)
+
+    # chunk-final states: S_c = Σ_j exp(acum_last - acum_j) B_j ⊗ xdt_j
+    decay_states = jnp.exp(acum[:, :, -1:, :] - acum)  # [B,nc,Q,H]
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, decay_states, xdt)
+
+    # inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(acum[:, :, -1, :])  # [B,nc,H]
+
+    def scan_fn(s_prev, inp):
+        s_c, cd = inp  # [B,H,P,N], [B,H]
+        s_new = s_c + s_prev * cd[..., None, None]
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    s_last, s_prevs = jax.lax.scan(
+        scan_fn,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N] state entering chunk
+
+    # off-diagonal: contribution of carried state to every position
+    state_decay = jnp.exp(acum)  # [B,nc,Q,H]
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", cch, s_prevs, state_decay)
+
+    y = (y_diag + y_off).reshape(b, lp, h, p) + params["D"][None, None, :, None] * xh.reshape(b, lp, h, p)
+    y = y.reshape(b, lp, d_inner)[:, :l]
+    z = z[:, :l]
+    y = rmsnorm(params["norm_scale"], y * jax.nn.silu(z.astype(jnp.float32)), eps=norm_eps)
+    out = (y.astype(x.dtype)) @ params["out_proj"]
+    if not return_state:
+        return out
+    # decode-continuation state: final SSM state (padding lanes are inert —
+    # padded dt is 0, so decay=1 and contribution=0) + last K-1 raw conv inputs
+    kc = params["conv_x"]["w"].shape[0]
+
+    def tail(u):  # [B, L, C] -> [B, K-1, C]
+        need = kc - 1
+        u = jnp.pad(u, ((0, 0), (max(0, need - u.shape[1]), 0), (0, 0)))
+        return u[:, -need:].astype(jnp.float32)
+
+    state = {
+        "conv_x": tail(x @ params["wx"]),
+        "conv_b": tail(x @ params["wb"]),
+        "conv_c": tail(x @ params["wc"]),
+        "ssm": s_last,
+    }
+    return out, state
+
+
+def mamba_state_init(batch: int, *, d_inner: int, ssm_state: int, heads: int,
+                     headdim: int, conv: int = 4, dtype=jnp.float32):
+    """Decode state: conv windows for (x, B, C) + the SSM state tensor."""
+    n = ssm_state
+    return {
+        "conv_x": jnp.zeros((batch, conv - 1, d_inner), dtype),
+        "conv_b": jnp.zeros((batch, conv - 1, n), dtype),
+        "conv_c": jnp.zeros((batch, conv - 1, n), dtype),
+        "ssm": jnp.zeros((batch, heads, headdim, n), dtype),
+    }
+
+
+def _conv_step(u_t: jnp.ndarray, conv_state: jnp.ndarray, conv: Dict):
+    """One causal-conv step: u_t [B, C]; returns (silu(out) [B, C], new_state)."""
+    window = jnp.concatenate(
+        [conv_state, u_t[:, None, :].astype(conv_state.dtype)], axis=1
+    )  # [B, K, C]
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), conv["w"])
+    return jax.nn.silu(out + conv["b"]), window[:, 1:]
+
+
+def mamba_decode(
+    params: Dict,
+    x: jnp.ndarray,  # [B, 1, D]
+    state: Dict,
+    *,
+    d_inner: int,
+    ssm_state: int,
+    heads: int,
+    headdim: int,
+    norm_eps: float = 1e-6,
+):
+    """One-token recurrence. Returns (y [B,1,D], new_state)."""
+    b = x.shape[0]
+    n, h, p = ssm_state, heads, headdim
+    xt = x[:, 0]
+    z = xt @ params["wz"]
+    xc, ncx = _conv_step(xt @ params["wx"], state["conv_x"], params["conv_x"])
+    bb, ncb = _conv_step(xt @ params["wb"], state["conv_b"], params["conv_b"])
+    cc, ncc = _conv_step(xt @ params["wc"], state["conv_c"], params["conv_c"])
+    dt = jax.nn.softplus(
+        (xt @ params["wdt"]).astype(jnp.float32) + params["dt_bias"]
+    )  # [B,H]
+    decay = jnp.exp(dt * (-jnp.exp(params["A_log"])))  # [B,H]
+    xh = xc.reshape(b, h, p).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+    s_new = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", bb, xdt
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cc, s_new) + params["D"][None, :, None] * xh
+    y = y.reshape(b, d_inner)
+    y = rmsnorm(params["norm_scale"], y * jax.nn.silu(z.astype(jnp.float32)), eps=norm_eps)
+    out = (y.astype(x.dtype) @ params["out_proj"])[:, None, :]
+    return out, {"conv_x": ncx, "conv_b": ncb, "conv_c": ncc, "ssm": s_new}

@@ -1,0 +1,53 @@
+"""Feed-forward variants: SwiGLU (llama/qwen), squared-ReLU (nemotron), GELU."""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mlp_init", "mlp_apply"]
+
+
+def _he(key, shape, scale_dim, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(scale_dim)).astype(dtype)
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, *, bias: bool = False, dtype=jnp.bfloat16) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        p = {
+            "w_gate": _he(k1, (d_model, d_ff), d_model, dtype),
+            "w_up": _he(k2, (d_model, d_ff), d_model, dtype),
+            "w_down": _he(k3, (d_ff, d_model), d_ff, dtype),
+        }
+    elif kind in ("relu2", "gelu"):
+        p = {
+            "w_in": _he(k1, (d_model, d_ff), d_model, dtype),
+            "w_out": _he(k2, (d_ff, d_model), d_ff, dtype),
+        }
+    else:
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    if bias:
+        if kind == "swiglu":
+            p["b_gate"] = jnp.zeros((d_ff,), dtype)
+            p["b_up"] = jnp.zeros((d_ff,), dtype)
+        else:
+            p["b_in"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp_apply(params: Dict, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        gate = x @ params["w_gate"] + params.get("b_gate", 0)
+        up = x @ params["w_up"] + params.get("b_up", 0)
+        h = jax.nn.silu(gate) * up
+        return h @ params["w_down"] + params.get("b_down", 0)
+    h = x @ params["w_in"] + params.get("b_in", 0)
+    if kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))  # nemotron squared-ReLU
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["w_out"] + params.get("b_down", 0)

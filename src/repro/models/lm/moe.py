@@ -1,0 +1,172 @@
+"""Mixture-of-Experts with event-driven capacity dispatch.
+
+Token→expert routing is the same skewed bin-packing problem as AMPLE's
+node→nodeslot scheduling (DESIGN.md §2.1): expert loads are non-uniform, and a
+fixed per-expert capacity plays the role of the nodeslot pool. Dispatch here
+is the sort-based "dropping" formulation:
+
+  1. route: top-k gates per token (softmax router, f32);
+  2. schedule: stable-sort (token, k) slots by expert id, rank within expert —
+     rank ≥ capacity overflows (drops) exactly like a nodeslot pool saturating;
+  3. execute: scatter tokens into the [E, C, D] expert buffer, run all expert
+     FFNs as one stacked einsum (MXU-dense, like the FTE), gather back and
+     combine with gate weights.
+
+The capacity C = ceil(T·k/E · capacity_factor) is static; the event-driven
+insight surfaces as ``load_stats`` (per-expert load / drop fraction) that the
+serving layer can feed back into capacity_factor per batch — the host-side
+analogue of reprogramming nodeslots.
+
+Sharding: experts (leading axis of stacked FFN weights) go over the "model"
+mesh axis when divisible (EP); otherwise the expert FFN hidden dim is sharded
+(TP-within-expert; e.g. granite's 40 experts on a 16-way axis). Router and
+gates replicate.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.mlp import mlp_apply, mlp_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(
+    key,
+    d_model: int,
+    d_ff: int,
+    num_experts: int,
+    kind: str,
+    *,
+    shared_expert: bool = False,
+    dtype=jnp.bfloat16,
+) -> Dict:
+    kr, ke, ks = jax.random.split(key, 3)
+    expert_keys = jax.random.split(ke, num_experts)
+    experts = jax.vmap(
+        lambda k: mlp_init(k, d_model, d_ff, kind, dtype=dtype)
+    )(expert_keys)
+    p = {
+        "router": (
+            jax.random.normal(kr, (d_model, num_experts), jnp.float32)
+            / math.sqrt(d_model)
+        ),
+        "experts": experts,  # stacked [E, ...]
+    }
+    if shared_expert:
+        p["shared"] = mlp_init(ks, d_model, d_ff, kind, dtype=dtype)
+    return p
+
+
+def _expert_ffn(experts: Dict, xin: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """Stacked expert FFN: xin [G, E, C, D] -> [G, E, C, D] (G = dispatch
+    groups — one per data shard; see moe_apply)."""
+    if kind == "swiglu":
+        gate = jnp.einsum("gecd,edf->gecf", xin, experts["w_gate"])
+        up = jnp.einsum("gecd,edf->gecf", xin, experts["w_up"])
+        h = jax.nn.silu(gate) * up
+        return jnp.einsum("gecf,efd->gecd", h, experts["w_down"])
+    h = jnp.einsum("gecd,edf->gecf", xin, experts["w_in"])
+    h = jnp.square(jax.nn.relu(h)) if kind == "relu2" else jax.nn.gelu(h)
+    return jnp.einsum("gecf,efd->gecd", h, experts["w_out"])
+
+
+def moe_apply(
+    params: Dict,
+    x: jnp.ndarray,  # [B, S, D]
+    *,
+    num_experts: int,
+    top_k: int,
+    kind: str,
+    capacity_factor: float = 1.25,
+    return_stats: bool = False,
+    policy=None,
+):
+    b, s, d = x.shape
+    t = b * s
+    e = num_experts
+    # Explicit shard_map EP path (§Perf cell C): partitioner-proof dispatch.
+    if policy is not None and not return_stats:
+        from repro.models.lm.moe_sharded import moe_apply_sharded, sharded_applicable
+
+        if sharded_applicable(policy, e, t, 0):
+            return moe_apply_sharded(
+                params, x, num_experts=e, top_k=top_k, kind=kind,
+                capacity_factor=capacity_factor, policy=policy,
+            )
+    # --- dispatch groups: one local nodeslot pool per data shard -------------
+    # The schedule (sort + rank + capacity) runs independently inside each
+    # group, so no global shuffle crosses shards; the only cross-shard motion
+    # is the [G, E] block transpose into expert shards — an all-to-all. This
+    # mirrors the paper exactly: nodeslots are a LOCAL resource pool, and the
+    # NoC (here: ICI a2a) moves only scheduled work. A global-sort variant was
+    # measured to all-gather token tensors every layer (EXPERIMENTS.md §Perf).
+    groups = 1
+    if policy is not None and hasattr(policy, "moe_groups"):
+        groups = policy.moe_groups(t)
+    tg = t // groups
+    cap = max(1, int(math.ceil(tg * top_k / e * capacity_factor)))
+
+    xf = x.reshape(groups, tg, d)
+    logits = (xf.astype(jnp.float32)) @ params["router"]  # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, top_k)  # [G, Tg, k]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- event-driven schedule (per group): sort by expert, rank, capacity --
+    flat_e = gate_idx.reshape(groups, tg * top_k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)  # sorted expert ids
+    token_of = order // top_k
+    counts = jax.vmap(lambda se_g: jnp.bincount(se_g, length=e))(se)
+    starts = jnp.cumsum(counts, axis=-1) - counts
+    rank = jnp.arange(tg * top_k)[None, :] - jnp.take_along_axis(starts, se, -1)
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e * cap)  # overflow -> sentinel row
+
+    # ---- dispatch / execute / combine ----
+    def scatter_group(xf_g, slot_g, token_of_g):
+        return jnp.zeros((e * cap + 1, d), x.dtype).at[slot_g].set(
+            xf_g[token_of_g]
+        )
+
+    buf = jax.vmap(scatter_group)(xf.astype(x.dtype), slot, token_of)
+    xin = buf[:, : e * cap].reshape(groups, e, cap, d)
+    if policy is not None:
+        xin = policy.ebuf(xin)  # EP: [G,E] block transpose == all-to-all
+    yexp = _expert_ffn(params["experts"], xin, kind)
+    if policy is not None:
+        yexp = policy.ebuf_out(yexp)  # a2a back to group-local layout
+    yflat = yexp.reshape(groups, e * cap, d)
+    wsorted = jnp.take_along_axis(gate_w.reshape(groups, tg * top_k), order, -1)
+
+    def combine_group(yflat_g, slot_g, token_of_g, keep_g, w_g):
+        contrib = jnp.where(
+            keep_g[:, None], yflat_g[jnp.minimum(slot_g, e * cap - 1)], 0.0
+        ) * w_g[:, None].astype(x.dtype)
+        return jnp.zeros((tg, d), x.dtype).at[token_of_g].add(contrib)
+
+    out = jax.vmap(combine_group)(yflat, slot, token_of, keep, wsorted)
+
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], xf.reshape(groups, tg, d), kind)
+    out = out.reshape(b, s, d)
+
+    # Switch-style load-balancing aux loss: E * Σ_e f_e · P_e
+    f_e = counts.sum(0).astype(jnp.float32) / (t * top_k)
+    p_e = probs.reshape(t, e).mean(axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+
+    if return_stats:
+        stats = {
+            "expert_load": counts.sum(0),
+            "dropped_fraction": 1.0 - keep.mean(),
+            "capacity": cap,
+            "groups": groups,
+        }
+        return out, aux, stats
+    return out, aux

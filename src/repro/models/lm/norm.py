@@ -1,0 +1,40 @@
+"""Normalization layers (RMSNorm / LayerNorm), computed in fp32."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm_init", "rmsnorm", "layernorm_init", "layernorm", "make_norm"]
+
+
+def rmsnorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x: jnp.ndarray, *, eps: float = 1e-6) -> jnp.ndarray:
+    orig = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jnp.reciprocal(jnp.sqrt(var + eps)) * params["scale"]
+    return y.astype(orig)
+
+
+def layernorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params, x: jnp.ndarray, *, eps: float = 1e-6) -> jnp.ndarray:
+    orig = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    y = y * params["scale"] + params["bias"]
+    return y.astype(orig)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(f"unknown norm {kind!r}")

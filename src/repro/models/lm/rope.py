@@ -1,0 +1,68 @@
+"""Rotary position embeddings: standard RoPE and M-RoPE (Qwen2-VL).
+
+M-RoPE splits each head's rotary dimensions into (temporal, height, width)
+sections and rotates each section by its own position stream; plain text uses
+identical t/h/w positions, images advance h/w per patch. The backbone here
+receives the 3×positions stream from the (stubbed) modality frontend.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["rope_frequencies", "apply_rope", "apply_mrope", "mrope_text_positions"]
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """f32[head_dim/2] inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x[..., :half], x[..., half:]) by ``angles`` [..., half]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles).astype(x.dtype)
+    sin = jnp.sin(angles).astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(
+    x: jnp.ndarray,  # [B, S, H, hd]
+    positions: jnp.ndarray,  # int32[B, S]
+    theta: float,
+) -> jnp.ndarray:
+    inv = rope_frequencies(x.shape[-1], theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * inv  # [B, S, hd/2]
+    return _rotate(x, angles[:, :, None, :])
+
+
+def apply_mrope(
+    x: jnp.ndarray,  # [B, S, H, hd]
+    positions: jnp.ndarray,  # int32[3, B, S]  (t, h, w streams)
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jnp.ndarray:
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_frequencies(hd, theta)  # [half]
+    # build a per-frequency position stream: first `sections[0]` freqs follow
+    # the temporal stream, next follow height, last follow width.
+    angle_parts = []
+    off = 0
+    for sec, pos in zip(sections, positions):
+        angle_parts.append(
+            pos[..., None].astype(jnp.float32) * inv[off : off + sec]
+        )  # [B, S, sec]
+        off += sec
+    angles = jnp.concatenate(angle_parts, axis=-1)  # [B, S, half]
+    return _rotate(x, angles[:, :, None, :])
+
+
+def mrope_text_positions(batch: int, seq: int) -> jnp.ndarray:
+    """Pure-text M-RoPE degenerates to three identical streams."""
+    p = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+    return jnp.broadcast_to(p[None], (3, batch, seq))

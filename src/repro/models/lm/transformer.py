@@ -1,0 +1,522 @@
+"""Decoder-only LM assembly: dense / MoE / hybrid (Jamba) / SSM (Mamba2).
+
+Layers are grouped into repeated **units** (the smallest repeating pattern of
+layer roles) and parameters are stacked with a leading unit axis, so the whole
+stack lowers as one ``lax.scan`` — compile time and HLO size are that of a single
+unit regardless of depth. Unit patterns:
+
+  dense LM            [(attn, dense)]                       U = L
+  granite-moe         [(attn, moe)]                         U = L
+  llama4 (interleave) [(attn, dense), (attn, moe)]          U = L/2
+  jamba (1:7, moe/2)  8 roles: attn at offset 4, moe odd    U = L/8
+  mamba2              [(mamba, none)]                       U = L
+
+Activation-checkpointing (``cfg.remat == "block"``) wraps the unit body in
+``jax.checkpoint`` so the scan saves only inter-unit residuals.
+
+The ``policy`` argument carries sharding constraints (distributed/sharding.py)
+applied to residual-stream activations and logits; ``None`` means single
+device (tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, pad_to_multiple
+from repro.models.lm.attention import (
+    AttnStatics,
+    attn_init,
+    attention,
+    decode_attention,
+)
+from repro.models.lm.mamba import (
+    mamba_apply,
+    mamba_decode,
+    mamba_init,
+    mamba_state_init,
+)
+from repro.models.lm.mlp import mlp_apply, mlp_init
+from repro.models.lm.moe import moe_apply, moe_init
+from repro.models.lm.norm import make_norm
+from repro.models.lm.rope import mrope_text_positions
+
+__all__ = [
+    "block_roles",
+    "init_lm",
+    "forward",
+    "init_cache",
+    "decode_step",
+    "make_statics",
+    "count_params",
+]
+
+Role = Tuple[str, str]  # (mixer, ffn)
+
+
+class _NoPolicy:
+    def res(self, x):  # residual-stream activations
+        return x
+
+    def logits(self, x):
+        return x
+
+    def qkv(self, q, k, v):
+        return q, k, v
+
+    def ebuf(self, xin):
+        return xin
+
+    def ebuf_out(self, y):
+        return y
+
+    def moe_groups(self, t):
+        return 1
+
+
+NO_POLICY = _NoPolicy()
+
+
+def block_roles(cfg: ModelConfig) -> List[Role]:
+    if cfg.is_hybrid:  # jamba: attn every `period`, MoE every `moe_period`
+        roles = []
+        for i in range(cfg.attn_layer_period):
+            mixer = "attn" if i == cfg.attn_layer_offset else "mamba"
+            ffn = (
+                "moe"
+                if cfg.is_moe and (i % cfg.moe_layer_period == cfg.moe_layer_period - 1)
+                else "dense"
+            )
+            roles.append((mixer, ffn))
+        return roles
+    if cfg.is_ssm_only:
+        return [("mamba", "none" if cfg.d_ff == 0 else "dense")]
+    if cfg.is_moe and cfg.moe_layer_period > 1:
+        return [("attn", "dense")] * (cfg.moe_layer_period - 1) + [("attn", "moe")]
+    if cfg.is_moe:
+        return [("attn", "moe")]
+    return [("attn", "dense")]
+
+
+def make_statics(cfg: ModelConfig, *, tp: int = 1, causal: bool = True) -> AttnStatics:
+    return AttnStatics(
+        cfg.num_heads,
+        cfg.num_kv_heads,
+        cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta,
+        mrope=cfg.pos_embed == "mrope",
+        mrope_sections=cfg.mrope_sections,
+        qk_norm=cfg.qk_norm,
+        impl=cfg.attention_impl,
+        causal=causal,
+        norm_eps=cfg.norm_eps,
+        use_rope=cfg.pos_embed in ("rope", "mrope"),
+    )
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------- init
+def _init_role(cfg: ModelConfig, role: Role, key, tp: int) -> Dict:
+    norm_init, _ = make_norm(cfg.norm)
+    mixer, ffn = role
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"norm_mixer": norm_init(cfg.d_model)}
+    if mixer == "attn":
+        p["attn"] = attn_init(
+            k1,
+            cfg.d_model,
+            cfg.num_heads,
+            cfg.num_kv_heads,
+            cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias,
+            qk_norm=cfg.qk_norm,
+            dtype=_dtype(cfg),
+        )
+    else:
+        p["mamba"] = mamba_init(
+            k1,
+            cfg.d_model,
+            d_inner=cfg.d_inner,
+            ssm_state=cfg.ssm_state,
+            heads=cfg.ssm_heads,
+            conv=cfg.ssm_conv,
+            dtype=_dtype(cfg),
+        )
+    if ffn != "none":
+        p["norm_ffn"] = norm_init(cfg.d_model)
+        if ffn == "moe":
+            p["moe"] = moe_init(
+                k2,
+                cfg.d_model,
+                cfg.d_ff,
+                cfg.num_experts,
+                cfg.mlp,
+                shared_expert=cfg.moe_shared_expert,
+                dtype=_dtype(cfg),
+            )
+        else:
+            p["mlp"] = mlp_init(
+                k2, cfg.d_model, cfg.d_ff, cfg.mlp, bias=cfg.mlp_bias, dtype=_dtype(cfg)
+            )
+    return p
+
+
+def init_lm(cfg: ModelConfig, key, *, tp: int = 1) -> Dict:
+    roles = block_roles(cfg)
+    assert cfg.num_layers % len(roles) == 0, (cfg.num_layers, roles)
+    units = cfg.num_layers // len(roles)
+    norm_init, _ = make_norm(cfg.norm)
+    keys = jax.random.split(key, len(roles) + 2)
+    vp = cfg.padded_vocab(tp)
+    dt = _dtype(cfg)
+    params: Dict[str, Any] = {
+        "embed": (
+            jax.random.normal(keys[-1], (vp, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dt),
+        "final_norm": norm_init(cfg.d_model),
+        "units": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[-2], (cfg.d_model, vp), jnp.float32)
+            / cfg.d_model**0.5
+        ).astype(dt)
+    for r, role in enumerate(roles):
+        role_keys = jax.random.split(keys[r], units)
+        params["units"].append(
+            jax.vmap(lambda k: _init_role(cfg, role, k, tp))(role_keys)
+        )
+    return params
+
+
+# ------------------------------------------------------------------ forward
+def _apply_role(cfg, role, st, p, x, positions, policy):
+    _, norm_apply = make_norm(cfg.norm)
+    mixer, ffn = role
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_apply(p["norm_mixer"], x, eps=cfg.norm_eps)
+    if mixer == "attn":
+        h = attention(p["attn"], h, st, positions, policy=policy)
+    else:
+        h = mamba_apply(
+            p["mamba"],
+            h,
+            d_inner=cfg.d_inner,
+            ssm_state=cfg.ssm_state,
+            heads=cfg.ssm_heads,
+            headdim=cfg.ssm_headdim,
+            chunk=cfg.ssm_chunk,
+            norm_eps=cfg.norm_eps,
+        )
+    x = policy.res(x + h)
+    if ffn != "none":
+        h = norm_apply(p["norm_ffn"], x, eps=cfg.norm_eps)
+        if ffn == "moe":
+            h, a = moe_apply(
+                p["moe"],
+                h,
+                num_experts=cfg.num_experts,
+                top_k=cfg.experts_per_token,
+                kind=cfg.mlp,
+                capacity_factor=cfg.capacity_factor,
+                policy=policy,
+            )
+            aux = aux + a
+        else:
+            h = mlp_apply(p["mlp"], h, cfg.mlp)
+        x = policy.res(x + h)
+    return x, aux
+
+
+def _embed_in(cfg, params, batch, policy):
+    if "embeds" in batch:
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = params["embed"][batch["tokens"]]
+    b, s = x.shape[:2]
+    if cfg.pos_embed == "sin":
+        half = cfg.d_model // 2
+        pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+        freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) / half * 9.21)
+        ang = pos * freq[None]
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+        x = x + pe[None].astype(x.dtype)
+    if cfg.pos_embed == "rope":
+        positions = batch.get(
+            "positions",
+            jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s)),
+        )
+    elif cfg.pos_embed == "mrope":
+        positions = batch.get("positions", mrope_text_positions(b, s))
+    else:
+        positions = None
+    return policy.res(x), positions
+
+
+def _lm_head(cfg, params, x, policy):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    return policy.logits(logits.astype(jnp.float32))
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    policy=NO_POLICY,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits [B,S,Vp] f32, moe aux loss)."""
+    roles = block_roles(cfg)
+    st = make_statics(cfg)
+    x, positions = _embed_in(cfg, params, batch, policy)
+
+    def unit(x, unit_params):
+        aux = jnp.zeros((), jnp.float32)
+        for role, p in zip(roles, unit_params):
+            x, a = _apply_role(cfg, role, st, p, x, positions, policy)
+            aux += a
+        return x, aux
+
+    if cfg.remat == "block":
+        unit = jax.checkpoint(unit)
+
+    if cfg.scan_layers:
+        def scan_body(x, unit_params):
+            return unit(x, unit_params)
+
+        x, auxs = jax.lax.scan(scan_body, x, tuple(params["units"]))
+        aux = auxs.sum()
+    else:
+        units = jax.tree_util.tree_leaves(params["units"][0])[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        for u in range(units):
+            up = jax.tree.map(lambda a: a[u], params["units"])
+            x, a = unit(x, tuple(up))
+            aux += a
+
+    _, norm_apply = make_norm(cfg.norm)
+    x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+    return _lm_head(cfg, params, x, policy), aux
+
+
+def prefill(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],
+    max_len: int,
+    *,
+    policy=NO_POLICY,
+) -> Tuple[jnp.ndarray, List[Dict], jnp.ndarray]:
+    """Process the prompt once, returning (logits [B,S,Vp], cache, cache_len).
+
+    One forward pass that also writes every layer's K/V (and SSM final state)
+    into a decode cache of capacity ``max_len`` — the serving prefill path.
+    """
+    roles = block_roles(cfg)
+    st = make_statics(cfg)
+    _, norm_apply = make_norm(cfg.norm)
+    x, positions = _embed_in(cfg, params, batch, policy)
+    b, s = x.shape[:2]
+    dt = _dtype(cfg)
+
+    def unit(x, unit_params):
+        cache_out = []
+        for role, p in zip(roles, unit_params):
+            mixer, ffn = role
+            h = norm_apply(p["norm_mixer"], x, eps=cfg.norm_eps)
+            if mixer == "attn":
+                h, k, v = attention(p["attn"], h, st, positions, return_kv=True,
+                                    policy=policy)
+                pad = ((0, 0), (0, max_len - s), (0, 0), (0, 0))
+                if cfg.kv_cache_dtype == "int8":
+                    from repro.models.lm.attention import quantize_kv
+
+                    kq, ks = quantize_kv(k)
+                    vq, vs = quantize_kv(v)
+                    spad = ((0, 0), (0, max_len - s), (0, 0))
+                    cache_out.append({
+                        "k": jnp.pad(kq, pad), "v": jnp.pad(vq, pad),
+                        "k_scale": jnp.pad(ks, spad),
+                        "v_scale": jnp.pad(vs, spad),
+                    })
+                else:
+                    cache_out.append(
+                        {"k": jnp.pad(k.astype(dt), pad),
+                         "v": jnp.pad(v.astype(dt), pad)}
+                    )
+            else:
+                h, state = mamba_apply(
+                    p["mamba"], h,
+                    d_inner=cfg.d_inner, ssm_state=cfg.ssm_state,
+                    heads=cfg.ssm_heads, headdim=cfg.ssm_headdim,
+                    chunk=cfg.ssm_chunk, norm_eps=cfg.norm_eps,
+                    return_state=True,
+                )
+                cache_out.append(state)
+            x = policy.res(x + h)
+            if ffn != "none":
+                h = norm_apply(p["norm_ffn"], x, eps=cfg.norm_eps)
+                if ffn == "moe":
+                    h, _ = moe_apply(
+                        p["moe"], h,
+                        num_experts=cfg.num_experts, top_k=cfg.experts_per_token,
+                        kind=cfg.mlp, capacity_factor=cfg.capacity_factor,
+                        policy=policy,
+                    )
+                else:
+                    h = mlp_apply(p["mlp"], h, cfg.mlp)
+                x = policy.res(x + h)
+        return x, tuple(cache_out)
+
+    if cfg.scan_layers:
+        x, cache = jax.lax.scan(lambda c, p: unit(c, p), x, tuple(params["units"]))
+        cache = list(cache)
+    else:
+        units = jax.tree_util.tree_leaves(params["units"][0])[0].shape[0]
+        ys = []
+        for u in range(units):
+            up = jax.tree.map(lambda a: a[u], params["units"])
+            x, c = unit(x, tuple(up))
+            ys.append(c)
+        cache = [jax.tree.map(lambda *xs: jnp.stack(xs), *[y[r] for y in ys])
+                 for r in range(len(roles))]
+
+    x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = _lm_head(cfg, params, x, policy)
+    return logits, cache, jnp.asarray(s, jnp.int32)
+
+
+# ------------------------------------------------------------------- decode
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, *, tp: int = 1, dtype=None
+) -> List[Dict]:
+    """Per-role stacked cache pytree ([U, ...] leading axis, scan-compatible)."""
+    roles = block_roles(cfg)
+    units = cfg.num_layers // len(roles)
+    dt = dtype or _dtype(cfg)
+    cache = []
+    int8kv = cfg.kv_cache_dtype == "int8"
+    for mixer, _ in roles:
+        if mixer == "attn":
+            kv = cfg.num_kv_heads
+            hd = cfg.resolved_head_dim
+            kdt = jnp.int8 if int8kv else dt
+            entry = {
+                "k": jnp.zeros((units, batch, max_len, kv, hd), kdt),
+                "v": jnp.zeros((units, batch, max_len, kv, hd), kdt),
+            }
+            if int8kv:
+                entry["k_scale"] = jnp.zeros((units, batch, max_len, kv), jnp.float32)
+                entry["v_scale"] = jnp.zeros((units, batch, max_len, kv), jnp.float32)
+            cache.append(entry)
+        else:
+            st = mamba_state_init(
+                batch,
+                d_inner=cfg.d_inner,
+                ssm_state=cfg.ssm_state,
+                heads=cfg.ssm_heads,
+                headdim=cfg.ssm_headdim,
+                conv=cfg.ssm_conv,
+            )
+            cache.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (units, *a.shape)), st))
+    return cache
+
+
+def decode_step(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict[str, jnp.ndarray],  # tokens [B,1] or embeds [B,1,D]
+    cache: List[Dict],
+    cache_len: jnp.ndarray,  # int32[]
+    *,
+    policy=NO_POLICY,
+) -> Tuple[jnp.ndarray, List[Dict]]:
+    """One serving step: returns (logits [B, Vp] f32, updated cache)."""
+    roles = block_roles(cfg)
+    st = make_statics(cfg)
+    _, norm_apply = make_norm(cfg.norm)
+    if "embeds" in batch:
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = params["embed"][batch["tokens"]]
+
+    def unit(x, scanned):
+        unit_params, unit_cache = scanned
+        new_cache = []
+        for role, p, c in zip(roles, unit_params, unit_cache):
+            mixer, ffn = role
+            h = norm_apply(p["norm_mixer"], x, eps=cfg.norm_eps)
+            if mixer == "attn":
+                if "k_scale" in c:  # int8 KV cache
+                    h, k_new, v_new, ks, vs = decode_attention(
+                        p["attn"], h, st, c["k"], c["v"], cache_len,
+                        k_scale=c["k_scale"], v_scale=c["v_scale"],
+                    )
+                    new_cache.append(
+                        {"k": k_new, "v": v_new, "k_scale": ks, "v_scale": vs}
+                    )
+                else:
+                    h, k_new, v_new = decode_attention(
+                        p["attn"], h, st, c["k"], c["v"], cache_len
+                    )
+                    new_cache.append({"k": k_new, "v": v_new})
+            else:
+                h, c_new = mamba_decode(
+                    p["mamba"],
+                    h,
+                    c,
+                    d_inner=cfg.d_inner,
+                    ssm_state=cfg.ssm_state,
+                    heads=cfg.ssm_heads,
+                    headdim=cfg.ssm_headdim,
+                    norm_eps=cfg.norm_eps,
+                )
+                new_cache.append(c_new)
+            x = x + h
+            if ffn != "none":
+                h = norm_apply(p["norm_ffn"], x, eps=cfg.norm_eps)
+                if ffn == "moe":
+                    h, _ = moe_apply(
+                        p["moe"],
+                        h,
+                        num_experts=cfg.num_experts,
+                        top_k=cfg.experts_per_token,
+                        kind=cfg.mlp,
+                        capacity_factor=cfg.capacity_factor,
+                        policy=policy,
+                    )
+                else:
+                    h = mlp_apply(p["mlp"], h, cfg.mlp)
+                x = x + h
+        return x, tuple(new_cache)
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(unit, x, (tuple(params["units"]), tuple(cache)))
+        new_cache = list(new_cache)
+    else:
+        units = jax.tree_util.tree_leaves(cache[0])[0].shape[0]
+        ys = []
+        for u in range(units):
+            up = jax.tree.map(lambda a: a[u], params["units"])
+            uc = jax.tree.map(lambda a: a[u], cache)
+            x, nc = unit(x, (tuple(up), tuple(uc)))
+            ys.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
+        new_cache = list(new_cache)
+
+    x = norm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = _lm_head(cfg, params, x, policy)
+    return logits[:, 0], new_cache
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,15 @@
+"""LR schedules: linear warmup + cosine decay (pure functions of step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine"]
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    """lr(step): linear 0→peak over `warmup`, cosine peak→floor·peak by `total`."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / max(warmup, 1)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,65 @@
+"""Serving engine: batched prefill + greedy decode over the KV-cache stack.
+
+The event-driven idea shows up here as **continuous batching metadata**: each
+sequence in the batch carries its own length; finished sequences are masked
+(their slot is reusable by the caller — the LM analogue of nodeslot
+recycling). Prefill is one forward pass that also writes every layer's cache
+(models/lm/transformer.prefill); decode is one token per step for the whole
+batch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.api import model_decode_step, model_prefill
+
+__all__ = ["ServeEngine"]
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int, policy=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.policy = policy
+        self._decode = jax.jit(self._decode_impl)
+
+    def _decode_impl(self, params, tok, cache, cache_len):
+        kw = {} if self.policy is None else {"policy": self.policy}
+        logits, cache = model_decode_step(
+            params, self.cfg, {"tokens": tok}, cache, cache_len, **kw
+        )
+        return jnp.argmax(logits[..., : self.cfg.vocab_size], -1).astype(jnp.int32), cache
+
+    def generate(
+        self,
+        prompts: jnp.ndarray,  # int32[B, P]
+        *,
+        max_new_tokens: int,
+        eos_id: Optional[int] = None,
+    ) -> jnp.ndarray:
+        b, p = prompts.shape
+        assert p + max_new_tokens <= self.max_len, "max_len too small"
+        kw = {} if self.policy is None else {"policy": self.policy}
+        logits, cache, cache_len = model_prefill(
+            self.params, self.cfg, {"tokens": prompts}, self.max_len, **kw
+        )
+        next_tok = jnp.argmax(
+            logits[:, -1, : self.cfg.vocab_size], -1
+        ).astype(jnp.int32)
+        out = [prompts]
+        done = jnp.zeros((b,), bool)
+        for _ in range(max_new_tokens):
+            out.append(next_tok[:, None])
+            if eos_id is not None:
+                done = done | (next_tok == eos_id)
+                if bool(done.all()):
+                    break
+            tok, cache = self._decode(self.params, next_tok[:, None], cache, cache_len)
+            cache_len = cache_len + 1
+            next_tok = jnp.where(done, next_tok, tok)
+        return jnp.concatenate(out, axis=1)

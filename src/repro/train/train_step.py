@@ -1,0 +1,81 @@
+"""train_step / serve_step factories — the functions the dry-run lowers.
+
+``make_train_step(cfg)`` builds the full optimization step: loss (CE + MoE
+aux) → grads → optional gradient compression → AdamW update. The returned
+function is pure, jit/pjit-friendly, and is exactly what launch/dryrun.py
+lowers onto the production mesh and launch/train.py runs on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.api import loss_fn, model_decode_step, model_init_cache
+from repro.models.lm.transformer import NO_POLICY
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+
+__all__ = ["TrainState", "make_train_step", "make_serve_step", "init_train_state"]
+
+
+class TrainState(dict):
+    """Plain-dict train state: {params, opt (AdamWState), step}."""
+
+
+def init_train_state(cfg: ModelConfig, params, opt_cfg: AdamWConfig = AdamWConfig()):
+    return {"params": params, "opt": adamw_init(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    policy=NO_POLICY,
+    schedule: Optional[Callable] = None,
+    total_steps: int = 10_000,
+    warmup: int = 100,
+    compressor=None,  # distributed/compression.Compressor or None
+) -> Callable:
+    sched = schedule or functools.partial(
+        warmup_cosine, peak_lr=opt_cfg.lr, warmup=warmup, total=total_steps
+    )
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        def _loss(p):
+            return loss_fn(p, cfg, batch, policy=policy)
+
+        (loss, metrics), grads = jax.value_and_grad(_loss, has_aux=True)(
+            state["params"]
+        )
+        if compressor is not None:
+            grads, state_c = compressor.compress_decompress(
+                grads, state.get("compress")
+            )
+        lr = sched(state["step"] + 1)  # 1-indexed: warmup starts at lr>0
+        params, opt, opt_metrics = adamw_update(
+            grads, state["opt"], state["params"], opt_cfg, lr=lr
+        )
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        if compressor is not None:
+            new_state["compress"] = state_c
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, *, policy=NO_POLICY) -> Callable:
+    """One batched decode step (the function decode_* shape cells lower)."""
+
+    def serve_step(params, batch: Dict, cache, cache_len):
+        logits, cache = model_decode_step(
+            params, cfg, batch, cache, cache_len, policy=policy
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+
+    return serve_step

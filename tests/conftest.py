@@ -1,0 +1,29 @@
+"""Shared fixtures/strategies. NOTE: no XLA_FLAGS here — tests must see the
+single real CPU device; only launch/dryrun.py fakes 512 devices."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# Property tests trace JAX under the hood — generous deadlines, no shrink spam.
+settings.register_profile(
+    "repro",
+    deadline=None,
+    max_examples=25,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")
+
+
+def random_graph(n: int, mean_deg: float, seed: int):
+    from repro.graphs.datasets import make_lognormal_graph
+
+    return make_lognormal_graph(n, mean_deg, seed=seed)
+
+
+@pytest.fixture(scope="session")
+def small_cora():
+    from repro.graphs import make_dataset
+
+    return make_dataset("cora", max_nodes=200, max_feature_dim=24, seed=0)

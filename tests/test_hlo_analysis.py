@@ -1,0 +1,65 @@
+"""HLO collective parser: shape-byte math, loop multipliers, ring costs."""
+from __future__ import annotations
+
+import pytest
+
+from repro.launch.hlo_analysis import (
+    CollectiveStats,
+    _shape_bytes,
+    _split_computations,
+    _trip_count,
+    analyze_collectives,
+)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[2,3,4]") == 48
+    assert _shape_bytes("f32[128]") == 512
+    assert _shape_bytes("(f32[2,2], bf16[4])") == 24  # tuple shapes sum
+    assert _shape_bytes("pred[]") == 1
+    assert _shape_bytes("badtype[10]") == 0
+
+
+FAKE_HLO = """\
+HloModule test
+
+%cond.1 (p: (s32[], f32[8])) -> pred[] {
+  %gte = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+}
+
+%body.1 (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %gte2 = f32[8] get-tuple-element(%p), index=1
+  %ar = f32[8]{0} all-reduce(%gte2), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[8]) tuple(%gte2, %ar)
+}
+
+ENTRY %main (x: f32[16]) -> f32[16] {
+  %ag = f32[16]{0} all-gather(%x), dimensions={0}
+  %w = (s32[], f32[8]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[16] add(%ag, %ag)
+}
+"""
+
+
+def test_loop_multiplier_and_kinds():
+    stats = analyze_collectives(FAKE_HLO, ring_size=4)
+    # all-gather in entry: once, 64 bytes; all-reduce in loop body: 5 × 32B
+    assert stats.count_by_kind["all-gather"] == 1
+    assert stats.bytes_by_kind["all-gather"] == 64
+    assert stats.count_by_kind["all-reduce"] == 5
+    assert stats.bytes_by_kind["all-reduce"] == 5 * 32
+    # ring wire: AG 64*(3/4) + AR 2*160*(3/4)
+    assert stats.wire_bytes == pytest.approx(64 * 0.75 + 2 * 160 * 0.75)
+
+
+def test_split_computations_finds_entry():
+    comps = _split_computations(FAKE_HLO)
+    assert comps["__entry__"] == "main"
+    assert "cond.1" in comps and "body.1" in comps
+
+
+def test_trip_count_from_condition():
+    comps = _split_computations(FAKE_HLO)
+    assert _trip_count(comps["cond.1"]) == 5

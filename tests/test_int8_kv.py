@@ -1,0 +1,41 @@
+"""int8 KV cache: decode quality vs full-precision cache (the decode lever)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models.api import model_init, model_init_cache, model_decode_step, model_prefill
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "jamba-v0.1-52b"])
+def test_int8_kv_close_to_bf16(arch):
+    cfg = get_config(arch, reduced=True)
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8",
+                               capacity_factor=64.0 if cfg.is_moe else cfg.capacity_factor)
+    cfg = dataclasses.replace(cfg, capacity_factor=cfg8.capacity_factor)
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    B, P = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab_size)
+
+    def run(c):
+        logits, cache, n = model_prefill(params, c, {"tokens": toks}, 24)
+        out = [logits[:, -1]]
+        for t in range(4):
+            lg, cache = model_decode_step(
+                params, c, {"tokens": jnp.ones((B, 1), jnp.int32)}, cache, n + t
+            )
+            out.append(lg)
+        return jnp.stack(out)
+
+    full = run(cfg)
+    q8 = run(cfg8)
+    rel = float(jnp.abs(full - q8).max() / (jnp.abs(full).max() + 1e-9))
+    assert rel < 0.05, f"{arch}: int8 KV rel err {rel}"
+    # top-1 agreement on every step
+    agree = float((jnp.argmax(full, -1) == jnp.argmax(q8, -1)).mean())
+    assert agree >= 0.9, agree

@@ -1,0 +1,110 @@
+"""Quantization (Eq. 5), STE, Degree-Quant masks, Eq. 6 allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core.degree_quant import (
+    DegreeQuantConfig,
+    allocate_nodeslots,
+    inference_precision_tags,
+    protection_probabilities,
+    sample_protection_mask,
+)
+from repro.core.quantization import (
+    compute_scale_zp,
+    dequantize,
+    fake_quant,
+    quantize,
+    quantize_per_channel,
+)
+from repro.graphs.datasets import make_lognormal_graph
+
+
+@given(
+    scale=st.floats(0.01, 10.0),
+    seed=st.integers(0, 1000),
+    symmetric=st.booleans(),
+)
+def test_quant_dequant_error_bounded(scale, seed, symmetric):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32) * scale)
+    qp = compute_scale_zp(x, symmetric=symmetric)
+    xq = quantize(x, qp)
+    xhat = dequantize(xq, qp)
+    # max error is half a quantization step (plus float slop)
+    step = float(np.max(np.asarray(qp.scale)))
+    assert float(jnp.abs(x - xhat).max()) <= 0.5 * step * 1.01 + 1e-6
+
+
+def test_per_channel_beats_per_tensor():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((64, 8)).astype(np.float32)
+    w[:, 3] *= 100.0  # one outlier channel ruins per-tensor resolution
+    w = jnp.asarray(w)
+    keep = jnp.asarray([c for c in range(8) if c != 3])
+    wq_pc, qp_pc = quantize_per_channel(w, axis=-1)
+    # error on the *well-behaved* channels: per-channel scales are immune to
+    # the outlier channel, per-tensor resolution is ruined by it
+    err_pc = float(jnp.abs(dequantize(wq_pc, qp_pc) - w)[:, keep].max())
+    qp_pt = compute_scale_zp(w, symmetric=True)
+    err_pt = float(jnp.abs(dequantize(quantize(w, qp_pt), qp_pt) - w)[:, keep].max())
+    assert err_pc < 0.25 * err_pt
+
+
+def test_fake_quant_ste_gradient():
+    x = jnp.linspace(-3.0, 3.0, 61)
+    qp = compute_scale_zp(jnp.asarray([-1.0, 1.0]), symmetric=True)  # clips at ±1
+
+    def f(x):
+        return jnp.sum(fake_quant(x, qp) ** 2)
+
+    g = jax.grad(f)(x)
+    inside = jnp.abs(x / qp.scale) <= 127
+    # gradient flows inside the representable range, zero outside
+    assert bool(jnp.all(g[~inside] == 0.0))
+    assert bool(jnp.any(g[inside] != 0.0))
+
+
+def test_protection_probability_monotone_in_degree():
+    g = make_lognormal_graph(300, 6.0, seed=5)
+    p = protection_probabilities(g, DegreeQuantConfig(p_min=0.0, p_max=0.2))
+    deg = g.degrees
+    order = np.argsort(deg)
+    ps = p[order]
+    assert (np.diff(ps[np.argsort(deg[order], kind="stable")]) >= -1e-7).all()
+    assert p.min() >= 0.0 and p.max() <= 0.2 + 1e-7
+
+
+def test_sample_protection_mask_rate():
+    g = make_lognormal_graph(5000, 6.0, seed=6)
+    cfg = DegreeQuantConfig(p_min=0.1, p_max=0.1)  # uniform 10%
+    rng = np.random.default_rng(0)
+    mask = sample_protection_mask(g, cfg, rng)
+    assert abs(mask.mean() - 0.1) < 0.02
+
+
+@given(ratio=st.floats(0.001, 0.2))
+def test_inference_tags_ratio(ratio):
+    g = make_lognormal_graph(1000, 5.0, seed=7)
+    tags = inference_precision_tags(g, DegreeQuantConfig(float_ratio=ratio))
+    got = (tags == "float").mean()
+    assert abs(got - ratio) <= 1.0 / 1000 + 1e-9
+
+
+def test_eq6_nodeslot_allocation():
+    # Eq. 6: N_p = ceil(min_r R^max_r / C_r); float is ~10x costlier → few slots
+    budget = {
+        "float": {"LUT": 1000, "DSP": 40},
+        "int8": {"LUT": 9000, "DSP": 360},
+    }
+    cost = {
+        "float": {"LUT": 900, "DSP": 35},
+        "int8": {"LUT": 150, "DSP": 6},
+    }
+    slots = allocate_nodeslots(budget, cost)
+    assert slots["float"] == 2  # ceil(min(1000/900, 40/35)) = ceil(1.11) = 2
+    assert slots["int8"] == 60  # ceil(min(60, 60)) = 60
