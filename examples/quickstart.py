@@ -1,50 +1,69 @@
-"""Quickstart: event-driven mixed-precision GCN inference with AMPLE-on-TPU.
+"""Quickstart: config-driven, event-driven mixed-precision GNN inference.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a synthetic Cora-statistics graph, runs GCN through the AmpleEngine
-(event-driven tiles + Degree-Quant int8/float split), and compares against
-the dense float oracle — the 60-second tour of the paper's three ideas.
+The 60-second tour of the unified API: resolve a ``family="gnn"``
+ModelConfig from the registry (``get_config("ample-gcn")``), initialise and
+run it through the same ``model_init`` / ``model_forward`` surface the LM
+families use (the batch carries ``graph`` + ``features``), compare against
+the dense float oracle, then serve repeat traffic through the plan-cached
+``GNNServeEngine`` to see cold-plan vs cache-hit latency.
 """
-import time
+import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import AmpleEngine, EngineConfig
-from repro.graphs import add_self_loops, make_dataset
-from repro.models.gnn import gcn
+from repro.configs.base import get_config
+from repro.core import AmpleEngine, compile_plans
+from repro.graphs import make_dataset
+from repro.models.api import model_forward, model_init
+from repro.models.gnn import api as gnn_api
+from repro.serve.gnn_engine import GNNServeEngine
 
 
 def main():
-    # 1. A graph with Cora's published statistics (Table 4).
-    g = add_self_loops(make_dataset("cora", seed=0))
-    g = g.with_features(make_dataset("cora", seed=0).features)
+    # 1. A graph with Cora's published statistics (Table 4) and the paper's
+    #    GCN as a registry config (arch, dims, precision policy).
+    cfg = dataclasses.replace(get_config("ample-gcn", reduced=True), d_model=24)
+    g = make_dataset("cora", max_feature_dim=cfg.d_model, seed=0)
     print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges, "
           f"mean degree {g.mean_degree:.1f}, features {g.feature_dim}")
+    print(f"config: {cfg.name} arch={cfg.gnn_arch} dims={cfg.gnn_layer_dims} "
+          f"precision={cfg.gnn_precision}")
 
-    # 2. The engine compiles the event-driven ExecutionPlan (the nodeslot
-    #    schedule) and the Degree-Quant precision tags.
-    eng = AmpleEngine(g, EngineConfig(mixed_precision=True, edges_per_tile=256))
+    # 2. compile_plans is the host-side planner (NID programming): the
+    #    event-driven nodeslot schedule + Degree-Quant precision tags, as a
+    #    reusable, cacheable ExecutionPlan.
+    prepared = gnn_api.prepare_graph(cfg, g)  # GCN: explicit self-loops
+    plan = compile_plans(prepared, gnn_api.engine_config(cfg),
+                         modes=(gnn_api.agg_mode(cfg),))
+    eng = AmpleEngine(prepared, plan=plan)
     rep = eng.occupancy_report()
     print(f"event-driven lane occupancy:  {rep['event_driven_lane_occupancy']:.3f}")
     print(f"double-buffer pipeline gaps:  {rep['double_buffer_pipeline_gap_ratio']:.3f}")
     print(f"float-protected nodes:        {rep['float_node_ratio']:.1%} (Table 4: 2.1%)")
 
-    # 3. Two-layer GCN, mixed precision vs dense float oracle.
-    params = gcn.init(jax.random.PRNGKey(0), [g.feature_dim, 64, 7])
+    # 3. The family-agnostic model API: same five entry points as the LMs.
+    params = model_init(cfg, jax.random.PRNGKey(0))
     x = jnp.asarray(g.features)
-    t0 = time.time()
-    y = gcn.apply(params, eng, x)
-    y.block_until_ready()
-    print(f"mixed-precision inference: {(time.time() - t0) * 1e3:.1f} ms "
-          f"(CPU; the Pallas kernels target TPU)")
+    y, _ = model_forward(params, cfg, {"graph": g, "features": x, "engine": eng})
 
-    yref = gcn.apply_reference(params, g, x)
+    yref = gnn_api.gnn_reference(cfg, params, g, x)
     rel = float(jnp.abs(y - yref).max() / (jnp.abs(yref).max() + 1e-9))
     agree = float((jnp.argmax(y, -1) == jnp.argmax(yref, -1)).mean())
     print(f"vs float oracle: max rel err {rel:.4f}, argmax agreement {agree:.1%}")
+
+    # 4. Serving: the plan is the cacheable artifact — repeat traffic on the
+    #    same graph structure skips the planner (nodeslot recycling).
+    serve = GNNServeEngine(cfg, params)
+    cold = serve.infer(g, g.features)
+    warm = serve.infer(g, g.features)
+    print(f"serve cold: plan {cold.plan_ms:.1f} ms + run {cold.run_ms:.1f} ms "
+          f"(cache_hit={cold.cache_hit})")
+    print(f"serve warm: plan {warm.plan_ms:.1f} ms + run {warm.run_ms:.1f} ms "
+          f"(cache_hit={warm.cache_hit}, planner_calls="
+          f"{serve.stats['planner_calls']})")
 
 
 if __name__ == "__main__":

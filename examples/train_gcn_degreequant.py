@@ -10,12 +10,14 @@ Node-classification labels come from a planted feature/community model so
 accuracy is meaningful.
 """
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import get_config
 from repro.core import AmpleEngine, EngineConfig
 from repro.core.degree_quant import DegreeQuantConfig, sample_protection_mask
 from repro.core.quantization import compute_scale_zp, fake_quant
@@ -56,7 +58,11 @@ def main():
 
     dq = DegreeQuantConfig(p_min=0.0, p_max=0.2)
     eng_float = AmpleEngine(g, EngineConfig(mixed_precision=False))
-    params = gcn.init(jax.random.PRNGKey(0), [g.feature_dim, 32, num_classes])
+    cfg = dataclasses.replace(
+        get_config("ample-gcn", reduced=True),
+        d_model=g.feature_dim, d_ff=32, vocab_size=num_classes,
+    )
+    params = gcn.init(cfg, jax.random.PRNGKey(0))
     opt_cfg = AdamWConfig(lr=args.lr, weight_decay=5e-3)
     opt = adamw_init(params)
     rng = np.random.default_rng(3)
@@ -93,9 +99,9 @@ def main():
         pred = jnp.argmax(logits, -1)
         return float((pred == labels)[jnp.asarray(test_mask)].mean())
 
-    acc_float = accuracy(lambda: gcn.apply(params, eng_float, x))
+    acc_float = accuracy(lambda: gcn.apply(cfg, params, eng_float, x))
     eng_int8 = AmpleEngine(g, EngineConfig(mixed_precision=True))
-    acc_mixed = accuracy(lambda: gcn.apply(params, eng_int8, x))
+    acc_mixed = accuracy(lambda: gcn.apply(cfg, params, eng_int8, x))
     print(f"\ntest accuracy  float32: {acc_float:.3f}   "
           f"mixed int8/float (deployed): {acc_mixed:.3f}   "
           f"quantization cost: {acc_float - acc_mixed:+.3f}")

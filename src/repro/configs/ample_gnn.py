@@ -1,28 +1,39 @@
 """The paper's own workload: GCN/GIN/GraphSAGE inference over Table-4 graphs.
 
-Registered so ``--arch ample-gcn`` works in the launcher and the distributed
-dry-run exercises the event-driven engine at Yelp scale (717k nodes) on the
-production mesh. d_model carries the feature width, d_ff the hidden width and
-vocab_size the class count (see launch/dryrun.py for the GNN input specs).
+One registered config per Table-3 model, all family="gnn" and dispatched
+through the unified model API (models/api.py -> models/gnn/api.py). d_model
+carries the feature width, d_ff the hidden width and vocab_size the class
+count (see launch/dryrun.py for the GNN input specs); ``gnn_arch`` selects
+the registry entry, ``gnn_precision`` the Degree-Quant policy. The FULL
+configs are Yelp-scale (717k nodes, 300 features, 100 classes); the REDUCED
+ones smoke-test on CPU.
 """
+import functools
+
 from repro.configs.base import ModelConfig, register
 
 
-def full() -> ModelConfig:
+def _full(arch: str) -> ModelConfig:
     return ModelConfig(
-        name="ample-gcn", family="gnn",
+        name=f"ample-{arch}", family="gnn", gnn_arch=arch,
         num_layers=2, d_model=300, num_heads=1, num_kv_heads=1,
         d_ff=256, vocab_size=100,  # yelp: 300 features, 100 classes
         dtype="float32",
     )
 
 
-def reduced() -> ModelConfig:
+def _reduced(arch: str) -> ModelConfig:
     return ModelConfig(
-        name="ample-gcn", family="gnn", reduced=True,
+        name=f"ample-{arch}", family="gnn", gnn_arch=arch, reduced=True,
         num_layers=2, d_model=32, num_heads=1, num_kv_heads=1,
         d_ff=16, vocab_size=7, dtype="float32",
+        gnn_edges_per_tile=64,
     )
 
 
-register("ample-gcn", full, reduced)
+for _arch in ("gcn", "gin", "sage"):
+    register(
+        f"ample-{_arch}",
+        functools.partial(_full, _arch),
+        functools.partial(_reduced, _arch),
+    )

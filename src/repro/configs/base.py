@@ -75,6 +75,13 @@ class ModelConfig:
     # --- enc-dec ---
     encoder_layers: int = 0  # >0 => encoder-decoder (seamless)
 
+    # --- GNN (family="gnn"): drives models/gnn/api.py ---
+    gnn_arch: str = "gcn"  # gcn | gin | sage (registry key)
+    gnn_hidden: Tuple[int, ...] = ()  # explicit hidden widths; () -> (d_ff,)*(L-1)
+    gnn_agg: str = ""  # aggregation coefficient mode override ("" = arch default)
+    gnn_precision: str = "mixed"  # mixed (Degree-Quant int8/float) | float
+    gnn_edges_per_tile: int = 256  # event-driven tile width (AGE lanes)
+
     # --- frontend stubs (vlm/audio): inputs arrive as embeddings ---
     embeds_input: bool = False
 
@@ -98,6 +105,17 @@ class ModelConfig:
     @property
     def is_moe(self) -> bool:
         return self.num_experts > 0
+
+    @property
+    def gnn_layer_dims(self) -> Tuple[int, ...]:
+        """[feature_dim, hidden..., num_classes] for the GNN family.
+
+        d_model carries the input feature width and vocab_size the class
+        count (matching the dry-run's reuse of the LM fields); hidden widths
+        default to d_ff repeated across the interior layers.
+        """
+        hidden = self.gnn_hidden or (self.d_ff,) * max(self.num_layers - 1, 0)
+        return (self.d_model, *hidden, self.vocab_size)
 
     @property
     def is_hybrid(self) -> bool:

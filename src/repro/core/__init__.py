@@ -3,6 +3,9 @@ from repro.core.scheduler import (
     EdgeTilePlan, BucketPlan, PaddedPlan,
     build_edge_tile_plan, build_bucket_plan, build_padded_plan,
     build_mixed_precision_plans, pack_segments,
+    graph_fingerprint, plan_fingerprint,
 )
 from repro.core.degree_quant import DegreeQuantConfig, inference_precision_tags, sample_protection_mask
-from repro.core.message_passing import AmpleEngine, EngineConfig
+from repro.core.message_passing import (
+    AmpleEngine, EngineConfig, ExecutionPlan, aggregation_coefficients, compile_plans,
+)

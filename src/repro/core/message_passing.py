@@ -14,7 +14,8 @@ dense pre-projection for GraphSAGE (φ = σ(W3 x_j + b)).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+import hashlib
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,7 +35,13 @@ from repro.core.transformation import (
 )
 from repro.graphs.csr import Graph, gcn_norm_coeffs
 
-__all__ = ["EngineConfig", "AmpleEngine"]
+__all__ = [
+    "EngineConfig",
+    "ExecutionPlan",
+    "compile_plans",
+    "aggregation_coefficients",
+    "AmpleEngine",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,51 +53,172 @@ class EngineConfig:
     dq: DegreeQuantConfig = dataclasses.field(default_factory=DegreeQuantConfig)
 
 
-class AmpleEngine:
-    """Per-graph execution engine (plans are built once, reused every layer).
+def aggregation_coefficients(g: Graph, mode: str) -> np.ndarray:
+    """Per-edge coefficients folding the aggregation function into the plan.
 
-    Aggregation coefficient modes:
       * "sum"  — coeff 1 (GIN)
       * "mean" — coeff 1/deg(i) (GraphSAGE)
       * "gcn"  — coeff 1/√(d̂_i d̂_j) (GCN; self-loops must already be present)
     """
+    if mode == "sum":
+        return np.ones(g.num_edges, np.float32)
+    if mode == "mean":
+        deg = np.maximum(g.degrees, 1).astype(np.float32)
+        return (1.0 / np.repeat(deg, g.degrees)).astype(np.float32)
+    if mode == "gcn":
+        return gcn_norm_coeffs(g)
+    raise ValueError(f"unknown aggregation mode {mode!r}")
 
-    def __init__(self, g: Graph, cfg: EngineConfig = EngineConfig()):
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExecutionPlan:
+    """The compiled, graph-specific half of the engine — NID programming.
+
+    Everything the planner derives from (graph structure, EngineConfig) lives
+    here: the Degree-Quant precision tags, the per-precision node groups the
+    FTE partitions over, and one mixed-precision tile-plan set per aggregation
+    coefficient mode. It holds no jnp state and no weight caches, so it is a
+    pure host-side artifact: hashable by fingerprint, safe to share across
+    engines, and the unit the serving layer caches (a plan compiled for one
+    request is bitwise-valid for every later request on the same structure).
+    """
+
+    fingerprint: str
+    graph_fp: str  # structure hash of the graph the plan was compiled for
+    num_nodes: int
+    num_edges: int
+    cfg: EngineConfig
+    precision_tags: np.ndarray  # str[N]
+    node_groups: Mapping[str, np.ndarray]  # tag -> node ids
+    mode_plans: Mapping[str, Mapping[str, sched.EdgeTilePlan]]  # mode -> tag -> plan
+
+    def __hash__(self) -> int:
+        return hash(self.fingerprint)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, ExecutionPlan) and other.fingerprint == self.fingerprint
+
+    @property
+    def modes(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.mode_plans))
+
+
+def _precision_tags(g: Graph, cfg: EngineConfig) -> np.ndarray:
+    if cfg.mixed_precision:
+        return inference_precision_tags(g, cfg.dq)
+    return np.full(g.num_nodes, "float", dtype=object).astype(str)
+
+
+def compile_plans(
+    g: Graph,
+    cfg: Optional[EngineConfig] = None,
+    *,
+    modes: Sequence[str] = ("sum",),
+    precision_tags: Optional[np.ndarray] = None,
+) -> ExecutionPlan:
+    """Compile a graph into a reusable ExecutionPlan (the expensive host step).
+
+    This is the pure planning half of what ``AmpleEngine.__init__`` + lazy
+    ``plans(mode)`` used to do: Degree-Quant tagging plus one edge-tile plan
+    set per requested coefficient mode. The result is immutable and keyed by
+    ``fingerprint`` = hash(structure, cfg, modes) — identical fingerprints
+    mean the planner would emit identical tiles.
+
+    ``precision_tags`` overrides the Degree-Quant tagging (str[N]); the
+    serving engine uses this to tag batched disjoint-union graphs per member
+    graph rather than union-wide.
+    """
+    cfg = cfg if cfg is not None else EngineConfig()
+    if precision_tags is None:
+        tags = _precision_tags(g, cfg)
+        tag_part = ""
+    else:
+        tags = np.asarray(precision_tags)
+        if tags.shape != (g.num_nodes,):
+            raise ValueError(
+                f"precision_tags must be [{g.num_nodes}], got {tags.shape}"
+            )
+        tag_part = "tags:" + hashlib.blake2b(
+            np.asarray(tags, dtype="U8").tobytes(), digest_size=16
+        ).hexdigest()
+    groups = {
+        tag: np.nonzero(tags == tag)[0] for tag in np.unique(tags)
+    }
+    mode_plans = {
+        mode: sched.build_mixed_precision_plans(
+            g,
+            tags,
+            edges_per_tile=cfg.edges_per_tile,
+            segments_per_tile=cfg.segments_per_tile,
+            coeff=aggregation_coefficients(g, mode),
+        )
+        for mode in dict.fromkeys(modes)  # dedupe, keep order
+    }
+    graph_fp = sched.graph_fingerprint(g)
+    fp = sched.plan_fingerprint(
+        g, repr(cfg), *sorted(dict.fromkeys(modes)), *((tag_part,) if tag_part else ())
+    )
+    return ExecutionPlan(
+        fingerprint=fp,
+        graph_fp=graph_fp,
+        num_nodes=g.num_nodes,
+        num_edges=g.num_edges,
+        cfg=cfg,
+        precision_tags=tags,
+        node_groups=groups,
+        mode_plans=mode_plans,
+    )
+
+
+class AmpleEngine:
+    """Thin per-graph execution wrapper around an ``ExecutionPlan``.
+
+    The engine owns only transient device-facing state (the weight-quant
+    cache); all planning lives in the plan. Construct either way:
+
+      * ``AmpleEngine(g, cfg)`` — compiles tags up front, tile plans lazily
+        per aggregation mode (the historical behaviour), or
+      * ``AmpleEngine(g, plan=plan)`` — reuses a cached ``compile_plans``
+        artifact and skips the planner entirely.
+    """
+
+    def __init__(
+        self,
+        g: Graph,
+        cfg: Optional[EngineConfig] = None,
+        *,
+        plan: Optional[ExecutionPlan] = None,
+    ):
+        if plan is not None:
+            if plan.graph_fp != sched.graph_fingerprint(g):
+                raise ValueError(
+                    f"plan was compiled for a different graph structure "
+                    f"({plan.num_nodes} nodes, {plan.num_edges} edges vs "
+                    f"{g.num_nodes}, {g.num_edges}; fingerprints differ)"
+                )
+            if cfg is not None and cfg != plan.cfg:
+                raise ValueError("cfg disagrees with plan.cfg; pass one or the other")
+            cfg = plan.cfg
+        else:
+            cfg = cfg if cfg is not None else EngineConfig()
+            plan = compile_plans(g, cfg, modes=())
         self.graph = g
         self.cfg = cfg
-        if cfg.mixed_precision:
-            self.precision_tags = inference_precision_tags(g, cfg.dq)
-        else:
-            self.precision_tags = np.full(g.num_nodes, "float", dtype=object).astype(
-                str
-            )
-        self.node_groups: Dict[str, np.ndarray] = {
-            tag: np.nonzero(self.precision_tags == tag)[0]
-            for tag in np.unique(self.precision_tags)
-        }
-        self._plans: Dict[str, Dict[str, sched.EdgeTilePlan]] = {}
+        self.plan = plan
+        self.precision_tags = plan.precision_tags
+        self.node_groups: Dict[str, np.ndarray] = dict(plan.node_groups)
+        self._plans: Dict[str, Mapping[str, sched.EdgeTilePlan]] = dict(plan.mode_plans)
         self._wq_cache: Dict[int, tuple] = {}
 
     # ---------------------------------------------------------------- plans
-    def _coeff(self, mode: str) -> np.ndarray:
-        g = self.graph
-        if mode == "sum":
-            return np.ones(g.num_edges, np.float32)
-        if mode == "mean":
-            deg = np.maximum(g.degrees, 1).astype(np.float32)
-            return (1.0 / np.repeat(deg, g.degrees)).astype(np.float32)
-        if mode == "gcn":
-            return gcn_norm_coeffs(g)
-        raise ValueError(f"unknown aggregation mode {mode!r}")
-
-    def plans(self, mode: str) -> Dict[str, sched.EdgeTilePlan]:
-        if mode not in self._plans:
+    def plans(self, mode: str) -> Mapping[str, sched.EdgeTilePlan]:
+        if mode not in self._plans:  # lazy extension beyond the compiled modes
             self._plans[mode] = sched.build_mixed_precision_plans(
                 self.graph,
                 self.precision_tags,
                 edges_per_tile=self.cfg.edges_per_tile,
                 segments_per_tile=self.cfg.segments_per_tile,
-                coeff=self._coeff(mode),
+                coeff=aggregation_coefficients(self.graph, mode),
             )
         return self._plans[mode]
 

@@ -28,6 +28,7 @@ of the isolated per-precision NoC sub-networks.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -45,7 +46,45 @@ __all__ = [
     "build_padded_plan",
     "build_mixed_precision_plans",
     "pack_segments",
+    "graph_fingerprint",
+    "plan_fingerprint",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Plan fingerprinting — the cache key of the serving layer
+# ---------------------------------------------------------------------------
+
+
+def graph_fingerprint(g: Graph) -> str:
+    """Structure hash of a graph (topology only, not features).
+
+    Two graphs with identical (num_nodes, indptr, indices) — hence identical
+    CSR structure — hash identically, so a compiled ExecutionPlan for one is
+    valid for the other. Edge weights and features are runtime inputs, not
+    plan inputs, and are deliberately excluded.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64(g.num_nodes).tobytes())
+    h.update(np.ascontiguousarray(g.indptr, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(g.indices, dtype=np.int32).tobytes())
+    return h.hexdigest()
+
+
+def plan_fingerprint(g: Graph, *parts: str) -> str:
+    """Fingerprint of (graph structure, planner configuration) pairs.
+
+    ``parts`` are deterministic strings describing everything that shapes the
+    compiled plan beyond topology: the EngineConfig repr, the coefficient
+    modes, the arch. Same fingerprint ⇒ the planner would emit identical
+    tiles, so the plan may be served from cache.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(graph_fingerprint(g).encode())
+    for p in parts:
+        h.update(b"\x00")
+        h.update(str(p).encode())
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------------------------

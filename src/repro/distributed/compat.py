@@ -1,0 +1,31 @@
+"""Version compatibility for the manual-sharding API surface.
+
+The distributed modules are written against the modern spelling
+(``jax.shard_map``, ``jax.lax.pcast(..., to="varying")``). On the pinned
+CPU toolchain (jax 0.4.x) those live under ``jax.experimental.shard_map``
+and ``pcast`` does not exist — there, replication checking is disabled
+instead, which makes the "mark as varying" cast unnecessary.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "pcast_varying"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` when available, else the jax 0.4 experimental one."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def pcast_varying(x, axes):
+    """Mark ``x`` as varying over ``axes`` (no-op where pcast is absent)."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axes, to="varying")
+    return x

@@ -1,4 +1,6 @@
 """Graph substrate: CSR structures, synthetic datasets, partitioning."""
-from repro.graphs.csr import Graph, add_self_loops, from_edge_list, gcn_norm_coeffs, validate
+from repro.graphs.csr import (
+    Graph, add_self_loops, disjoint_union, from_edge_list, gcn_norm_coeffs, validate,
+)
 from repro.graphs.datasets import PAPER_DATASETS, DatasetSpec, make_dataset, make_lognormal_graph
 from repro.graphs.partition import Partition, halo_nodes, partition_by_edges

@@ -25,6 +25,7 @@ __all__ = [
     "Graph",
     "add_self_loops",
     "from_edge_list",
+    "disjoint_union",
     "validate",
     "gcn_norm_coeffs",
 ]
@@ -149,6 +150,45 @@ def add_self_loops(g: Graph) -> Graph:
     if g.features is not None:
         out = out.with_features(g.features)
     return out
+
+
+def disjoint_union(graphs: "list[Graph]") -> Graph:
+    """Block-diagonal union of independent graphs (no cross edges).
+
+    Node ids of graph k are offset by the node counts of graphs 0..k-1, so
+    CSR rows concatenate directly. Because every aggregation coefficient in
+    this codebase depends only on per-node degree (sum/mean/GCN norm), any
+    GNN layer over the union equals the per-graph layers stacked — this is
+    what lets the serving engine batch independent small-graph requests into
+    one padded device call. Features are concatenated when all graphs carry
+    them; edge weights likewise.
+    """
+    if not graphs:
+        raise ValueError("disjoint_union of no graphs")
+    if len(graphs) == 1:
+        return graphs[0]
+    offsets = np.cumsum([0] + [g.num_nodes for g in graphs])
+    indptr = [np.asarray([0], np.int64)]
+    indices = []
+    edge_off = 0
+    for g, off in zip(graphs, offsets):
+        indptr.append(g.indptr[1:] + edge_off)
+        indices.append(g.indices.astype(np.int64) + off)
+        edge_off += g.num_edges
+    features = None
+    if all(g.features is not None for g in graphs):
+        features = np.concatenate([g.features for g in graphs], axis=0)
+    edge_weights = None
+    if all(g.edge_weights is not None for g in graphs):
+        edge_weights = np.concatenate([g.edge_weights for g in graphs])
+    return Graph(
+        indptr=np.concatenate(indptr),
+        indices=np.concatenate(indices).astype(np.int32),
+        num_nodes=int(offsets[-1]),
+        features=features,
+        edge_weights=edge_weights,
+        name="+".join(dict.fromkeys(g.name for g in graphs)),
+    )
 
 
 def validate(g: Graph) -> None:

@@ -1,6 +1,13 @@
-"""Serving launcher: batched prefill+decode with the KV-cache engine.
+"""Serving launcher — one CLI over both serve engines, dispatched on family.
 
-``python -m repro.launch.serve --arch smollm-360m --tokens 32``
+Token families: batched prefill+decode with the KV-cache engine.
+
+    python -m repro.launch.serve --arch smollm-360m --tokens 32
+
+family="gnn": the plan-cached GNN engine; serves the same graph twice to
+show cold-plan vs cache-hit latency, then a batched small-graph mix.
+
+    python -m repro.launch.serve --arch ample-gcn --requests 4
 """
 from __future__ import annotations
 
@@ -15,16 +22,7 @@ from repro.models.api import model_init
 from repro.serve.engine import ServeEngine
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--full", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--tokens", type=int, default=32)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch, reduced=not args.full)
+def serve_lm(cfg, args) -> None:
     params = model_init(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params, max_len=args.prompt_len + args.tokens)
     prompts = jax.random.randint(
@@ -36,6 +34,61 @@ def main():
     print(f"arch={cfg.name} batch={args.batch} new_tokens={args.tokens}")
     print(f"throughput: {args.batch * args.tokens / dt:.1f} tok/s (CPU, reduced cfg)")
     print("sample:", out[0, : args.prompt_len + 8].tolist())
+
+
+def serve_gnn(cfg, args) -> None:
+    from repro.graphs import make_dataset
+    from repro.serve.gnn_engine import GNNRequest, GNNServeEngine
+
+    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    g = make_dataset(
+        args.dataset, max_nodes=args.nodes, max_feature_dim=cfg.d_model, seed=0
+    )
+    x = g.features
+    print(f"arch={cfg.name} graph={g.name} nodes={g.num_nodes} edges={g.num_edges}")
+
+    # Repeat traffic on one graph: the second request skips the planner.
+    for i in range(max(args.requests, 2)):
+        r = eng.infer(g, x)
+        tag = "hit " if r.cache_hit else "cold"
+        print(
+            f"request {i}: plan[{tag}] {r.plan_ms:7.1f} ms  run {r.run_ms:6.1f} ms  "
+            f"out {r.outputs.shape}"
+        )
+
+    # A batch of independent small graphs in one padded device call.
+    small = [
+        make_dataset(args.dataset, max_nodes=args.nodes // 4, max_feature_dim=cfg.d_model, seed=s)
+        for s in range(1, 4)
+    ]
+    reqs = [GNNRequest(graph=s, features=s.features) for s in small]
+    t0 = time.time()
+    outs = eng.infer_batch(reqs)
+    dt = (time.time() - t0) * 1e3
+    n = sum(s.num_nodes for s in small)
+    print(f"batched {len(reqs)} graphs ({n} nodes) in one call: {dt:.1f} ms")
+    print("cache:", eng.cache_info())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--full", action="store_true")
+    # token-family knobs
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    # gnn-family knobs
+    ap.add_argument("--dataset", default="cora")
+    ap.add_argument("--nodes", type=int, default=800)
+    ap.add_argument("--requests", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    if cfg.family == "gnn":
+        serve_gnn(cfg, args)
+    else:
+        serve_lm(cfg, args)
 
 
 if __name__ == "__main__":

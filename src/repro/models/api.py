@@ -1,7 +1,17 @@
 """Family-agnostic model API: init / forward / prefill / decode by config.
 
 Everything downstream (trainer, server, dry-run, benchmarks) talks to models
-exclusively through these five functions, dispatched on ``cfg.family``.
+exclusively through these five functions, dispatched on ``cfg.family``:
+
+  * token families (dense/moe/ssm/hybrid/encdec/vlm/audio) route to the LM
+    stacks; batches carry ``tokens``/``embeds``;
+  * ``family="gnn"`` routes to the arch registry in models/gnn/api.py;
+    batches carry ``graph`` (CSR Graph) + ``features`` (and optionally a
+    pre-compiled ``engine`` from the serving plan cache).
+
+GNN inference is single-shot node classification — there is no KV cache, so
+the prefill/decode entry points reject GNN configs with a pointer to
+``serve.gnn_engine.GNNServeEngine``.
 """
 from __future__ import annotations
 
@@ -27,19 +37,41 @@ def _is_encdec(cfg: ModelConfig) -> bool:
     return cfg.encoder_layers > 0
 
 
+def _is_gnn(cfg: ModelConfig) -> bool:
+    return cfg.family == "gnn"
+
+
+def _no_token_cache(cfg: ModelConfig, entry: str):
+    raise TypeError(
+        f"{entry} is undefined for family='gnn' ({cfg.name}): GNN inference "
+        "has no token cache; use model_forward with {'graph', 'features'} or "
+        "serve.gnn_engine.GNNServeEngine for cached-plan serving"
+    )
+
+
 def model_init(cfg: ModelConfig, key, *, tp: int = 1):
+    if _is_gnn(cfg):
+        from repro.models.gnn import api as gnn_api
+
+        return gnn_api.gnn_init(cfg, key)
     if _is_encdec(cfg):
         return encdec.init_encdec(cfg, key, tp=tp)
     return transformer.init_lm(cfg, key, tp=tp)
 
 
 def model_forward(params, cfg: ModelConfig, batch: Dict, *, policy=transformer.NO_POLICY):
+    if _is_gnn(cfg):
+        from repro.models.gnn import api as gnn_api
+
+        return gnn_api.gnn_forward(params, cfg, batch)
     if _is_encdec(cfg):
         return encdec.forward_encdec(params, cfg, batch, policy=policy)
     return transformer.forward(params, cfg, batch, policy=policy)
 
 
 def model_prefill(params, cfg: ModelConfig, batch: Dict, max_len: int, *, policy=transformer.NO_POLICY):
+    if _is_gnn(cfg):
+        _no_token_cache(cfg, "model_prefill")
     if _is_encdec(cfg):
         enc = encdec.encode(params, cfg, batch["src_embeds"], policy=policy)
         cache = encdec.init_decoder_cache(params, cfg, enc, max_len)
@@ -50,6 +82,8 @@ def model_prefill(params, cfg: ModelConfig, batch: Dict, max_len: int, *, policy
 
 def model_init_cache(cfg: ModelConfig, params, batch: Dict, max_len: int, *, tp: int = 1):
     """Empty decode cache (enc-dec needs the encoder pass to build cross-K/V)."""
+    if _is_gnn(cfg):
+        _no_token_cache(cfg, "model_init_cache")
     if _is_encdec(cfg):
         enc = encdec.encode(params, cfg, batch["src_embeds"])
         return encdec.init_decoder_cache(params, cfg, enc, max_len)
@@ -58,6 +92,8 @@ def model_init_cache(cfg: ModelConfig, params, batch: Dict, max_len: int, *, tp:
 
 
 def model_decode_step(params, cfg: ModelConfig, batch: Dict, cache, cache_len, *, policy=transformer.NO_POLICY):
+    if _is_gnn(cfg):
+        _no_token_cache(cfg, "model_decode_step")
     if _is_encdec(cfg):
         return encdec.decode_step_encdec(
             params, cfg, batch["tokens"], cache, cache_len, policy=policy

@@ -1,4 +1,19 @@
-"""The paper's three benchmark GNNs (Table 3) on the AMPLE engine."""
-from repro.models.gnn import gcn, gin, sage
+"""The paper's three benchmark GNNs (Table 3), behind the arch registry.
+
+Use the uniform surface in :mod:`repro.models.gnn.api` (``gnn_init`` /
+``gnn_apply`` / ``gnn_reference``) or go through the family-agnostic
+``repro.models.api`` with a ``family="gnn"`` ModelConfig.
+"""
+from repro.models.gnn import gcn, gin, sage  # registers the archs
+from repro.models.gnn.api import (
+    ArchSpec,
+    get_arch,
+    gnn_apply,
+    gnn_forward,
+    gnn_init,
+    gnn_reference,
+    list_archs,
+    register_arch,
+)
 
 MODELS = {"gcn": gcn, "gin": gin, "sage": sage}

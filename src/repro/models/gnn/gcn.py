@@ -4,24 +4,32 @@
 
 Aggregation: sum with GCN normalisation coefficients (folded into the plan);
 no residual; normalisation on the aggregation side (Table 3). The graph must
-carry explicit self-loops (``add_self_loops``) so the ∪{i} term is an edge.
+carry explicit self-loops so the ∪{i} term is an edge — the registry's
+``needs_self_loops`` flag makes ``prepare_graph`` add them.
+
+Entry points are uniform and config-driven (see models/gnn/api.py): layer
+dims come from ``cfg.gnn_layer_dims``, the coefficient mode from
+``api.agg_mode(cfg)``.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import ModelConfig
 from repro.core.message_passing import AmpleEngine
 from repro.graphs.csr import Graph, gcn_norm_coeffs
+from repro.models.gnn import api
 from repro.models.gnn.layers import glorot
 
-__all__ = ["init", "apply", "apply_reference"]
+__all__ = ["init", "apply", "reference"]
 
 
-def init(key, dims: List[int]) -> Dict:
-    """dims = [in, hidden..., out]; one weight per layer (Eq. 2 has no bias)."""
+def init(cfg: ModelConfig, key) -> Dict:
+    """One weight per layer (Eq. 2 has no bias)."""
+    dims = cfg.gnn_layer_dims
     keys = jax.random.split(key, len(dims) - 1)
     return {
         "layers": [
@@ -30,17 +38,18 @@ def init(key, dims: List[int]) -> Dict:
     }
 
 
-def apply(params: Dict, engine: AmpleEngine, x: jnp.ndarray) -> jnp.ndarray:
+def apply(cfg: ModelConfig, params: Dict, engine: AmpleEngine, x: jnp.ndarray) -> jnp.ndarray:
+    mode = api.agg_mode(cfg)
     n = len(params["layers"])
     for i, lyr in enumerate(params["layers"]):
-        m = engine.aggregate(x, mode="gcn")
+        m = engine.aggregate(x, mode=mode)
         x = engine.transform(
             m, lyr["w"], activation=jax.nn.relu if i < n - 1 else None
         )
     return x
 
 
-def apply_reference(params: Dict, g: Graph, x: jnp.ndarray) -> jnp.ndarray:
+def reference(cfg: ModelConfig, params: Dict, g: Graph, x: jnp.ndarray) -> jnp.ndarray:
     """Dense-adjacency float oracle (test-scale only)."""
     import numpy as np
 
@@ -56,3 +65,13 @@ def apply_reference(params: Dict, g: Graph, x: jnp.ndarray) -> jnp.ndarray:
         if i < n - 1:
             x = jax.nn.relu(x)
     return x
+
+
+api.register_arch(
+    "gcn",
+    init=init,
+    apply=apply,
+    reference=reference,
+    default_agg="gcn",
+    needs_self_loops=True,
+)

@@ -5,23 +5,28 @@
 Aggregation: plain sum, no normalisation; residual on the aggregation side
 (Table 3) — the (1+ε)x_i term. The MLP (2 layers, ReLU) is the γ transform and
 runs through the engine's mixed-precision FTE one linear at a time.
+
+Entry points are uniform and config-driven (see models/gnn/api.py).
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import ModelConfig
 from repro.core.message_passing import AmpleEngine
 from repro.graphs.csr import Graph
+from repro.models.gnn import api
 from repro.models.gnn.layers import mlp_init
 
-__all__ = ["init", "apply", "apply_reference"]
+__all__ = ["init", "apply", "reference"]
 
 
-def init(key, dims: List[int], *, hidden_mult: int = 1, eps: float = 0.0) -> Dict:
+def init(cfg: ModelConfig, key, *, hidden_mult: int = 1, eps: float = 0.0) -> Dict:
     """One 2-layer MLP per GNN layer: [d_in -> d_out*mult -> d_out]."""
+    dims = cfg.gnn_layer_dims
     keys = jax.random.split(key, len(dims) - 1)
     return {
         "eps": jnp.asarray(eps, jnp.float32),
@@ -44,10 +49,11 @@ def _mlp_through_engine(engine: AmpleEngine, mlp: Dict, h: jnp.ndarray) -> jnp.n
     return h
 
 
-def apply(params: Dict, engine: AmpleEngine, x: jnp.ndarray) -> jnp.ndarray:
+def apply(cfg: ModelConfig, params: Dict, engine: AmpleEngine, x: jnp.ndarray) -> jnp.ndarray:
+    mode = api.agg_mode(cfg)
     n = len(params["layers"])
     for i, mlp in enumerate(params["layers"]):
-        m = engine.aggregate(x, mode="sum")
+        m = engine.aggregate(x, mode=mode)
         h = (1.0 + params["eps"]) * x + m  # aggregation-side residual
         x = _mlp_through_engine(engine, mlp, h)
         if i < n - 1:
@@ -55,7 +61,7 @@ def apply(params: Dict, engine: AmpleEngine, x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
-def apply_reference(params: Dict, g: Graph, x: jnp.ndarray) -> jnp.ndarray:
+def reference(cfg: ModelConfig, params: Dict, g: Graph, x: jnp.ndarray) -> jnp.ndarray:
     a = jnp.asarray(g.dense_adjacency())
     n = len(params["layers"])
     for i, mlp in enumerate(params["layers"]):
@@ -66,3 +72,12 @@ def apply_reference(params: Dict, g: Graph, x: jnp.ndarray) -> jnp.ndarray:
                 h = jax.nn.relu(h)
         x = jax.nn.relu(h) if i < n - 1 else h
     return x
+
+
+api.register_arch(
+    "gin",
+    init=init,
+    apply=apply,
+    reference=reference,
+    default_agg="sum",
+)

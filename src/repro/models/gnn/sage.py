@@ -5,22 +5,27 @@
 φ is a dense projection applied to *all* nodes once (every node is someone's
 neighbour), the mean runs through the event-driven AGE with 1/deg
 coefficients, and γ adds the W1 transformation-side residual (Table 3).
+
+Entry points are uniform and config-driven (see models/gnn/api.py).
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import ModelConfig
 from repro.core.message_passing import AmpleEngine
 from repro.graphs.csr import Graph
+from repro.models.gnn import api
 from repro.models.gnn.layers import linear_init
 
-__all__ = ["init", "apply", "apply_reference"]
+__all__ = ["init", "apply", "reference"]
 
 
-def init(key, dims: List[int]) -> Dict:
+def init(cfg: ModelConfig, key) -> Dict:
+    dims = cfg.gnn_layer_dims
     layers = []
     for i in range(len(dims) - 1):
         k1, k2, k3, key = jax.random.split(key, 4)
@@ -34,18 +39,19 @@ def init(key, dims: List[int]) -> Dict:
     return {"layers": layers}
 
 
-def apply(params: Dict, engine: AmpleEngine, x: jnp.ndarray) -> jnp.ndarray:
+def apply(cfg: ModelConfig, params: Dict, engine: AmpleEngine, x: jnp.ndarray) -> jnp.ndarray:
+    mode = api.agg_mode(cfg)
     n = len(params["layers"])
     for i, lyr in enumerate(params["layers"]):
         msgs = engine.transform(x, lyr["w3"]["w"], lyr["w3"]["b"], jax.nn.relu)  # φ
-        m = engine.aggregate(msgs, mode="mean")  # A
+        m = engine.aggregate(msgs, mode=mode)  # A
         x = engine.transform(x, lyr["w1"]["w"]) + engine.transform(m, lyr["w2"]["w"])
         if i < n - 1:
             x = jax.nn.relu(x)
     return x
 
 
-def apply_reference(params: Dict, g: Graph, x: jnp.ndarray) -> jnp.ndarray:
+def reference(cfg: ModelConfig, params: Dict, g: Graph, x: jnp.ndarray) -> jnp.ndarray:
     import numpy as np
 
     a = g.dense_adjacency()
@@ -59,3 +65,12 @@ def apply_reference(params: Dict, g: Graph, x: jnp.ndarray) -> jnp.ndarray:
         if i < n - 1:
             x = jax.nn.relu(x)
     return x
+
+
+api.register_arch(
+    "sage",
+    init=init,
+    apply=apply,
+    reference=reference,
+    default_agg="mean",
+)

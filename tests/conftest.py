@@ -1,19 +1,34 @@
 """Shared fixtures/strategies. NOTE: no XLA_FLAGS here — tests must see the
-single real CPU device; only launch/dryrun.py fakes 512 devices."""
+single real CPU device; only launch/dryrun.py fakes 512 devices.
+
+``hypothesis`` is optional: when missing, property tests are skipped via the
+stubs in ``_hypothesis_compat`` instead of dying at collection."""
 from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
 
-# Property tests trace JAX under the hood — generous deadlines, no shrink spam.
-settings.register_profile(
-    "repro",
-    deadline=None,
-    max_examples=25,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-settings.load_profile("repro")
+from _hypothesis_compat import HAVE_HYPOTHESIS
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck, settings
+
+    # Property tests trace JAX under the hood — generous deadlines, no shrink spam.
+    settings.register_profile(
+        "repro",
+        deadline=None,
+        max_examples=25,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("repro")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "hypothesis: property-based tests (require the hypothesis package; "
+        "select with -m hypothesis, deselect with -m 'not hypothesis')",
+    )
 
 
 def random_graph(n: int, mean_deg: float, seed: int):

@@ -3,8 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given
-from hypothesis import strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core import (
     build_bucket_plan,

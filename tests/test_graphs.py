@@ -3,8 +3,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given
-from hypothesis import strategies as st
+from _hypothesis_compat import given, st
 
 from repro.graphs import (
     PAPER_DATASETS,

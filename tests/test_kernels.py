@@ -4,8 +4,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import build_edge_tile_plan
 from repro.graphs.datasets import make_lognormal_graph

@@ -1,0 +1,244 @@
+"""family="gnn" through the unified model API + the plan-cached serve engine."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import compile_plans
+from repro.models.api import (
+    model_decode_step,
+    model_forward,
+    model_init,
+    model_init_cache,
+    model_prefill,
+)
+from repro.models.gnn import api as gnn_api
+from repro.graphs import disjoint_union, make_dataset
+from repro.serve.gnn_engine import GNNRequest, GNNServeEngine
+
+ARCHS = ["gcn", "gin", "sage"]
+
+
+def _cfg(arch, *, precision="float"):
+    return dataclasses.replace(
+        get_config(f"ample-{arch}", reduced=True),
+        d_model=20, d_ff=12, vocab_size=6, gnn_precision=precision,
+        gnn_edges_per_tile=64,
+    )
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return make_dataset("cora", max_nodes=120, max_feature_dim=20, seed=1)
+
+
+# --------------------------------------------------- unified five-function API
+@pytest.mark.parametrize("arch", ARCHS)
+def test_model_forward_matches_dense_reference(arch, graph):
+    """Acceptance: model_forward(params, cfg, {graph, features}) == oracle."""
+    cfg = _cfg(arch)
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(graph.features)
+    y, aux = model_forward(params, cfg, {"graph": graph, "features": x})
+    yref = gnn_api.gnn_reference(cfg, params, graph, x)
+    assert y.shape == (graph.num_nodes, cfg.vocab_size)
+    assert float(aux) == 0.0
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), atol=5e-4, rtol=1e-3)
+
+
+def test_model_forward_accepts_precompiled_engine(graph):
+    """The serving path hands model_forward a plan-backed engine; results match."""
+    from repro.core import AmpleEngine
+
+    cfg = _cfg("gcn")
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(graph.features)
+    prepared = gnn_api.prepare_graph(cfg, graph)
+    plan = compile_plans(prepared, gnn_api.engine_config(cfg), modes=("gcn",))
+    eng = AmpleEngine(prepared, plan=plan)
+    y_plan, _ = model_forward(params, cfg, {"graph": graph, "features": x, "engine": eng})
+    y_cold, _ = model_forward(params, cfg, {"graph": graph, "features": x})
+    np.testing.assert_array_equal(np.asarray(y_plan), np.asarray(y_cold))
+
+
+def test_token_entry_points_reject_gnn(graph):
+    cfg = _cfg("gcn")
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    batch = {"graph": graph, "features": graph.features}
+    with pytest.raises(TypeError, match="GNNServeEngine"):
+        model_prefill(params, cfg, batch, 8)
+    with pytest.raises(TypeError, match="GNNServeEngine"):
+        model_init_cache(cfg, params, batch, 8)
+    with pytest.raises(TypeError, match="GNNServeEngine"):
+        model_decode_step(params, cfg, batch, None, 0)
+
+
+# ------------------------------------------------------------ ExecutionPlan
+def test_compile_plans_fingerprint_stability(graph):
+    cfg = gnn_api.engine_config(_cfg("gcn"))
+    p1 = compile_plans(graph, cfg, modes=("gcn",))
+    p2 = compile_plans(graph, cfg, modes=("gcn",))
+    assert p1.fingerprint == p2.fingerprint and p1 == p2 and hash(p1) == hash(p2)
+    p3 = compile_plans(graph, cfg, modes=("sum",))
+    assert p3.fingerprint != p1.fingerprint
+    g2 = make_dataset("cora", max_nodes=110, max_feature_dim=20, seed=1)
+    assert compile_plans(g2, cfg, modes=("gcn",)).fingerprint != p1.fingerprint
+
+
+def test_engine_rejects_mismatched_plan(graph):
+    from repro.core import AmpleEngine
+
+    cfg = gnn_api.engine_config(_cfg("gin"))
+    plan = compile_plans(graph, cfg, modes=("sum",))
+    other = make_dataset("cora", max_nodes=80, max_feature_dim=20, seed=2)
+    with pytest.raises(ValueError, match="plan was compiled"):
+        AmpleEngine(other, plan=plan)
+
+
+# ------------------------------------------------------------- serve engine
+def test_serve_engine_plan_cache_hit(graph, monkeypatch):
+    """Acceptance: a second request on the same graph skips plan compilation
+    (planner invoked once) and returns bitwise-identical results to a cold
+    engine."""
+    import repro.serve.gnn_engine as gnn_engine_mod
+
+    calls = {"n": 0}
+    real_compile = gnn_engine_mod.compile_plans
+
+    def counting_compile(*args, **kwargs):
+        calls["n"] += 1
+        return real_compile(*args, **kwargs)
+
+    monkeypatch.setattr(gnn_engine_mod, "compile_plans", counting_compile)
+
+    cfg = _cfg("gcn", precision="mixed")
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    warm_eng = GNNServeEngine(cfg, params)
+    r1 = warm_eng.infer(graph, graph.features)
+    r2 = warm_eng.infer(graph, graph.features)
+    assert calls["n"] == 1, "planner must run once across repeated requests"
+    assert warm_eng.stats["planner_calls"] == 1
+    assert not r1.cache_hit and r2.cache_hit
+    assert r1.fingerprint == r2.fingerprint
+
+    cold_eng = GNNServeEngine(cfg, params)
+    r_cold = cold_eng.infer(graph, graph.features)
+    np.testing.assert_array_equal(r2.outputs, r_cold.outputs)
+    np.testing.assert_array_equal(r2.outputs, r1.outputs)
+
+
+def test_serve_engine_lru_eviction(graph):
+    cfg = _cfg("gin")
+    eng = GNNServeEngine(cfg, plan_cache_size=1)
+    g2 = make_dataset("cora", max_nodes=90, max_feature_dim=20, seed=5)
+    eng.infer(graph, graph.features)
+    eng.infer(g2, g2.features)  # evicts graph's plan
+    assert eng.cache_info()["size"] == 1
+    assert eng.stats["evictions"] == 1
+    r = eng.infer(graph, graph.features)  # recompiled, not a hit
+    assert not r.cache_hit
+    assert eng.stats["planner_calls"] == 3
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_batch_matches_individual(arch):
+    """Disjoint-union batching == per-request serving, for every arch."""
+    cfg = _cfg(arch)
+    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(7))
+    graphs = [
+        make_dataset("cora", max_nodes=n, max_feature_dim=20, seed=s)
+        for n, s in [(60, 1), (45, 2), (75, 3)]
+    ]
+    reqs = [GNNRequest(graph=g, features=g.features) for g in graphs]
+    batched = eng.infer_batch(reqs)
+    assert [r.outputs.shape[0] for r in batched] == [g.num_nodes for g in graphs]
+    for g, r in zip(graphs, batched):
+        solo = eng.infer(g, g.features)
+        np.testing.assert_allclose(r.outputs, solo.outputs, atol=1e-5, rtol=1e-5)
+
+
+def test_serve_batch_cache_hit_on_repeat_mix(graph):
+    cfg = _cfg("sage")
+    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(8))
+    g2 = make_dataset("cora", max_nodes=70, max_feature_dim=20, seed=9)
+    reqs = [GNNRequest(graph=graph, features=graph.features),
+            GNNRequest(graph=g2, features=g2.features)]
+    first = eng.infer_batch(reqs)
+    second = eng.infer_batch(reqs)
+    assert not first[0].cache_hit and second[0].cache_hit
+    assert eng.stats["planner_calls"] == 1
+    for a, b in zip(first, second):
+        np.testing.assert_array_equal(a.outputs, b.outputs)
+
+
+def test_serve_rejects_foreign_arch(graph):
+    """Params are arch-specific, so requests for another arch must be routed
+    to an engine configured for it, not silently misinterpreted."""
+    cfg = _cfg("gcn")
+    eng = GNNServeEngine(cfg)
+    with pytest.raises(ValueError, match="holds 'gcn' params"):
+        eng.infer(graph, graph.features, arch="gin")
+    reqs = [GNNRequest(graph=graph, features=graph.features, arch="gcn"),
+            GNNRequest(graph=graph, features=graph.features, arch="gin")]
+    with pytest.raises(ValueError, match="holds 'gcn' params"):
+        eng.infer_batch(reqs)
+    # explicit matching arch is fine
+    r = eng.infer(graph, graph.features, arch="gcn")
+    assert r.outputs.shape == (graph.num_nodes, cfg.vocab_size)
+
+
+def test_serve_batch_mixed_precision_tags_per_member(graph):
+    """Degree-Quant protection in a batched union matches solo serving: a
+    member graph's tags are computed on its own degree distribution."""
+    from repro.core.degree_quant import inference_precision_tags
+
+    cfg = _cfg("gin", precision="mixed")
+    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    g2 = make_dataset("cora", max_nodes=50, max_feature_dim=20, seed=11)
+    reqs = [GNNRequest(graph=graph, features=graph.features),
+            GNNRequest(graph=g2, features=g2.features)]
+    eng.infer_batch(reqs)
+    (_, plan, _), = [v for v in eng._cache.values()]
+    solo = np.concatenate([
+        inference_precision_tags(g, eng.engine_cfg.dq) for g in (graph, g2)
+    ])
+    np.testing.assert_array_equal(plan.precision_tags, solo)
+
+
+def test_model_forward_rejects_wrong_feature_rows(graph):
+    cfg = _cfg("gcn")
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    bad = np.asarray(graph.features)[: graph.num_nodes // 2]
+    with pytest.raises(ValueError, match="features must be"):
+        model_forward(params, cfg, {"graph": graph, "features": bad})
+
+
+def test_disjoint_union_structure():
+    a = make_dataset("cora", max_nodes=40, max_feature_dim=8, seed=1)
+    b = make_dataset("cora", max_nodes=30, max_feature_dim=8, seed=2)
+    u = disjoint_union([a, b])
+    assert u.num_nodes == a.num_nodes + b.num_nodes
+    assert u.num_edges == a.num_edges + b.num_edges
+    # block-diagonal: no edge crosses the offset boundary
+    rows = np.repeat(np.arange(u.num_nodes), u.degrees)
+    src = u.indices
+    assert ((rows < a.num_nodes) == (src < a.num_nodes)).all()
+    assert u.features.shape == (u.num_nodes, 8)
+
+
+def test_disjoint_union_with_empty_member():
+    from repro.graphs.csr import Graph, validate
+
+    a = make_dataset("cora", max_nodes=40, max_feature_dim=8, seed=1)
+    empty = Graph(indptr=np.zeros(1, np.int64), indices=np.zeros(0, np.int32),
+                  num_nodes=0)
+    b = make_dataset("cora", max_nodes=30, max_feature_dim=8, seed=2)
+    u = disjoint_union([a, empty, b])
+    assert u.num_nodes == a.num_nodes + b.num_nodes
+    assert u.num_edges == a.num_edges + b.num_edges
+    validate(u)

@@ -4,8 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given
-from hypothesis import strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core.degree_quant import (
     DegreeQuantConfig,

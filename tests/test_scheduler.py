@@ -3,8 +3,7 @@ edge is dispatched exactly once with its coefficient, across all plan kinds."""
 from __future__ import annotations
 
 import numpy as np
-from hypothesis import given
-from hypothesis import strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core import (
     build_bucket_plan,
