@@ -205,6 +205,39 @@ def bench_gnn_serve(quick: bool) -> None:
     )
 
 
+# --------------------- gnn-serve sharded: partition-aware plan economics
+def bench_sharded_serve(quick: bool) -> None:
+    """Shard count vs latency, halo-exchange volume and per-shard edge
+    balance through the partition-aware GNNServeEngine (host-loop backend —
+    the SPMD shard_map backend needs a multi-device mesh)."""
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.graphs.datasets import make_dataset
+    from repro.serve.gnn_engine import GNNServeEngine
+
+    cfg = get_config("ample-gcn", reduced=True)
+    n = 2_000 if quick else 10_000
+    g = make_dataset("flickr", max_nodes=n, max_feature_dim=cfg.d_model, seed=0)
+    base = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    base.infer(g, g.features)  # jit warm
+    us_1 = _time(lambda: base.infer(g, g.features), reps=3)
+
+    for shards in (2, 4, 8):
+        eng = GNNServeEngine(cfg, base.params, num_shards=shards)
+        cold = eng.infer(g, g.features)  # pays per-shard planning + jit
+        eng.infer(g, g.features)
+        us_k = _time(lambda: eng.infer(g, g.features), reps=3)
+        rep = eng.shard_report()
+        emit(
+            f"gnn_serve_sharded_{shards}", us_k,
+            f"plan_ms={cold.plan_ms:.1f};vs_unsharded={us_1 / max(us_k, 1e-9):.2f}x;"
+            f"edge_balance={rep['edge_balance']:.3f};"
+            f"halo_rows_per_layer={rep['halo_total']};"
+            f"halo_frac={rep['halo_total'] / max(g.num_nodes, 1):.3f}",
+        )
+
+
 # --------------------------------------------- MoE event-driven dispatch
 def bench_moe_dispatch(quick: bool) -> None:
     import jax
@@ -265,6 +298,7 @@ BENCHES = [
     bench_engine_paths,
     bench_mixed_precision,
     bench_gnn_serve,
+    bench_sharded_serve,
     bench_moe_dispatch,
     bench_kernels,
 ]

@@ -1,0 +1,259 @@
+"""Compiled-plan persistence — warm a serving plan cache from disk.
+
+``ExecutionPlan`` / ``ShardedExecutionPlan`` are pure host-side artifacts
+(numpy arrays + a frozen EngineConfig), so they round-trip losslessly through
+a single ``.npz`` file: every tile array is stored under a namespaced key and
+everything scalar rides in a JSON header entry. A restarted ``GNNServeEngine``
+loads these instead of re-running the planner — the disk analogue of the
+in-memory plan cache (and of AMPLE's host programming nodeslots once per
+graph, not once per boot).
+
+No pickle anywhere: headers are UTF-8 JSON stored as a uint8 array, tags are
+fixed-width unicode, so files are inspectable and load with
+``allow_pickle=False``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.degree_quant import DegreeQuantConfig
+from repro.core.message_passing import (
+    EngineConfig,
+    ExecutionPlan,
+    ShardPlan,
+    ShardedExecutionPlan,
+)
+from repro.core.scheduler import EdgeTilePlan
+from repro.graphs.csr import Graph
+from repro.graphs.partition import Partition, ShardSubgraph
+
+__all__ = ["save_plan", "load_plan", "PlanRecord"]
+
+_PLAN_ARRAYS = ("gather_idx", "coeff", "seg_ids", "out_node", "node_ids")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRecord:
+    """What ``load_plan`` returns: the plan plus optional sidecar state."""
+
+    plan: Union[ExecutionPlan, ShardedExecutionPlan]
+    graph: Optional[Graph]  # structure only (no features); None if not saved
+    extra: Dict[str, Any]  # caller metadata (e.g. the serve-cache key)
+
+
+# ------------------------------------------------------------------- encode
+def _cfg_header(cfg: EngineConfig) -> Dict[str, Any]:
+    d = dataclasses.asdict(cfg)
+    d["dq"] = dataclasses.asdict(cfg.dq)
+    return d
+
+
+def _plan_header(plan: ExecutionPlan) -> Dict[str, Any]:
+    return {
+        "fingerprint": plan.fingerprint,
+        "graph_fp": plan.graph_fp,
+        "num_nodes": plan.num_nodes,
+        "num_edges": plan.num_edges,
+        "modes": list(plan.mode_plans),
+        "tiles": {
+            mode: {
+                tag: {
+                    "num_nodes": p.num_nodes,
+                    "edges_per_tile": p.edges_per_tile,
+                    "segments_per_tile": p.segments_per_tile,
+                    "total_edges": p.total_edges,
+                }
+                for tag, p in tag_plans.items()
+            }
+            for mode, tag_plans in plan.mode_plans.items()
+        },
+    }
+
+
+def _pack_plan(plan: ExecutionPlan, prefix: str, arrays: Dict[str, np.ndarray]) -> None:
+    arrays[f"{prefix}tags"] = np.asarray(plan.precision_tags, dtype="U8")
+    for mode, tag_plans in plan.mode_plans.items():
+        for tag, p in tag_plans.items():
+            base = f"{prefix}p/{mode}/{tag}/"
+            for name in _PLAN_ARRAYS:
+                arrays[base + name] = getattr(p, name)
+
+
+# ------------------------------------------------------------------- decode
+def _cfg_from_header(d: Dict[str, Any]) -> EngineConfig:
+    d = dict(d)
+    d["dq"] = DegreeQuantConfig(**d["dq"])
+    return EngineConfig(**d)
+
+
+def _unpack_plan(
+    header: Dict[str, Any], cfg: EngineConfig, prefix: str, z
+) -> ExecutionPlan:
+    tags = np.asarray(z[f"{prefix}tags"]).astype(str)
+    groups = {tag: np.nonzero(tags == tag)[0] for tag in np.unique(tags)}
+    mode_plans: Dict[str, Dict[str, EdgeTilePlan]] = {}
+    for mode, tag_meta in header["tiles"].items():
+        mode_plans[mode] = {}
+        for tag, meta in tag_meta.items():
+            base = f"{prefix}p/{mode}/{tag}/"
+            mode_plans[mode][tag] = EdgeTilePlan(
+                **{name: np.asarray(z[base + name]) for name in _PLAN_ARRAYS},
+                num_nodes=int(meta["num_nodes"]),
+                edges_per_tile=int(meta["edges_per_tile"]),
+                segments_per_tile=int(meta["segments_per_tile"]),
+                total_edges=int(meta["total_edges"]),
+            )
+    return ExecutionPlan(
+        fingerprint=header["fingerprint"],
+        graph_fp=header["graph_fp"],
+        num_nodes=int(header["num_nodes"]),
+        num_edges=int(header["num_edges"]),
+        cfg=cfg,
+        precision_tags=tags,
+        node_groups=groups,
+        mode_plans=mode_plans,
+    )
+
+
+# ---------------------------------------------------------------------- API
+def save_plan(
+    path: str,
+    plan: Union[ExecutionPlan, ShardedExecutionPlan],
+    *,
+    graph: Optional[Graph] = None,
+    extra: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Write a compiled plan (and optionally its graph structure) to ``path``.
+
+    ``graph`` stores topology only (indptr/indices — features are runtime
+    inputs, not plan state); pass the *prepared* graph the plan was compiled
+    for so a restarted server can rebuild an engine without re-preparing.
+    ``extra`` is an arbitrary JSON-serialisable dict returned verbatim by
+    ``load_plan`` (the serving layer stashes its cache key there).
+    """
+    arrays: Dict[str, np.ndarray] = {}
+    header: Dict[str, Any] = {"version": 1, "extra": extra or {}}
+    if isinstance(plan, ShardedExecutionPlan):
+        header["kind"] = "sharded_plan"
+        header["sharded"] = {
+            "fingerprint": plan.fingerprint,
+            "graph_fp": plan.graph_fp,
+            "partition_fp": plan.partition_fp,
+            "num_nodes": plan.num_nodes,
+            "num_edges": plan.num_edges,
+        }
+        header["cfg"] = _cfg_header(plan.cfg)
+        arrays["partition_starts"] = np.asarray(plan.partition.starts, np.int64)
+        arrays["tags"] = np.asarray(plan.precision_tags, dtype="U8")
+        shard_headers = []
+        for k, sp in enumerate(plan.shards):
+            prefix = f"s{k}/"
+            shard_headers.append(
+                {
+                    "fingerprint": sp.fingerprint,
+                    "lo": sp.shard.lo,
+                    "hi": sp.shard.hi,
+                    "edge_range": list(sp.shard.edge_range),
+                    "graph_name": sp.shard.graph.name,
+                    "plan": _plan_header(sp.plan),
+                }
+            )
+            arrays[f"{prefix}halo"] = np.asarray(sp.shard.halo, np.int64)
+            arrays[f"{prefix}indptr"] = sp.shard.graph.indptr
+            arrays[f"{prefix}indices"] = sp.shard.graph.indices
+            _pack_plan(sp.plan, prefix, arrays)
+        header["shards"] = shard_headers
+    elif isinstance(plan, ExecutionPlan):
+        header["kind"] = "plan"
+        header["plan"] = _plan_header(plan)
+        header["cfg"] = _cfg_header(plan.cfg)
+        _pack_plan(plan, "", arrays)
+    else:
+        raise TypeError(f"cannot persist {type(plan).__name__}")
+    if graph is not None:
+        header["graph"] = {"num_nodes": graph.num_nodes, "name": graph.name}
+        arrays["graph/indptr"] = graph.indptr
+        arrays["graph/indices"] = graph.indices
+    arrays["header"] = np.frombuffer(
+        json.dumps(header).encode("utf-8"), dtype=np.uint8
+    )
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)  # atomic publish, like checkpoint/
+    return path
+
+
+def load_plan(path: str) -> PlanRecord:
+    """Load a plan written by ``save_plan``; fingerprints round-trip exactly."""
+    with np.load(path, allow_pickle=False) as z:
+        header = json.loads(bytes(np.asarray(z["header"]).tobytes()).decode("utf-8"))
+        cfg = _cfg_from_header(header["cfg"])
+        graph = None
+        if "graph" in header:
+            graph = Graph(
+                indptr=np.asarray(z["graph/indptr"], np.int64),
+                indices=np.asarray(z["graph/indices"], np.int32),
+                num_nodes=int(header["graph"]["num_nodes"]),
+                name=header["graph"]["name"],
+            )
+        if header["kind"] == "plan":
+            plan: Union[ExecutionPlan, ShardedExecutionPlan] = _unpack_plan(
+                header["plan"], cfg, "", z
+            )
+        elif header["kind"] == "sharded_plan":
+            starts = np.asarray(z["partition_starts"], np.int64)
+            part = Partition(starts=starts)
+            tags = np.asarray(z["tags"]).astype(str)
+            groups = {t: np.nonzero(tags == t)[0] for t in np.unique(tags)}
+            shards = []
+            for k, sh in enumerate(header["shards"]):
+                prefix = f"s{k}/"
+                halo = np.asarray(z[f"{prefix}halo"], np.int64)
+                lo, hi = int(sh["lo"]), int(sh["hi"])
+                local_g = Graph(
+                    indptr=np.asarray(z[f"{prefix}indptr"], np.int64),
+                    indices=np.asarray(z[f"{prefix}indices"], np.int32),
+                    num_nodes=(hi - lo) + int(halo.size),
+                    name=sh["graph_name"],
+                )
+                sub = ShardSubgraph(
+                    index=k,
+                    lo=lo,
+                    hi=hi,
+                    halo=halo,
+                    local_ids=np.concatenate(
+                        [np.arange(lo, hi, dtype=np.int64), halo]
+                    ),
+                    graph=local_g,
+                    edge_range=tuple(sh["edge_range"]),
+                )
+                shards.append(
+                    ShardPlan(
+                        fingerprint=sh["fingerprint"],
+                        shard=sub,
+                        plan=_unpack_plan(sh["plan"], cfg, prefix, z),
+                    )
+                )
+            meta = header["sharded"]
+            plan = ShardedExecutionPlan(
+                fingerprint=meta["fingerprint"],
+                graph_fp=meta["graph_fp"],
+                partition_fp=meta["partition_fp"],
+                partition=part,
+                num_nodes=int(meta["num_nodes"]),
+                num_edges=int(meta["num_edges"]),
+                cfg=cfg,
+                precision_tags=tags,
+                node_groups=groups,
+                shards=tuple(shards),
+            )
+        else:
+            raise ValueError(f"unknown plan kind {header['kind']!r} in {path}")
+    return PlanRecord(plan=plan, graph=graph, extra=header.get("extra", {}))

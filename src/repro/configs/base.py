@@ -81,6 +81,7 @@ class ModelConfig:
     gnn_agg: str = ""  # aggregation coefficient mode override ("" = arch default)
     gnn_precision: str = "mixed"  # mixed (Degree-Quant int8/float) | float
     gnn_edges_per_tile: int = 256  # event-driven tile width (AGE lanes)
+    gnn_num_shards: int = 1  # >1: partition-aware execution (edge-balanced shards)
 
     # --- frontend stubs (vlm/audio): inputs arrive as embeddings ---
     embeds_input: bool = False

@@ -4,8 +4,10 @@ from repro.core.scheduler import (
     build_edge_tile_plan, build_bucket_plan, build_padded_plan,
     build_mixed_precision_plans, pack_segments,
     graph_fingerprint, plan_fingerprint,
+    partition_fingerprint, shard_plan_fingerprint,
 )
 from repro.core.degree_quant import DegreeQuantConfig, inference_precision_tags, sample_protection_mask
 from repro.core.message_passing import (
-    AmpleEngine, EngineConfig, ExecutionPlan, aggregation_coefficients, compile_plans,
+    AmpleEngine, EngineConfig, ExecutionPlan, ShardPlan, ShardedExecutionPlan,
+    aggregation_coefficients, compile_plans, compile_shard_plan, compile_sharded_plans,
 )

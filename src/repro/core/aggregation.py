@@ -165,6 +165,7 @@ def aggregate_mixed_precision(
     num_nodes: int,
     use_kernel: bool = False,
     qp: Optional[QuantParams] = None,
+    device_plans: Optional[Dict[str, DeviceTilePlan]] = None,
 ) -> jnp.ndarray:
     """Mixed-precision AGE: the float plan consumes fp32 embeddings; the int8
     plan consumes int8-quantized embeddings (4× lighter gather traffic — the
@@ -172,13 +173,25 @@ def aggregate_mixed_precision(
 
     The two streams write disjoint node sets, so the combined output is just
     the sum of the two scatter targets.
+
+    ``qp`` overrides the activation scale/zero-point (per-call min/max
+    calibration otherwise) — the engine passes its per-plan static quant state
+    here, and the sharded executor a globally calibrated qp so every shard
+    quantizes identically. ``device_plans`` supplies already-uploaded
+    ``DeviceTilePlan`` mirrors keyed like ``plans`` (host→device conversion is
+    per-plan-static and cacheable).
     """
+    device_plans = device_plans or {}
+
+    def dplan(tag):
+        return device_plans.get(tag) or to_device_plan(plans[tag])
+
     out = jnp.zeros((num_nodes, x.shape[1]), jnp.float32)
     if "float" in plans:
         p = plans["float"]
         out = out + aggregate_edge_tiles(
             x,
-            to_device_plan(p),
+            dplan("float"),
             num_nodes=num_nodes,
             segments_per_tile=p.segments_per_tile,
             use_kernel=use_kernel,
@@ -191,7 +204,7 @@ def aggregate_mixed_precision(
         xdq = dequantize(xq, qp)  # on-chip dequant after int8 gather
         out = out + aggregate_edge_tiles(
             xdq,
-            to_device_plan(p),
+            dplan("int8"),
             num_nodes=num_nodes,
             segments_per_tile=p.segments_per_tile,
             use_kernel=use_kernel,

@@ -15,8 +15,10 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+from collections import OrderedDict
 from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -34,12 +36,25 @@ from repro.core.transformation import (
     transform_mixed_precision,
 )
 from repro.graphs.csr import Graph, gcn_norm_coeffs
+from repro.graphs.partition import (
+    Partition,
+    ShardSubgraph,
+    partition_by_edges,
+    shard_subgraph,
+    validate_partition,
+)
 
 __all__ = [
     "EngineConfig",
     "ExecutionPlan",
+    "ShardPlan",
+    "ShardedExecutionPlan",
     "compile_plans",
+    "compile_shard_plan",
+    "compile_sharded_plans",
+    "shard_plan_key",
     "aggregation_coefficients",
+    "engine_precision_tags",
     "AmpleEngine",
 ]
 
@@ -103,7 +118,8 @@ class ExecutionPlan:
         return tuple(sorted(self.mode_plans))
 
 
-def _precision_tags(g: Graph, cfg: EngineConfig) -> np.ndarray:
+def engine_precision_tags(g: Graph, cfg: EngineConfig) -> np.ndarray:
+    """The precision tags the planner would assign under ``cfg`` (str[N])."""
     if cfg.mixed_precision:
         return inference_precision_tags(g, cfg.dq)
     return np.full(g.num_nodes, "float", dtype=object).astype(str)
@@ -115,6 +131,7 @@ def compile_plans(
     *,
     modes: Sequence[str] = ("sum",),
     precision_tags: Optional[np.ndarray] = None,
+    coeffs: Optional[Mapping[str, np.ndarray]] = None,
 ) -> ExecutionPlan:
     """Compile a graph into a reusable ExecutionPlan (the expensive host step).
 
@@ -126,11 +143,15 @@ def compile_plans(
 
     ``precision_tags`` overrides the Degree-Quant tagging (str[N]); the
     serving engine uses this to tag batched disjoint-union graphs per member
-    graph rather than union-wide.
+    graph rather than union-wide. ``coeffs`` overrides the per-edge
+    aggregation coefficients per mode (f32[E] aligned with ``g.indices``);
+    shard-local plans pass slices of globally computed coefficients here,
+    since e.g. GCN normalisation needs the *global* degree of halo sources.
+    Overridden tags/coeffs are folded into the fingerprint.
     """
     cfg = cfg if cfg is not None else EngineConfig()
     if precision_tags is None:
-        tags = _precision_tags(g, cfg)
+        tags = engine_precision_tags(g, cfg)
         tag_part = ""
     else:
         tags = np.asarray(precision_tags)
@@ -144,19 +165,39 @@ def compile_plans(
     groups = {
         tag: np.nonzero(tags == tag)[0] for tag in np.unique(tags)
     }
+
+    def mode_coeff(mode: str) -> np.ndarray:
+        if coeffs is not None and mode in coeffs:
+            c = np.asarray(coeffs[mode], np.float32)
+            if c.shape != (g.num_edges,):
+                raise ValueError(f"coeffs[{mode!r}] must be [{g.num_edges}], got {c.shape}")
+            return c
+        return aggregation_coefficients(g, mode)
+
     mode_plans = {
         mode: sched.build_mixed_precision_plans(
             g,
             tags,
             edges_per_tile=cfg.edges_per_tile,
             segments_per_tile=cfg.segments_per_tile,
-            coeff=aggregation_coefficients(g, mode),
+            coeff=mode_coeff(mode),
         )
         for mode in dict.fromkeys(modes)  # dedupe, keep order
     }
+    coeff_part = ""
+    if coeffs is not None:
+        h = hashlib.blake2b(digest_size=16)
+        for mode in sorted(set(coeffs) & set(dict.fromkeys(modes))):
+            h.update(mode.encode())
+            h.update(np.ascontiguousarray(coeffs[mode], np.float32).tobytes())
+        coeff_part = "coeffs:" + h.hexdigest()
     graph_fp = sched.graph_fingerprint(g)
     fp = sched.plan_fingerprint(
-        g, repr(cfg), *sorted(dict.fromkeys(modes)), *((tag_part,) if tag_part else ())
+        g,
+        repr(cfg),
+        *sorted(dict.fromkeys(modes)),
+        *((tag_part,) if tag_part else ()),
+        *((coeff_part,) if coeff_part else ()),
     )
     return ExecutionPlan(
         fingerprint=fp,
@@ -167,6 +208,250 @@ def compile_plans(
         precision_tags=tags,
         node_groups=groups,
         mode_plans=mode_plans,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Partition-aware planning: one ExecutionPlan per edge-balanced shard
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardPlan:
+    """One shard's compiled slice of a ``ShardedExecutionPlan``.
+
+    ``plan`` is a full ExecutionPlan over the shard's *local* subgraph
+    (owned rows first, halo sources appended — see
+    ``graphs.partition.shard_subgraph``), so every property of the single-graph
+    plan (hashability, persistence, bitwise-valid reuse) holds per shard.
+    ``fingerprint`` is the global identity — hash(structure, partition
+    boundaries, shard index, planner config) via
+    ``scheduler.shard_plan_fingerprint`` — and is what the serving layer keys
+    its per-shard LRU on.
+    """
+
+    fingerprint: str
+    shard: ShardSubgraph
+    plan: ExecutionPlan  # over shard.graph, in local index space
+
+    def __hash__(self) -> int:
+        return hash(self.fingerprint)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, ShardPlan) and other.fingerprint == self.fingerprint
+
+    @property
+    def num_owned(self) -> int:
+        return self.shard.num_owned
+
+    @property
+    def halo_size(self) -> int:
+        return int(self.shard.halo.size)
+
+    @property
+    def num_edges(self) -> int:
+        e_lo, e_hi = self.shard.edge_range
+        return e_hi - e_lo
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ShardedExecutionPlan:
+    """A partitioned graph's execution plan: one ShardPlan per shard.
+
+    The distributed analogue of ``ExecutionPlan``: Degree-Quant tags are
+    computed once on the global graph (a node's precision must not depend on
+    which shard owns it), aggregation coefficients likewise (halo sources need
+    their global degree), and each shard gets its own edge-tile plan over its
+    local subgraph plus a precomputed halo gather map. Pure host-side and
+    hashable by fingerprint, so the serving layer caches it — and each member
+    ShardPlan independently — exactly like the single-graph plan.
+    """
+
+    fingerprint: str
+    graph_fp: str
+    partition_fp: str
+    partition: Partition
+    num_nodes: int
+    num_edges: int
+    cfg: EngineConfig
+    precision_tags: np.ndarray  # str[N] — global tags
+    node_groups: Mapping[str, np.ndarray]  # tag -> global node ids
+    shards: Tuple[ShardPlan, ...]
+
+    def __hash__(self) -> int:
+        return hash(self.fingerprint)
+
+    def __eq__(self, other) -> bool:
+        return (
+            isinstance(other, ShardedExecutionPlan)
+            and other.fingerprint == self.fingerprint
+        )
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def modes(self) -> Tuple[str, ...]:
+        return self.shards[0].plan.modes if self.shards else ()
+
+    @property
+    def halo_total(self) -> int:
+        """Rows crossing the cut per layer — the halo-exchange volume metric."""
+        return sum(s.halo_size for s in self.shards)
+
+    @property
+    def edge_balance(self) -> float:
+        """max shard edges / ideal edges-per-shard (1.0 = perfectly balanced)."""
+        if not self.shards or self.num_edges == 0:
+            return 1.0
+        ideal = self.num_edges / self.num_shards
+        return max(s.num_edges for s in self.shards) / ideal
+
+
+def shard_plan_key(
+    g: Graph,
+    part: Partition,
+    k: int,
+    cfg: EngineConfig,
+    *,
+    modes: Sequence[str],
+    precision_tags: np.ndarray,
+) -> str:
+    """The fingerprint ``compile_shard_plan`` would stamp on shard ``k``.
+
+    Separated out so a serving cache can probe its per-shard LRU *before*
+    deciding which shards actually need the planner.
+    """
+    tag_part = "tags:" + hashlib.blake2b(
+        np.asarray(precision_tags, dtype="U8").tobytes(), digest_size=16
+    ).hexdigest()
+    return sched.shard_plan_fingerprint(
+        g,
+        part.starts,
+        k,
+        repr(cfg),
+        *sorted(dict.fromkeys(modes)),
+        tag_part,
+    )
+
+
+def compile_shard_plan(
+    g: Graph,
+    part: Partition,
+    k: int,
+    cfg: Optional[EngineConfig] = None,
+    *,
+    modes: Sequence[str] = ("sum",),
+    precision_tags: Optional[np.ndarray] = None,
+    mode_coeffs: Optional[Mapping[str, np.ndarray]] = None,
+) -> ShardPlan:
+    """Compile shard ``k`` of a partitioned graph independently.
+
+    ``precision_tags``/``mode_coeffs`` are *global* (length N / E); pass them
+    when compiling several shards so tagging and coefficient work runs once —
+    omitted, they are derived here (correct, just repeated per shard).
+    The returned ShardPlan is exactly what ``compile_sharded_plans`` would
+    have produced for this shard, so a serving cache can mix shards compiled
+    together and separately.
+    """
+    cfg = cfg if cfg is not None else EngineConfig()
+    if precision_tags is None:
+        precision_tags = engine_precision_tags(g, cfg)
+    tags = np.asarray(precision_tags)
+    if tags.shape != (g.num_nodes,):
+        raise ValueError(f"precision_tags must be [{g.num_nodes}], got {tags.shape}")
+    if mode_coeffs is None:
+        mode_coeffs = {m: aggregation_coefficients(g, m) for m in dict.fromkeys(modes)}
+    sub = shard_subgraph(g, part, k)
+    e_lo, e_hi = sub.edge_range
+    local_coeffs = {m: np.asarray(c)[e_lo:e_hi] for m, c in mode_coeffs.items()}
+    local_tags = tags[sub.local_ids]
+    plan = compile_plans(
+        sub.graph,
+        cfg,
+        modes=modes,
+        precision_tags=local_tags,
+        coeffs=local_coeffs,
+    )
+    fp = shard_plan_key(g, part, k, cfg, modes=modes, precision_tags=tags)
+    return ShardPlan(fingerprint=fp, shard=sub, plan=plan)
+
+
+def compile_sharded_plans(
+    g: Graph,
+    cfg: Optional[EngineConfig] = None,
+    *,
+    num_shards: Optional[int] = None,
+    partition: Optional[Partition] = None,
+    modes: Sequence[str] = ("sum",),
+    precision_tags: Optional[np.ndarray] = None,
+    shard_plans: Optional[Mapping[int, ShardPlan]] = None,
+) -> ShardedExecutionPlan:
+    """Partition-aware planning pipeline: Partition in, sharded plan out.
+
+    Give either an explicit ``partition`` (validated against ``g``) or
+    ``num_shards`` (edge-balanced contiguous cut via ``partition_by_edges``).
+    Degree-Quant tags and per-mode coefficients are computed once globally,
+    then each shard is compiled over its local subgraph. ``shard_plans``
+    supplies already-compiled shards by index (the serving layer's per-shard
+    cache hits); only missing shards run the planner.
+    """
+    cfg = cfg if cfg is not None else EngineConfig()
+    if partition is None:
+        if num_shards is None:
+            raise ValueError("pass either partition or num_shards")
+        partition = partition_by_edges(g, num_shards)
+    else:
+        validate_partition(g, partition)
+        if num_shards is not None and partition.num_shards != num_shards:
+            raise ValueError(
+                f"partition has {partition.num_shards} shards, asked for {num_shards}"
+            )
+    if precision_tags is None:
+        tags = engine_precision_tags(g, cfg)
+    else:
+        tags = np.asarray(precision_tags)
+        if tags.shape != (g.num_nodes,):
+            raise ValueError(f"precision_tags must be [{g.num_nodes}], got {tags.shape}")
+    shard_plans = shard_plans or {}
+    mode_coeffs = None
+    if any(k not in shard_plans for k in range(partition.num_shards)):
+        # Global per-edge coefficient work runs once, and only when some
+        # shard actually needs the planner (all-warm assembly skips it).
+        mode_coeffs = {m: aggregation_coefficients(g, m) for m in dict.fromkeys(modes)}
+    shards = tuple(
+        shard_plans[k]
+        if k in shard_plans
+        else compile_shard_plan(
+            g,
+            partition,
+            k,
+            cfg,
+            modes=modes,
+            precision_tags=tags,
+            mode_coeffs=mode_coeffs,
+        )
+        for k in range(partition.num_shards)
+    )
+    groups = {tag: np.nonzero(tags == tag)[0] for tag in np.unique(tags)}
+    partition_fp = sched.partition_fingerprint(g, partition.starts)
+    h = hashlib.blake2b(digest_size=16)
+    h.update(partition_fp.encode())
+    for s in shards:
+        h.update(b"\x00")
+        h.update(s.fingerprint.encode())
+    return ShardedExecutionPlan(
+        fingerprint=h.hexdigest(),
+        graph_fp=sched.graph_fingerprint(g),
+        partition_fp=partition_fp,
+        partition=partition,
+        num_nodes=g.num_nodes,
+        num_edges=g.num_edges,
+        cfg=cfg,
+        precision_tags=tags,
+        node_groups=groups,
+        shards=shards,
     )
 
 
@@ -208,7 +493,77 @@ class AmpleEngine:
         self.precision_tags = plan.precision_tags
         self.node_groups: Dict[str, np.ndarray] = dict(plan.node_groups)
         self._plans: Dict[str, Mapping[str, sched.EdgeTilePlan]] = dict(plan.mode_plans)
-        self._wq_cache: Dict[int, tuple] = {}
+        self._init_runtime_state()
+
+    _WQ_CACHE_CAP = 64  # weights per engine; LRU-evicted beyond this
+
+    def _init_runtime_state(self) -> None:
+        """Transient device-facing caches — shared with ShardedAmpleEngine."""
+        # id(w) -> (w, w_q, qp). The weight itself is held alongside its
+        # quantized copy: a cache keyed on id() alone is unsound once the
+        # original is garbage collected (CPython recycles ids), so the strong
+        # ref both pins the id and lets us verify the hit is really for w.
+        # Bounded LRU: a loop feeding ever-fresh weight arrays (training)
+        # must not grow engine memory without limit.
+        self._wq_cache: "OrderedDict[int, tuple]" = OrderedDict()
+        # Static per-plan quantization state (serving): to_device_plan uploads
+        # and activation scale/zero-points are calibrated once per (plan,
+        # call-site) and reused on warm requests — see begin_forward().
+        self._dplan_cache: Dict[str, Dict] = {}
+        self._act_qp: Dict[tuple, QuantParams] = {}
+        self._forward_active = False
+        self._agg_slot = 0
+        self._fte_slot = 0
+
+    # ------------------------------------------------- static quant state
+    def begin_forward(self) -> None:
+        """Mark the start of one model forward pass over this engine.
+
+        Activation quantization parameters (int8 scale/zero-point for the AGE
+        gather stream and the FTE int8 matmul) are keyed by call-site slot
+        within a forward: the first forward calibrates them from its
+        activations and later forwards reuse that static state — warm plan-
+        cache hits skip ``compute_scale_zp`` entirely, and repeat requests
+        with identical features are bitwise-identical to the cold request.
+        Callers that never invoke this (direct engine use) keep the historical
+        per-call dynamic calibration.
+        """
+        self._forward_active = True
+        self._agg_slot = 0
+        self._fte_slot = 0
+
+    def _activation_qp(self, values_fn: Callable[[], jnp.ndarray], kind: str) -> QuantParams:
+        """Scale/zp for one quantized call site (lazy: warm slots skip the calc)."""
+        if not self._forward_active:
+            return compute_scale_zp(values_fn(), symmetric=True)
+        if kind == "agg":
+            slot = ("agg", self._agg_slot)
+            self._agg_slot += 1
+        else:
+            slot = ("fte", self._fte_slot)
+            self._fte_slot += 1
+        if slot not in self._act_qp:
+            qp = compute_scale_zp(values_fn(), symmetric=True)
+            if isinstance(qp.scale, jax.core.Tracer):
+                # Under jit/grad tracing (training) the calibration is part of
+                # the traced computation — caching it would leak tracers, so
+                # stay dynamic and leave the slot empty for eager serving.
+                return qp
+            self._act_qp[slot] = qp
+        return self._act_qp[slot]
+
+    def _device_plans(self, mode: str, plans: Mapping[str, sched.EdgeTilePlan]) -> Dict:
+        if mode in self._dplan_cache:
+            return self._dplan_cache[mode]
+        dplans = {tag: to_device_plan(p) for tag, p in plans.items()}
+        # Inside jit/grad tracing, array creation is staged into the trace
+        # (DynamicJaxprTracer constants) — caching those would leak tracers
+        # into later eager calls, so only concrete uploads are kept.
+        if not any(
+            isinstance(d.gather_idx, jax.core.Tracer) for d in dplans.values()
+        ):
+            self._dplan_cache[mode] = dplans
+        return dplans
 
     # ---------------------------------------------------------------- plans
     def plans(self, mode: str) -> Mapping[str, sched.EdgeTilePlan]:
@@ -226,17 +581,21 @@ class AmpleEngine:
     def aggregate(self, x: jnp.ndarray, *, mode: str = "sum") -> jnp.ndarray:
         """Event-driven mixed-precision aggregation of node embeddings."""
         plans = self.plans(mode)
+        dplans = self._device_plans(mode, plans)
         if self.cfg.mixed_precision:
+            qp = self._activation_qp(lambda: x, "agg") if "int8" in plans else None
             return aggregate_mixed_precision(
                 x,
                 plans,
                 num_nodes=self.graph.num_nodes,
                 use_kernel=self.cfg.use_kernel,
+                qp=qp,
+                device_plans=dplans,
             )
         p = plans["float"]
         return aggregate_edge_tiles(
             x,
-            to_device_plan(p),
+            dplans["float"],
             num_nodes=self.graph.num_nodes,
             segments_per_tile=p.segments_per_tile,
             use_kernel=self.cfg.use_kernel,
@@ -245,9 +604,15 @@ class AmpleEngine:
     # ----------------------------------------------------------------- FTE
     def _weight_q(self, w: jnp.ndarray):
         key = id(w)
-        if key not in self._wq_cache:
-            self._wq_cache[key] = quantize_per_channel(w, axis=-1)
-        return self._wq_cache[key]
+        entry = self._wq_cache.get(key)
+        if entry is None or entry[0] is not w:
+            entry = (w, *quantize_per_channel(w, axis=-1))
+            self._wq_cache[key] = entry
+            while len(self._wq_cache) > self._WQ_CACHE_CAP:
+                self._wq_cache.popitem(last=False)
+        else:
+            self._wq_cache.move_to_end(key)
+        return entry[1], entry[2]
 
     def transform(
         self,
@@ -260,6 +625,12 @@ class AmpleEngine:
         if not self.cfg.mixed_precision:
             return transform_dense(h, w, b, activation)
         w_q, w_qp = self._weight_q(w)
+        a_qp = None
+        ids = self.node_groups.get("int8")
+        if self._forward_active and ids is not None and ids.size:
+            a_qp = self._activation_qp(
+                lambda: h[jnp.asarray(ids, jnp.int32)], "fte"
+            )
         return transform_mixed_precision(
             h,
             self.node_groups,
@@ -268,6 +639,7 @@ class AmpleEngine:
             activation,
             w_q=w_q,
             w_qp=w_qp,
+            a_qp=a_qp,
             use_kernel=self.cfg.use_kernel,
         )
 

@@ -48,6 +48,8 @@ __all__ = [
     "pack_segments",
     "graph_fingerprint",
     "plan_fingerprint",
+    "partition_fingerprint",
+    "shard_plan_fingerprint",
 ]
 
 
@@ -81,6 +83,38 @@ def plan_fingerprint(g: Graph, *parts: str) -> str:
     """
     h = hashlib.blake2b(digest_size=16)
     h.update(graph_fingerprint(g).encode())
+    for p in parts:
+        h.update(b"\x00")
+        h.update(str(p).encode())
+    return h.hexdigest()
+
+
+def partition_fingerprint(g: Graph, starts: np.ndarray) -> str:
+    """Hash of (graph structure, shard boundaries) — the cluster-level cache key.
+
+    ``starts`` are the half-open node-range boundaries of a
+    ``graphs.partition.Partition`` (int64[num_shards + 1]). Two identical
+    structures cut identically fingerprint identically, so every per-shard
+    plan compiled for one is valid for the other.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(graph_fingerprint(g).encode())
+    h.update(b"\x00part:")
+    h.update(np.ascontiguousarray(starts, dtype=np.int64).tobytes())
+    return h.hexdigest()
+
+
+def shard_plan_fingerprint(g: Graph, starts: np.ndarray, shard: int, *parts: str) -> str:
+    """Fingerprint of one shard's compiled plan within a partitioned graph.
+
+    Extends ``partition_fingerprint`` with the shard index and the planner
+    configuration strings (EngineConfig repr, modes, arch …). This is the key
+    the serving layer caches per-shard plans under: repeat traffic on the same
+    (structure, partition) pair hits every shard independently.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(partition_fingerprint(g, starts).encode())
+    h.update(f"\x00shard:{int(shard)}".encode())
     for p in parts:
         h.update(b"\x00")
         h.update(str(p).encode())

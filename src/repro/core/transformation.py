@@ -95,12 +95,16 @@ def transform_mixed_precision(
     *,
     w_q: Optional[jnp.ndarray] = None,
     w_qp: Optional[QuantParams] = None,
+    a_qp: Optional[QuantParams] = None,
     use_kernel: bool = False,
 ) -> jnp.ndarray:
     """Route each precision group's rows through its FTE stream.
 
     ``node_group_ids`` maps precision tag → node indices (disjoint cover of
-    rows of ``h``). Weight int8 copies are derived once if not provided.
+    rows of ``h``). Weight int8 copies are derived once if not provided;
+    ``a_qp`` fixes the int8 activation scale/zero-point (per-call min/max
+    calibration over the int8 rows otherwise — the engine passes its static
+    per-plan state here).
     """
     out = jnp.zeros((h.shape[0], w.shape[1]), jnp.float32)
     for tag, ids in node_group_ids.items():
@@ -114,7 +118,7 @@ def transform_mixed_precision(
             if w_q is None or w_qp is None:
                 w_q, w_qp = quantize_per_channel(w, axis=-1)
             y = transform_int8(
-                rows, w_q, w_qp, b, activation, use_kernel=use_kernel
+                rows, w_q, w_qp, b, activation, a_qp=a_qp, use_kernel=use_kernel
             )
         else:
             raise ValueError(f"unknown precision tag {tag!r}")

@@ -1,0 +1,382 @@
+"""Sharded GNN layer execution — the cluster-level Feature Bank.
+
+``ShardedAmpleEngine`` executes a ``ShardedExecutionPlan``: each shard owns a
+contiguous, edge-balanced node range; before aggregating, it fetches the
+embeddings of its remote ("halo") neighbours — the distributed analogue of
+AMPLE's Feature Bank fetching off-chip rows — then runs its own event-driven
+mixed-precision aggregation over its local subgraph and writes exactly its
+owned output rows. Per-node transformations (FTE) are row-parallel and stay on
+the regular mixed-precision path.
+
+Two execution backends, numerically interchangeable:
+
+* **host loop** (default) — one shard at a time on the local device. Works on
+  a single-device CPU, and is what the serving engine uses; the halo gather is
+  an explicit ``x[local_ids]`` row fetch.
+* **shard_map** — SPMD over a 1-D ``("shard",)`` device mesh with one device
+  per shard (CPU host-device simulation, as in ``test_distributed``). Owned
+  rows live sharded; the halo exchange is a ``lax.all_gather`` of the owned
+  blocks followed by a (owner, row) gather, and each device scans its own
+  padded edge tiles. Per-shard plans are padded to a common tile count so the
+  SPMD program is shape-uniform — the same trick the scheduler uses to make
+  skewed degree distributions dense.
+
+Activation quantization uses a *global* scale/zero-point (calibrated over the
+full embedding matrix, exactly as the unsharded engine does), so every shard
+quantizes identically and sharded output matches unsharded output to float
+accumulation order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import aggregate_mixed_precision, to_device_plan
+from repro.core.message_passing import (
+    AmpleEngine,
+    ShardedExecutionPlan,
+    compile_sharded_plans,
+)
+from repro.core import scheduler as sched
+from repro.core.quantization import QuantParams, dequantize, quantize
+from repro.distributed.compat import shard_map
+from repro.graphs.csr import Graph
+
+__all__ = ["ShardedAmpleEngine", "sharded_aggregate", "build_mesh_state"]
+
+
+# ---------------------------------------------------------------------------
+# Host-loop backend: one shard at a time on the local device
+# ---------------------------------------------------------------------------
+
+
+def sharded_aggregate(
+    x: jnp.ndarray,
+    splan: ShardedExecutionPlan,
+    *,
+    mode: str,
+    qp: Optional[QuantParams] = None,
+    use_kernel: bool = False,
+    device_state: Optional[Dict] = None,
+) -> jnp.ndarray:
+    """Aggregate ``x`` shard by shard; returns the full [N, D] result.
+
+    Per shard: gather owned + halo rows into local index space, run the
+    shard's event-driven plan, keep the owned output rows. ``qp`` must be the
+    globally calibrated activation scale/zp when the plan is mixed-precision
+    (pass None for float-only plans). ``device_state`` caches per-shard
+    uploaded artifacts across calls (the engine owns one).
+    """
+    parts = []
+    state = device_state if device_state is not None else {}
+    for sp in splan.shards:
+        key = ("host", sp.fingerprint, mode)
+        if key not in state:
+            plans = sp.plan.mode_plans.get(mode)
+            if plans is None:
+                raise KeyError(
+                    f"shard {sp.shard.index} was compiled for modes "
+                    f"{sp.plan.modes}, not {mode!r}; recompile the sharded "
+                    f"plan with this mode"
+                )
+            state[key] = (
+                jnp.asarray(sp.shard.local_ids, jnp.int32),
+                plans,
+                {tag: to_device_plan(p) for tag, p in plans.items()},
+            )
+        local_ids, plans, dplans = state[key]
+        x_local = x[local_ids]
+        m = aggregate_mixed_precision(
+            x_local,
+            plans,
+            num_nodes=sp.shard.num_local,
+            use_kernel=use_kernel,
+            qp=qp,
+            device_plans=dplans,
+        )
+        parts.append(m[: sp.num_owned])
+    return jnp.concatenate(parts, axis=0) if parts else jnp.zeros_like(x)
+
+
+# ---------------------------------------------------------------------------
+# shard_map backend: one device per shard, all-gather halo exchange
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _MeshState:
+    """Shape-uniform (padded, stacked) device mirror of a ShardedExecutionPlan."""
+
+    p_max: int  # padded owned rows per shard
+    h_max: int  # padded halo rows per shard
+    seg: int  # segments per tile
+    owned: Tuple[int, ...]  # real owned count per shard
+    pad_gather: np.ndarray  # int64[K * p_max] global row feeding each padded row
+    halo_owner: np.ndarray  # int32[K, h_max]
+    halo_idx: np.ndarray  # int32[K, h_max] row within the owner's padded block
+    tag_tiles: Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]
+
+
+def build_mesh_state(splan: ShardedExecutionPlan, mode: str) -> _MeshState:
+    """Pad per-shard plans to a common shape for SPMD execution.
+
+    The padded local index space per shard is ``[0, p_max)`` owned rows
+    (shard's own block) followed by ``[p_max, p_max + h_max)`` halo rows;
+    tile gather indices are remapped from the compact local space accordingly.
+    The scatter sentinel becomes row ``p_max + h_max`` (a scratch row sliced
+    off on return). Padding tiles carry coeff 0 and sentinel outputs, so they
+    aggregate nothing — lane waste, not wrong answers.
+    """
+    K = splan.num_shards
+    p_max = max((s.num_owned for s in splan.shards), default=1) or 1
+    h_max = max((s.halo_size for s in splan.shards), default=0)
+    l_pad = p_max + h_max
+    starts = splan.partition.starts
+
+    pad_gather = np.zeros(K * p_max, np.int64)
+    halo_owner = np.zeros((K, max(h_max, 1)), np.int32)
+    halo_idx = np.zeros((K, max(h_max, 1)), np.int32)
+    for k, sp in enumerate(splan.shards):
+        lo, hi = sp.shard.lo, sp.shard.hi
+        pad_gather[k * p_max : k * p_max + (hi - lo)] = np.arange(lo, hi)
+        if sp.halo_size:
+            owner = np.searchsorted(starts, sp.shard.halo, side="right") - 1
+            halo_owner[k, : sp.halo_size] = owner
+            halo_idx[k, : sp.halo_size] = sp.shard.halo - starts[owner]
+
+    tags = sorted({t for s in splan.shards for t in s.plan.mode_plans[mode]})
+    E = splan.cfg.edges_per_tile
+    seg = None
+    tag_tiles: Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]] = {}
+    for tag in tags:
+        per_shard = [s.plan.mode_plans[mode].get(tag) for s in splan.shards]
+        seg_t = next(p.segments_per_tile for p in per_shard if p is not None)
+        seg = seg_t if seg is None else seg
+        if seg_t != seg:
+            raise ValueError("segments_per_tile must be uniform across tags")
+        t_max = max((p.num_tiles for p in per_shard if p is not None), default=1)
+        gi = np.zeros((K, t_max, E), np.int32)
+        cf = np.zeros((K, t_max, E), np.float32)
+        si = np.full((K, t_max, E), seg - 1, np.int32)
+        on = np.full((K, t_max, seg), l_pad, np.int32)
+        for k, (sp, p) in enumerate(zip(splan.shards, per_shard)):
+            if p is None:
+                continue
+            owned = sp.num_owned
+            # compact local space -> padded local space
+            g_remap = np.where(
+                p.gather_idx < owned, p.gather_idx, p.gather_idx - owned + p_max
+            )
+            o_remap = np.where(
+                p.out_node < owned,
+                p.out_node,
+                np.where(
+                    p.out_node >= sp.shard.num_local,  # sentinel
+                    l_pad,
+                    p.out_node - owned + p_max,
+                ),
+            )
+            t = p.num_tiles
+            gi[k, :t] = np.minimum(g_remap, max(l_pad - 1, 0))
+            cf[k, :t] = p.coeff
+            si[k, :t] = p.seg_ids
+            on[k, :t] = o_remap
+        tag_tiles[tag] = (gi, cf, si, on)
+    return _MeshState(
+        p_max=p_max,
+        h_max=h_max,
+        seg=seg if seg is not None else E,
+        owned=tuple(s.num_owned for s in splan.shards),
+        pad_gather=pad_gather,
+        halo_owner=halo_owner,
+        halo_idx=halo_idx,
+        tag_tiles=tag_tiles,
+    )
+
+
+def _make_shard_map_fn(state: _MeshState, mesh, tags: Tuple[str, ...]):
+    from jax.sharding import PartitionSpec as P
+
+    seg, p_max, h_max = state.seg, state.p_max, state.h_max
+    l_pad = p_max + h_max
+
+    def _agg(tiles, xbuf):
+        gi, cf, si, on = tiles
+        out = jnp.zeros((l_pad + 1, xbuf.shape[1]), jnp.float32)
+
+        def step(out, t):
+            g_, c_, s_, o_ = t
+            gathered = xbuf[g_] * c_[:, None]
+            partial = jax.ops.segment_sum(gathered, s_, num_segments=seg)
+            return out.at[o_].add(partial), None
+
+        out, _ = jax.lax.scan(step, out, tiles)
+        return out
+
+    def body(xpad, howner, hidx, scale, zp, *tile_arrays):
+        # xpad: this device's owned block [p_max, D]; halo maps [1, h_max].
+        gathered = jax.lax.all_gather(xpad, "shard")  # [K, p_max, D]
+        halo = gathered[howner[0], hidx[0]][: h_max]  # [h_max, D]
+        xl = jnp.concatenate([xpad, halo], axis=0)  # [l_pad, D]
+        m = jnp.zeros((l_pad + 1, xpad.shape[1]), jnp.float32)
+        it = iter(tile_arrays)
+        for tag in tags:
+            tiles = tuple(a[0] for a in (next(it), next(it), next(it), next(it)))
+            if tag == "int8":
+                qp = QuantParams(scale=scale, zero_point=zp)
+                xin = dequantize(quantize(xl, qp), qp)
+            else:
+                xin = xl
+            m = m + _agg(tiles, xin)
+        return m[:p_max]
+
+    n_tile_arrays = 4 * len(tags)
+    mapped = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P("shard", None),  # xpad [K * p_max, D]
+            P("shard", None),  # halo owner [K, h_max]
+            P("shard", None),  # halo idx [K, h_max]
+            P(),  # scale
+            P(),  # zero point
+            *([P("shard", None, None)] * n_tile_arrays),
+        ),
+        out_specs=P("shard", None),
+    )
+    return jax.jit(mapped)
+
+
+# ---------------------------------------------------------------------------
+# Engine facade
+# ---------------------------------------------------------------------------
+
+
+class ShardedAmpleEngine(AmpleEngine):
+    """AmpleEngine over a partitioned graph: sharded AGE, row-parallel FTE.
+
+    Drop-in for ``AmpleEngine`` wherever the model apply functions use it
+    (``aggregate`` / ``transform``), so gcn/gin/sage run sharded without
+    change. Construct from a compiled ``ShardedExecutionPlan``:
+
+        splan = compile_sharded_plans(g, cfg, num_shards=4, modes=("gcn",))
+        eng = ShardedAmpleEngine(g, splan)              # host loop
+        eng = ShardedAmpleEngine(g, splan, mesh=mesh)   # shard_map SPMD
+
+    ``mesh`` must be a 1-D ``("shard",)`` mesh with exactly one device per
+    shard; without one, shards execute as a host loop (single-device
+    simulation — identical numerics, no SPMD).
+    """
+
+    def __init__(self, g: Graph, plan: ShardedExecutionPlan, *, mesh=None):
+        if plan.graph_fp != sched.graph_fingerprint(g):
+            raise ValueError(
+                f"sharded plan was compiled for a different graph structure "
+                f"({plan.num_nodes} nodes, {plan.num_edges} edges vs "
+                f"{g.num_nodes}, {g.num_edges}; fingerprints differ)"
+            )
+        if mesh is not None:
+            if tuple(mesh.axis_names) != ("shard",):
+                raise ValueError(f"mesh axes must be ('shard',), got {mesh.axis_names}")
+            if mesh.devices.size != plan.num_shards:
+                raise ValueError(
+                    f"mesh has {mesh.devices.size} devices but the plan has "
+                    f"{plan.num_shards} shards"
+                )
+        self.graph = g
+        self.cfg = plan.cfg
+        self.plan = plan
+        self.sharded_plan = plan
+        self.mesh = mesh
+        self.precision_tags = plan.precision_tags
+        self.node_groups = dict(plan.node_groups)
+        self._plans = {}
+        self._init_runtime_state()
+        self._shard_state: Dict = {}
+        self._mesh_exec: Dict[str, tuple] = {}
+
+    def plans(self, mode: str):
+        raise NotImplementedError(
+            "a sharded engine holds one plan per shard, not a global plan; "
+            "use sharded_plan.shards[k].plan.mode_plans[mode]"
+        )
+
+    # ----------------------------------------------------------------- AGE
+    def aggregate(self, x: jnp.ndarray, *, mode: str = "sum") -> jnp.ndarray:
+        splan = self.sharded_plan
+        has_int8 = self.cfg.mixed_precision and any(
+            "int8" in s.plan.mode_plans.get(mode, {}) for s in splan.shards
+        )
+        qp = self._activation_qp(lambda: x, "agg") if has_int8 else None
+        if self.mesh is not None:
+            return self._aggregate_shard_map(x, mode, qp)
+        return sharded_aggregate(
+            x,
+            splan,
+            mode=mode,
+            qp=qp,
+            use_kernel=self.cfg.use_kernel,
+            device_state=self._shard_state,
+        )
+
+    def _aggregate_shard_map(self, x: jnp.ndarray, mode: str, qp) -> jnp.ndarray:
+        if mode not in self._mesh_exec:
+            state = build_mesh_state(self.sharded_plan, mode)
+            tags = tuple(sorted(state.tag_tiles))
+            fn = _make_shard_map_fn(state, self.mesh, tags)
+            tile_args = tuple(
+                jnp.asarray(a) for tag in tags for a in state.tag_tiles[tag]
+            )
+            self._mesh_exec[mode] = (state, fn, tile_args)
+        state, fn, tile_args = self._mesh_exec[mode]
+        if qp is None:  # float-only plans still feed the qp slots
+            qp = QuantParams(
+                scale=jnp.ones((), jnp.float32), zero_point=jnp.zeros((), jnp.float32)
+            )
+        xpad = x[jnp.asarray(state.pad_gather)]  # [K * p_max, D]
+        out = fn(
+            xpad,
+            jnp.asarray(state.halo_owner),
+            jnp.asarray(state.halo_idx),
+            qp.scale,
+            qp.zero_point,
+            *tile_args,
+        )
+        parts = [
+            out[k * state.p_max : k * state.p_max + owned]
+            for k, owned in enumerate(state.owned)
+        ]
+        return jnp.concatenate(parts, axis=0) if parts else jnp.zeros_like(x)
+
+    # ------------------------------------------------------------- metrics
+    def shard_report(self) -> Dict[str, object]:
+        """Cluster-level lane economics: work balance + halo traffic."""
+        splan = self.sharded_plan
+        return {
+            "num_shards": splan.num_shards,
+            "edge_balance": splan.edge_balance,
+            "halo_total": splan.halo_total,
+            "halo_per_shard": [s.halo_size for s in splan.shards],
+            "edges_per_shard": [s.num_edges for s in splan.shards],
+            "owned_per_shard": [s.num_owned for s in splan.shards],
+        }
+
+
+def make_sharded_engine(
+    g: Graph,
+    cfg=None,
+    *,
+    num_shards: Optional[int] = None,
+    partition=None,
+    modes=("sum",),
+    mesh=None,
+) -> ShardedAmpleEngine:
+    """Compile + wrap in one call (the non-serving convenience path)."""
+    splan = compile_sharded_plans(
+        g, cfg, num_shards=num_shards, partition=partition, modes=modes
+    )
+    return ShardedAmpleEngine(g, splan, mesh=mesh)

@@ -3,4 +3,7 @@ from repro.graphs.csr import (
     Graph, add_self_loops, disjoint_union, from_edge_list, gcn_norm_coeffs, validate,
 )
 from repro.graphs.datasets import PAPER_DATASETS, DatasetSpec, make_dataset, make_lognormal_graph
-from repro.graphs.partition import Partition, halo_nodes, partition_by_edges
+from repro.graphs.partition import (
+    Partition, ShardSubgraph, halo_nodes, partition_by_edges,
+    shard_edge_counts, shard_subgraph, validate_partition,
+)

@@ -16,7 +16,15 @@ import numpy as np
 
 from repro.graphs.csr import Graph
 
-__all__ = ["Partition", "partition_by_edges", "halo_nodes"]
+__all__ = [
+    "Partition",
+    "ShardSubgraph",
+    "partition_by_edges",
+    "halo_nodes",
+    "shard_subgraph",
+    "shard_edge_counts",
+    "validate_partition",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,3 +68,92 @@ def halo_nodes(g: Graph, part: Partition, k: int) -> np.ndarray:
     nbrs = g.indices[g.indptr[lo] : g.indptr[hi]]
     remote = nbrs[(nbrs < lo) | (nbrs >= hi)]
     return np.unique(remote)
+
+
+def validate_partition(g: Graph, part: Partition) -> None:
+    """Raise if ``part`` is not a disjoint contiguous cover of ``g``'s nodes."""
+    starts = np.asarray(part.starts, np.int64)
+    if starts.ndim != 1 or starts.shape[0] < 2:
+        raise ValueError("partition needs at least one shard (starts[K+1])")
+    if starts[0] != 0 or starts[-1] != g.num_nodes:
+        raise ValueError(
+            f"partition must span [0, {g.num_nodes}), got [{starts[0]}, {starts[-1]})"
+        )
+    if np.any(np.diff(starts) < 0):
+        raise ValueError("partition starts must be monotone non-decreasing")
+
+
+def shard_edge_counts(g: Graph, part: Partition) -> np.ndarray:
+    """Edges owned by each shard, int64[num_shards] — the work-balance metric."""
+    starts = np.asarray(part.starts, np.int64)
+    return np.diff(g.indptr[starts])
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSubgraph:
+    """One shard's slice of the global graph, re-indexed into local space.
+
+    The local node space is ``[owned rows | halo rows]``: nodes ``[0,
+    num_owned)`` are the shard's own range ``[lo, hi)`` shifted to zero, and
+    nodes ``[num_owned, num_owned + halo.size)`` are the remote neighbours in
+    ``halo`` order. Halo nodes have empty in-neighbour rows (they are gather
+    *sources* only), so aggregation over ``graph`` writes real values exactly
+    into the owned rows — the property the sharded executor relies on when it
+    keeps ``out[:num_owned]``.
+
+    ``edge_range`` is the shard's half-open slice of the global CSR edge
+    arrays; because shards are contiguous node ranges, per-edge data computed
+    globally (aggregation coefficients) slices directly onto local edges.
+    """
+
+    index: int
+    lo: int
+    hi: int
+    halo: np.ndarray  # int64[H] global ids, sorted unique
+    local_ids: np.ndarray  # int64[num_owned + H] global id of each local row
+    graph: Graph  # local-index subgraph (owned + halo nodes)
+    edge_range: Tuple[int, int]  # [e_lo, e_hi) into the global edge arrays
+
+    @property
+    def num_owned(self) -> int:
+        return self.hi - self.lo
+
+    @property
+    def num_local(self) -> int:
+        return int(self.local_ids.shape[0])
+
+
+def shard_subgraph(g: Graph, part: Partition, k: int) -> ShardSubgraph:
+    """Extract shard k's local subgraph (owned rows + halo sources).
+
+    Edge order is preserved from the global CSR, so the local plan a scheduler
+    builds over this subgraph aggregates exactly the same per-edge terms as the
+    global plan restricted to the shard's nodes.
+    """
+    lo, hi = part.nodes(k)
+    halo = halo_nodes(g, part, k)
+    e_lo, e_hi = int(g.indptr[lo]), int(g.indptr[hi])
+    src = g.indices[e_lo:e_hi].astype(np.int64)
+    owned = hi - lo
+    local = np.where(
+        (src >= lo) & (src < hi), src - lo, owned + np.searchsorted(halo, src)
+    )
+    indptr_local = np.concatenate(
+        [g.indptr[lo : hi + 1] - e_lo, np.full(halo.size, e_hi - e_lo, np.int64)]
+    )
+    local_g = Graph(
+        indptr=indptr_local.astype(np.int64),
+        indices=local.astype(np.int32),
+        num_nodes=owned + int(halo.size),
+        name=f"{g.name}/shard{k}",
+    )
+    local_ids = np.concatenate([np.arange(lo, hi, dtype=np.int64), halo])
+    return ShardSubgraph(
+        index=k,
+        lo=lo,
+        hi=hi,
+        halo=halo,
+        local_ids=local_ids,
+        graph=local_g,
+        edge_range=(e_lo, e_hi),
+    )

@@ -40,20 +40,36 @@ def serve_gnn(cfg, args) -> None:
     from repro.graphs import make_dataset
     from repro.serve.gnn_engine import GNNRequest, GNNServeEngine
 
-    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(0), num_shards=args.num_shards)
     g = make_dataset(
         args.dataset, max_nodes=args.nodes, max_feature_dim=cfg.d_model, seed=0
     )
     x = g.features
-    print(f"arch={cfg.name} graph={g.name} nodes={g.num_nodes} edges={g.num_edges}")
+    print(
+        f"arch={cfg.name} graph={g.name} nodes={g.num_nodes} edges={g.num_edges} "
+        f"shards={args.num_shards}"
+    )
 
-    # Repeat traffic on one graph: the second request skips the planner.
+    # Repeat traffic on one graph: the second request skips the planner
+    # (per shard, when the engine is sharded).
     for i in range(max(args.requests, 2)):
         r = eng.infer(g, x)
         tag = "hit " if r.cache_hit else "cold"
         print(
             f"request {i}: plan[{tag}] {r.plan_ms:7.1f} ms  run {r.run_ms:6.1f} ms  "
-            f"out {r.outputs.shape}"
+            f"out {r.outputs.shape}  shards={r.num_shards}"
+        )
+
+    if eng.sharded:
+        # Cluster-level lane economics: work balance + halo-exchange volume.
+        rep = eng.shard_report()
+        print(
+            f"shard balance: edge_balance={rep['edge_balance']:.3f} "
+            f"edges_per_shard={rep['edges_per_shard']}"
+        )
+        print(
+            f"halo exchange: total={rep['halo_total']} rows/layer "
+            f"per_shard={rep['halo_per_shard']}"
         )
 
     # A batch of independent small graphs in one padded device call.
@@ -82,6 +98,9 @@ def main():
     ap.add_argument("--dataset", default="cora")
     ap.add_argument("--nodes", type=int, default=800)
     ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--num-shards", type=int, default=1,
+                    help="partition the served graph into this many "
+                         "edge-balanced shards (1 = single-plan path)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)

@@ -17,12 +17,12 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.message_passing import AmpleEngine, EngineConfig
+from repro.core.message_passing import AmpleEngine, EngineConfig, compile_sharded_plans
 from repro.graphs.csr import Graph, add_self_loops
 
 __all__ = [
@@ -33,6 +33,7 @@ __all__ = [
     "agg_mode",
     "engine_config",
     "prepare_graph",
+    "make_engine",
     "gnn_init",
     "gnn_apply",
     "gnn_reference",
@@ -118,6 +119,36 @@ def prepare_graph(cfg: ModelConfig, g: Graph) -> Graph:
     return g
 
 
+def make_engine(
+    cfg: ModelConfig,
+    prepared: Graph,
+    *,
+    num_shards: Optional[int] = None,
+    partition=None,
+    mesh=None,
+) -> AmpleEngine:
+    """Build the execution engine ``cfg`` calls for over a *prepared* graph.
+
+    ``gnn_num_shards`` (or the explicit ``num_shards``/``partition``
+    overrides) selects between the single-plan ``AmpleEngine`` and the
+    partition-aware ``ShardedAmpleEngine`` — the arch apply functions are
+    agnostic, so gcn/gin/sage thread through either unchanged.
+    """
+    shards = cfg.gnn_num_shards if num_shards is None else num_shards
+    if partition is None and shards <= 1:
+        return AmpleEngine(prepared, engine_config(cfg))
+    from repro.distributed.graph_shard import ShardedAmpleEngine
+
+    splan = compile_sharded_plans(
+        prepared,
+        engine_config(cfg),
+        num_shards=None if partition is not None else shards,
+        partition=partition,
+        modes=(agg_mode(cfg),),
+    )
+    return ShardedAmpleEngine(prepared, splan, mesh=mesh)
+
+
 # --------------------------------------------------- uniform entry points
 def gnn_init(cfg: ModelConfig, key) -> Dict:
     return get_arch(cfg.gnn_arch).init(cfg, key)
@@ -154,6 +185,7 @@ def gnn_forward(params: Dict, cfg: ModelConfig, batch: Dict) -> Tuple[jnp.ndarra
         )
     if engine is None:
         g = prepare_graph(cfg, batch["graph"])
-        engine = AmpleEngine(g, engine_config(cfg))
+        engine = make_engine(cfg, g)
+    engine.begin_forward()
     y = gnn_apply(cfg, params, engine, x)
     return y, jnp.asarray(0.0, jnp.float32)

@@ -20,9 +20,10 @@ the cacheable artifact:
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,9 +31,22 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.degree_quant import inference_precision_tags
-from repro.core.message_passing import AmpleEngine, EngineConfig, ExecutionPlan, compile_plans
+from repro.core.message_passing import (
+    AmpleEngine,
+    EngineConfig,
+    ExecutionPlan,
+    ShardPlan,
+    ShardedExecutionPlan,
+    compile_plans,
+    compile_shard_plan,
+    compile_sharded_plans,
+    engine_precision_tags,
+    shard_plan_key,
+)
 from repro.core.scheduler import plan_fingerprint
+from repro.distributed.graph_shard import ShardedAmpleEngine
 from repro.graphs.csr import Graph, disjoint_union
+from repro.graphs.partition import Partition, partition_by_edges, validate_partition
 from repro.models.gnn import api as gnn_api
 
 __all__ = ["GNNRequest", "GNNResponse", "GNNServeEngine"]
@@ -54,6 +68,7 @@ class GNNResponse:
     fingerprint: str  # plan-cache key the request resolved to
     plan_ms: float  # host planning time (0.0 on a cache hit)
     run_ms: float  # device execution time
+    num_shards: int = 1  # shards the plan executed over (1 = unsharded path)
 
 
 class GNNServeEngine:
@@ -65,6 +80,13 @@ class GNNServeEngine:
     params: model params; initialised from ``key`` when omitted.
     engine_cfg: EngineConfig override; derived from ``cfg`` by default.
     plan_cache_size: max distinct graph structures kept warm (LRU).
+    num_shards: >1 partitions every served graph edge-balanced into this many
+        shards and executes through ``ShardedAmpleEngine`` (halo exchange +
+        one plan per shard); 1 is the existing single-plan path.
+    partition: explicit ``Partition`` override (validated per graph); implies
+        the sharded path and fixes ``num_shards`` to its shard count.
+    mesh: optional 1-D ``("shard",)`` device mesh for SPMD shard execution;
+        without one, shards run as a host loop on the local device.
     """
 
     def __init__(
@@ -74,20 +96,35 @@ class GNNServeEngine:
         *,
         engine_cfg: Optional[EngineConfig] = None,
         plan_cache_size: int = 32,
+        num_shards: int = 1,
+        partition: Optional[Partition] = None,
+        mesh=None,
         key=None,
     ):
         if cfg.family != "gnn":
             raise ValueError(f"GNNServeEngine needs a family='gnn' config, got {cfg.family!r}")
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
         self.cfg = cfg
         self.engine_cfg = engine_cfg if engine_cfg is not None else gnn_api.engine_config(cfg)
         if params is None:
             params = gnn_api.gnn_init(cfg, key if key is not None else jax.random.PRNGKey(0))
         self.params = params
         self.plan_cache_size = plan_cache_size
+        self.partition = partition
+        self.num_shards = partition.num_shards if partition is not None else num_shards
+        self.mesh = mesh
         # fingerprint -> (prepared graph, plan, engine); OrderedDict as LRU.
         # The engine rides along so its weight-quant cache survives across
         # requests (params are fixed for this serve engine's lifetime).
-        self._cache: "OrderedDict[str, Tuple[Graph, ExecutionPlan, AmpleEngine]]" = OrderedDict()
+        # Sharded requests store (prepared, ShardedExecutionPlan,
+        # ShardedAmpleEngine) tuples under the same LRU.
+        self._cache: "OrderedDict[str, Tuple[Graph, Union[ExecutionPlan, ShardedExecutionPlan], AmpleEngine]]" = OrderedDict()
+        # Per-shard plan LRU, keyed on shard_plan_key (structure, partition
+        # boundaries, shard index, planner config): a shard compiled for one
+        # request is reusable by any later request on the same partitioned
+        # structure, independently of the assembled plan above.
+        self._shard_plans: "OrderedDict[str, ShardPlan]" = OrderedDict()
         self.stats: Dict[str, int] = {
             "requests": 0,
             "batches": 0,
@@ -95,7 +132,13 @@ class GNNServeEngine:
             "cache_misses": 0,
             "planner_calls": 0,
             "evictions": 0,
+            "shard_hits": 0,
+            "warm_loads": 0,
         }
+
+    @property
+    def sharded(self) -> bool:
+        return self.num_shards > 1 or self.partition is not None
 
     # ------------------------------------------------------------ plan cache
     def _cache_key(self, g: Graph, arch: str, members: Optional[Sequence[Graph]]) -> str:
@@ -110,6 +153,13 @@ class GNNServeEngine:
         parts = [repr(self.engine_cfg), arch]
         if members is not None:
             parts.append("bounds:" + ",".join(str(m.num_nodes) for m in members))
+        if self.sharded:
+            if self.partition is not None:
+                parts.append(
+                    "starts:" + ",".join(str(int(s)) for s in self.partition.starts)
+                )
+            else:
+                parts.append(f"shards:{self.num_shards}")
         return plan_fingerprint(g, *parts)
 
     def _plan_for(
@@ -132,12 +182,7 @@ class GNNServeEngine:
                 # Tag each member independently: a small graph batched with a
                 # hub-heavy one must keep its own Degree-Quant-protected
                 # nodes, exactly as if served solo.
-                tags = np.concatenate([
-                    inference_precision_tags(
-                        gnn_api.prepare_graph(cfg, m), self.engine_cfg.dq
-                    )
-                    for m in members
-                ])
+                tags = self._member_tags(cfg, members)
             plan = compile_plans(
                 prepared, self.engine_cfg, modes=(gnn_api.agg_mode(cfg),),
                 precision_tags=tags,
@@ -149,6 +194,93 @@ class GNNServeEngine:
                 self.stats["evictions"] += 1
         prepared, plan, engine = self._cache[key]
         return prepared, plan, engine, hit, plan_ms
+
+    def _member_tags(self, cfg, members: Sequence[Graph]) -> np.ndarray:
+        """Per-member Degree-Quant tags for a batched disjoint union."""
+        return np.concatenate([
+            inference_precision_tags(
+                gnn_api.prepare_graph(cfg, m), self.engine_cfg.dq
+            )
+            for m in members
+        ])
+
+    def _plan_for_sharded(
+        self, g: Graph, arch: str, members: Optional[Sequence[Graph]] = None
+    ) -> Tuple[Graph, ShardedExecutionPlan, ShardedAmpleEngine, bool, float]:
+        """Sharded analogue of ``_plan_for``: per-shard plan-cache economics.
+
+        The assembled (prepared graph, ShardedExecutionPlan, engine) triple is
+        cached under the request key like the unsharded path; below it, every
+        ShardPlan lives in a per-shard LRU keyed on (structure, partition,
+        shard) fingerprints, so only shards never seen before run the planner.
+        ``cache_hit`` is True iff no shard needed compiling; ``plan_ms``
+        counts planner time only (0.0 on a full hit).
+        """
+        key = self._cache_key(g, arch, members)
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            self.stats["cache_hits"] += 1
+            prepared, splan, engine = self._cache[key]
+            return prepared, splan, engine, True, 0.0
+
+        cfg = dataclasses.replace(self.cfg, gnn_arch=arch)
+        prepared = gnn_api.prepare_graph(cfg, g)
+        if self.partition is not None:
+            validate_partition(prepared, self.partition)
+            part = self.partition
+        else:
+            part = partition_by_edges(prepared, self.num_shards)
+        modes = (gnn_api.agg_mode(cfg),)
+        if members is not None and self.engine_cfg.mixed_precision:
+            tags = self._member_tags(cfg, members)
+        else:
+            tags = None
+        eff_tags = (
+            tags if tags is not None else engine_precision_tags(prepared, self.engine_cfg)
+        )
+
+        plan_ms = 0.0
+        warm: Dict[int, ShardPlan] = {}
+        missing: List[int] = []
+        for k in range(part.num_shards):
+            skey = shard_plan_key(
+                prepared, part, k, self.engine_cfg, modes=modes, precision_tags=eff_tags
+            )
+            if skey in self._shard_plans:
+                self._shard_plans.move_to_end(skey)
+                warm[k] = self._shard_plans[skey]
+                self.stats["shard_hits"] += 1
+            else:
+                missing.append(k)
+        if missing:
+            from repro.core.message_passing import aggregation_coefficients
+
+            self.stats["planner_calls"] += len(missing)
+            t0 = time.perf_counter()
+            # Global O(E) coefficient work once per request, not per shard.
+            mode_coeffs = {m: aggregation_coefficients(prepared, m) for m in modes}
+            for k in missing:
+                sp = compile_shard_plan(
+                    prepared, part, k, self.engine_cfg,
+                    modes=modes, precision_tags=eff_tags, mode_coeffs=mode_coeffs,
+                )
+                warm[k] = sp
+                self._shard_plans[sp.fingerprint] = sp
+            plan_ms = (time.perf_counter() - t0) * 1e3
+            while len(self._shard_plans) > self.plan_cache_size * max(self.num_shards, 1):
+                self._shard_plans.popitem(last=False)
+        splan = compile_sharded_plans(
+            prepared, self.engine_cfg,
+            partition=part, modes=modes, precision_tags=eff_tags, shard_plans=warm,
+        )
+        engine = ShardedAmpleEngine(prepared, splan, mesh=self.mesh)
+        hit = not missing
+        self.stats["cache_hits" if hit else "cache_misses"] += 1
+        self._cache[key] = (prepared, splan, engine)
+        while len(self._cache) > self.plan_cache_size:
+            self._cache.popitem(last=False)
+            self.stats["evictions"] += 1
+        return prepared, splan, engine, hit, plan_ms
 
     # -------------------------------------------------------------- serving
     def _arch(self, requested: str) -> str:
@@ -172,7 +304,10 @@ class GNNServeEngine:
         """Serve one request; plans come from the LRU cache when warm."""
         self.stats["requests"] += 1
         arch = self._arch(arch)
-        prepared, plan, engine, hit, plan_ms = self._plan_for(graph, arch)
+        if self.sharded:
+            prepared, plan, engine, hit, plan_ms = self._plan_for_sharded(graph, arch)
+        else:
+            prepared, plan, engine, hit, plan_ms = self._plan_for(graph, arch)
         y, run_ms = self._run(arch, prepared, engine, features)
         return GNNResponse(
             outputs=y,
@@ -180,6 +315,7 @@ class GNNServeEngine:
             fingerprint=plan.fingerprint,
             plan_ms=plan_ms,
             run_ms=run_ms,
+            num_shards=getattr(plan, "num_shards", 1),
         )
 
     def infer_batch(self, requests: Sequence[GNNRequest]) -> List[GNNResponse]:
@@ -207,7 +343,12 @@ class GNNServeEngine:
         features = np.concatenate(
             [np.asarray(r.features, np.float32) for r in requests], axis=0
         )
-        prepared, plan, engine, hit, plan_ms = self._plan_for(union, arch, members)
+        if self.sharded:
+            prepared, plan, engine, hit, plan_ms = self._plan_for_sharded(
+                union, arch, members
+            )
+        else:
+            prepared, plan, engine, hit, plan_ms = self._plan_for(union, arch, members)
         y, run_ms = self._run(arch, prepared, engine, features)
         out: List[GNNResponse] = []
         start = 0
@@ -220,11 +361,74 @@ class GNNServeEngine:
                     fingerprint=plan.fingerprint,
                     plan_ms=plan_ms,
                     run_ms=run_ms,
+                    num_shards=getattr(plan, "num_shards", 1),
                 )
             )
             start = stop
         return out
 
+    # --------------------------------------------------------- persistence
+    def save_plan_cache(self, directory: str) -> List[str]:
+        """Persist every cached plan (npz via ``checkpoint.plan_store``).
+
+        One file per cache entry, named by the serve-cache key; the prepared
+        graph structure rides along so ``load_plan_cache`` can rebuild the
+        execution engine without re-running arch preprocessing.
+        """
+        from repro.checkpoint.plan_store import save_plan
+
+        os.makedirs(directory, exist_ok=True)
+        paths = []
+        for key, (prepared, plan, _) in self._cache.items():
+            path = os.path.join(directory, f"{key}.plan.npz")
+            save_plan(path, plan, graph=prepared, extra={"serve_key": key})
+            paths.append(path)
+        return paths
+
+    def load_plan_cache(self, directory: str) -> int:
+        """Warm the plan cache from ``save_plan_cache`` output; returns count.
+
+        A restarted server calls this instead of paying the planner again:
+        the first request on a persisted structure reports ``cache_hit=True``
+        with ``plan_ms == 0.0``, exactly like in-memory repeat traffic.
+        Entries whose file lacks a serve key or graph are skipped.
+        """
+        from repro.checkpoint.plan_store import load_plan
+
+        loaded = 0
+        if not os.path.isdir(directory):
+            return 0
+        for name in sorted(os.listdir(directory)):
+            if not name.endswith(".plan.npz"):
+                continue
+            rec = load_plan(os.path.join(directory, name))
+            key = rec.extra.get("serve_key")
+            if key is None or rec.graph is None:
+                continue
+            if isinstance(rec.plan, ShardedExecutionPlan):
+                engine: AmpleEngine = ShardedAmpleEngine(
+                    rec.graph, rec.plan, mesh=self.mesh
+                )
+                for sp in rec.plan.shards:
+                    self._shard_plans[sp.fingerprint] = sp
+            else:
+                engine = AmpleEngine(rec.graph, plan=rec.plan)
+            self._cache[key] = (rec.graph, rec.plan, engine)
+            loaded += 1
+        while len(self._cache) > self.plan_cache_size:
+            self._cache.popitem(last=False)
+            self.stats["evictions"] += 1
+        self.stats["warm_loads"] += loaded
+        return loaded
+
     # ------------------------------------------------------------- metrics
     def cache_info(self) -> Dict[str, int]:
         return {"size": len(self._cache), "capacity": self.plan_cache_size, **self.stats}
+
+    def shard_report(self) -> Optional[Dict[str, object]]:
+        """Shard economics (edge balance, halo volume) of the most recently
+        planned sharded request; None when nothing sharded is cached."""
+        for _, _, engine in reversed(list(self._cache.values())):
+            if isinstance(engine, ShardedAmpleEngine):
+                return engine.shard_report()
+        return None

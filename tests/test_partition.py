@@ -1,0 +1,134 @@
+"""graphs/partition.py invariants — the substrate under sharded execution.
+
+Covers the contract the sharded planner relies on: shards are a disjoint
+contiguous cover, edge counts are balanced on skewed power-law graphs up to
+the cut granularity (one node's degree), halos are exactly the remote
+neighbours, and degenerate shapes (more shards than nodes, empty graphs)
+stay well-formed.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.graphs import (
+    Partition,
+    halo_nodes,
+    make_lognormal_graph,
+    partition_by_edges,
+    shard_edge_counts,
+    shard_subgraph,
+    validate,
+    validate_partition,
+)
+from repro.graphs.csr import Graph, from_edge_list
+
+
+def _power_law_graph(n=400, seed=0):
+    """Heavy-tailed in-degrees: a few hub rows own a large share of the edges."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, 8 * n)
+    # Pareto-ranked destinations: low ids soak up most incoming edges (hubs)
+    dst = (rng.pareto(1.2, 8 * n) * 2).astype(np.int64) % n
+    return from_edge_list(src, dst, n, name="powerlaw")
+
+
+@pytest.mark.parametrize("num_shards", [1, 2, 4, 7])
+def test_shards_cover_nodes_exactly_once(num_shards):
+    g = _power_law_graph(seed=1)
+    part = partition_by_edges(g, num_shards)
+    validate_partition(g, part)
+    seen = np.zeros(g.num_nodes, np.int64)
+    for k in range(part.num_shards):
+        lo, hi = part.nodes(k)
+        seen[lo:hi] += 1
+    assert (seen == 1).all()
+    for v in [0, g.num_nodes // 2, g.num_nodes - 1]:
+        k = part.shard_of(v)
+        lo, hi = part.nodes(k)
+        assert lo <= v < hi
+
+
+@pytest.mark.parametrize("num_shards", [2, 4, 8])
+def test_edge_balance_on_skewed_graph(num_shards):
+    """Contiguous edge-balanced cuts are off by at most the boundary node."""
+    g = _power_law_graph(n=600, seed=2)
+    assert g.degrees.max() > 4 * g.degrees.mean()  # the premise: skew exists
+    part = partition_by_edges(g, num_shards)
+    counts = shard_edge_counts(g, part)
+    assert counts.sum() == g.num_edges
+    ideal = g.num_edges / num_shards
+    slack = int(g.degrees.max())  # cut granularity: one node's edges
+    assert counts.max() <= ideal + slack + 1
+    assert counts.min() >= max(ideal - num_shards * slack, 0) - 1
+
+
+def test_halo_is_exactly_remote_neighbors():
+    g = _power_law_graph(n=300, seed=3)
+    part = partition_by_edges(g, 5)
+    for k in range(5):
+        lo, hi = part.nodes(k)
+        halo = halo_nodes(g, part, k)
+        want = set()
+        for i in range(lo, hi):
+            want.update(int(j) for j in g.neighbors(i) if j < lo or j >= hi)
+        assert set(halo.tolist()) == want
+        assert (np.diff(halo) > 0).all()  # sorted unique, the subgraph contract
+
+
+def test_more_shards_than_nodes():
+    g = make_lognormal_graph(5, 2.0, seed=4)
+    part = partition_by_edges(g, 12)
+    validate_partition(g, part)
+    assert part.num_shards == 12
+    counts = shard_edge_counts(g, part)
+    assert counts.sum() == g.num_edges
+    covered = sum(hi - lo for lo, hi in (part.nodes(k) for k in range(12)))
+    assert covered == g.num_nodes
+    for k in range(12):  # empty shards have empty halos and valid subgraphs
+        sub = shard_subgraph(g, part, k)
+        validate(sub.graph)
+
+
+def test_empty_graph_partition():
+    g = Graph(indptr=np.zeros(1, np.int64), indices=np.zeros(0, np.int32), num_nodes=0)
+    part = partition_by_edges(g, 3)
+    validate_partition(g, part)
+    assert shard_edge_counts(g, part).sum() == 0
+    for k in range(3):
+        assert halo_nodes(g, part, k).size == 0
+        sub = shard_subgraph(g, part, k)
+        assert sub.num_owned == 0 and sub.num_local == 0
+        validate(sub.graph)
+
+
+def test_partition_validation_rejects_bad_covers():
+    g = make_lognormal_graph(20, 3.0, seed=5)
+    with pytest.raises(ValueError, match="span"):
+        validate_partition(g, Partition(starts=np.asarray([0, 10, 19])))
+    with pytest.raises(ValueError, match="span"):
+        validate_partition(g, Partition(starts=np.asarray([1, 10, 20])))
+    with pytest.raises(ValueError, match="monotone"):
+        validate_partition(g, Partition(starts=np.asarray([0, 15, 10, 20])))
+    with pytest.raises(ValueError):
+        partition_by_edges(g, 0)
+
+
+def test_shard_subgraph_local_structure():
+    """Local subgraphs preserve edge order and re-index owned + halo rows."""
+    g = _power_law_graph(n=250, seed=6)
+    part = partition_by_edges(g, 4)
+    for k in range(4):
+        sub = shard_subgraph(g, part, k)
+        validate(sub.graph)
+        lo, hi = sub.lo, sub.hi
+        # owned rows first, then halo; local_ids maps back to global ids
+        assert (sub.local_ids[: sub.num_owned] == np.arange(lo, hi)).all()
+        assert (sub.local_ids[sub.num_owned :] == sub.halo).all()
+        # halo rows are sources only: no in-edges in the local graph
+        assert (np.diff(sub.graph.indptr[sub.num_owned :]) == 0).all()
+        # edge slice alignment: local edges == global edges, remapped
+        e_lo, e_hi = sub.edge_range
+        global_src = g.indices[e_lo:e_hi]
+        local_src = sub.local_ids[sub.graph.indices]
+        assert (local_src == global_src).all()

@@ -1,0 +1,373 @@
+"""Partition-aware execution: sharded planner, engine, serving and persistence.
+
+Acceptance criteria of the sharded refactor:
+  * sharded outputs == unsharded outputs within float tolerance for
+    num_shards ∈ {1, 2, 4}, every arch, mixed precision on;
+  * num_shards=1 reduces to the existing single-plan path;
+  * repeat sharded traffic is a plan-cache hit (plan_ms == 0.0, bitwise
+    identical outputs);
+  * plans (sharded and not) round-trip through checkpoint/plan_store and
+    warm-start a restarted serve engine.
+Plus regression tests for the engine-level satellites: the weight-quant
+cache id-reuse fix and the static activation scale/zp state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import (
+    AmpleEngine,
+    EngineConfig,
+    compile_plans,
+    compile_sharded_plans,
+)
+from repro.distributed.graph_shard import ShardedAmpleEngine, sharded_aggregate
+from repro.graphs import make_dataset, partition_by_edges
+from repro.graphs.partition import Partition
+from repro.models.gnn import api as gnn_api
+from repro.serve.gnn_engine import GNNRequest, GNNServeEngine
+
+ARCHS = ["gcn", "gin", "sage"]
+
+
+def _cfg(arch, *, precision="mixed"):
+    return dataclasses.replace(
+        get_config(f"ample-{arch}", reduced=True),
+        d_model=20, d_ff=12, vocab_size=6, gnn_precision=precision,
+        gnn_edges_per_tile=64,
+    )
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return make_dataset("cora", max_nodes=160, max_feature_dim=20, seed=2)
+
+
+# ----------------------------------------------------------- sharded planner
+def test_sharded_plan_fingerprints_stable_and_distinct(graph):
+    cfg = EngineConfig(edges_per_tile=64)
+    a = compile_sharded_plans(graph, cfg, num_shards=3, modes=("gcn",))
+    b = compile_sharded_plans(graph, cfg, num_shards=3, modes=("gcn",))
+    assert a.fingerprint == b.fingerprint and a == b and hash(a) == hash(b)
+    assert [s.fingerprint for s in a.shards] == [s.fingerprint for s in b.shards]
+    c = compile_sharded_plans(graph, cfg, num_shards=4, modes=("gcn",))
+    assert c.fingerprint != a.fingerprint
+    d = compile_sharded_plans(graph, cfg, num_shards=3, modes=("sum",))
+    assert d.fingerprint != a.fingerprint
+    assert len({s.fingerprint for s in a.shards}) == 3  # per-shard identity
+
+
+def test_sharded_plan_shape_invariants(graph):
+    splan = compile_sharded_plans(graph, EngineConfig(edges_per_tile=64),
+                                  num_shards=4, modes=("sum",))
+    assert splan.num_shards == 4
+    assert sum(s.num_owned for s in splan.shards) == graph.num_nodes
+    assert sum(s.num_edges for s in splan.shards) == graph.num_edges
+    assert splan.edge_balance >= 1.0
+    assert splan.halo_total == sum(s.halo_size for s in splan.shards)
+    # global tags sliced into local tag arrays (owned prefix)
+    for s in splan.shards:
+        np.testing.assert_array_equal(
+            s.plan.precision_tags[: s.num_owned],
+            splan.precision_tags[s.shard.lo : s.shard.hi],
+        )
+
+
+def test_sharded_aggregate_matches_unsharded(graph):
+    cfg = EngineConfig(edges_per_tile=64, mixed_precision=True)
+    eng = AmpleEngine(graph, cfg)
+    x = jnp.asarray(graph.features)
+    ref = np.asarray(eng.aggregate(x, mode="gcn"))
+    from repro.core.quantization import compute_scale_zp
+
+    qp = compute_scale_zp(x, symmetric=True)
+    splan = compile_sharded_plans(graph, cfg, num_shards=3, modes=("gcn",))
+    out = np.asarray(sharded_aggregate(x, splan, mode="gcn", qp=qp))
+    np.testing.assert_allclose(out, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_sharded_engine_rejects_mismatched_graph(graph):
+    cfg = EngineConfig(edges_per_tile=64)
+    splan = compile_sharded_plans(graph, cfg, num_shards=2, modes=("sum",))
+    other = make_dataset("cora", max_nodes=90, max_feature_dim=20, seed=7)
+    with pytest.raises(ValueError, match="different graph structure"):
+        ShardedAmpleEngine(other, splan)
+
+
+def test_sharded_engine_rejects_unknown_mode(graph):
+    splan = compile_sharded_plans(graph, EngineConfig(edges_per_tile=64),
+                                  num_shards=2, modes=("sum",))
+    eng = ShardedAmpleEngine(graph, splan)
+    with pytest.raises(KeyError, match="recompile"):
+        eng.aggregate(jnp.asarray(graph.features), mode="gcn")
+
+
+# -------------------------------------------------- acceptance: serve parity
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("num_shards", [1, 2, 4])
+def test_sharded_serving_matches_unsharded(arch, num_shards, graph):
+    """Acceptance: sharded GNNServeEngine == unsharded, mixed precision on."""
+    cfg = _cfg(arch, precision="mixed")
+    base = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    ref = base.infer(graph, graph.features)
+    eng = GNNServeEngine(cfg, base.params, num_shards=num_shards)
+    r = eng.infer(graph, graph.features)
+    assert r.num_shards == num_shards if num_shards > 1 else r.num_shards == 1
+    np.testing.assert_allclose(r.outputs, ref.outputs, atol=5e-4, rtol=1e-4)
+
+
+def test_num_shards_one_is_the_single_plan_path(graph):
+    """num_shards=1 must reduce to the existing unsharded engine exactly."""
+    cfg = _cfg("gcn")
+    base = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    eng = GNNServeEngine(cfg, base.params, num_shards=1)
+    assert not eng.sharded
+    r = eng.infer(graph, graph.features)
+    ref = base.infer(graph, graph.features)
+    np.testing.assert_array_equal(r.outputs, ref.outputs)
+    assert r.fingerprint == ref.fingerprint  # same cache key, same plan
+    (_, plan, engine), = list(eng._cache.values())
+    assert not isinstance(engine, ShardedAmpleEngine)
+
+
+def test_sharded_plan_cache_hit_bitwise(graph):
+    """Acceptance: warm sharded request — cache_hit, plan_ms == 0.0, bitwise."""
+    cfg = _cfg("gin")
+    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(1), num_shards=3)
+    r1 = eng.infer(graph, graph.features)
+    r2 = eng.infer(graph, graph.features)
+    assert not r1.cache_hit and r2.cache_hit
+    assert r1.plan_ms > 0.0 and r2.plan_ms == 0.0
+    assert r1.fingerprint == r2.fingerprint
+    np.testing.assert_array_equal(r1.outputs, r2.outputs)
+    assert eng.stats["planner_calls"] == 3  # one per shard, once ever
+    rep = eng.shard_report()
+    assert rep is not None and rep["num_shards"] == 3
+    assert GNNServeEngine(cfg).shard_report() is None  # nothing cached yet
+
+
+def test_per_shard_cache_reuse_across_assembled_entries(graph):
+    """Shards live in their own LRU: a re-assembled plan reuses warm shards."""
+    cfg = _cfg("gin")
+    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(1), num_shards=2)
+    eng.infer(graph, graph.features)
+    assert eng.stats["planner_calls"] == 2
+    # drop only the assembled entry; the per-shard LRU stays warm
+    eng._cache.clear()
+    r = eng.infer(graph, graph.features)
+    assert eng.stats["planner_calls"] == 2  # no shard recompiled
+    assert eng.stats["shard_hits"] == 2
+    assert r.cache_hit and r.plan_ms == 0.0
+
+
+def test_explicit_partition_knob(graph):
+    cfg = _cfg("gcn")
+    prepared = gnn_api.prepare_graph(cfg, graph)
+    part = partition_by_edges(prepared, 2)
+    base = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    eng = GNNServeEngine(cfg, base.params, partition=part)
+    assert eng.num_shards == 2 and eng.sharded
+    r = eng.infer(graph, graph.features)
+    ref = base.infer(graph, graph.features)
+    np.testing.assert_allclose(r.outputs, ref.outputs, atol=5e-4, rtol=1e-4)
+    # a partition that does not cover the prepared graph is rejected
+    bad = GNNServeEngine(
+        cfg, base.params,
+        partition=Partition(starts=np.asarray([0, 10, prepared.num_nodes - 1])),
+    )
+    with pytest.raises(ValueError, match="span"):
+        bad.infer(graph, graph.features)
+
+
+def test_sharded_batch_matches_individual(graph):
+    # float precision: batching is exact there (mixed batches share int8
+    # activation scales batch-wide, the documented granularity trade-off)
+    cfg = _cfg("sage", precision="float")
+    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(3), num_shards=2)
+    g2 = make_dataset("cora", max_nodes=70, max_feature_dim=20, seed=9)
+    reqs = [GNNRequest(graph=graph, features=graph.features),
+            GNNRequest(graph=g2, features=g2.features)]
+    batched = eng.infer_batch(reqs)
+    second = eng.infer_batch(reqs)
+    assert not batched[0].cache_hit and second[0].cache_hit
+    for a, b in zip(batched, second):
+        np.testing.assert_array_equal(a.outputs, b.outputs)
+    solo_eng = GNNServeEngine(cfg, eng.params)
+    for g_, r in zip((graph, g2), batched):
+        solo = solo_eng.infer(g_, g_.features)
+        np.testing.assert_allclose(r.outputs, solo.outputs, atol=1e-4, rtol=1e-4)
+
+
+def test_model_forward_with_cfg_num_shards(graph):
+    """cfg.gnn_num_shards threads the sharded engine through model_forward."""
+    from repro.models.api import model_forward, model_init
+
+    cfg = _cfg("gcn")
+    params = model_init(cfg, jax.random.PRNGKey(0))
+    y_ref, _ = model_forward(params, cfg, {"graph": graph, "features": graph.features})
+    cfg_sh = dataclasses.replace(cfg, gnn_num_shards=3)
+    y_sh, _ = model_forward(params, cfg_sh, {"graph": graph, "features": graph.features})
+    np.testing.assert_allclose(
+        np.asarray(y_sh), np.asarray(y_ref), atol=5e-4, rtol=1e-4
+    )
+
+
+# ------------------------------------------------- satellite: weight-q cache
+def test_weight_q_cache_survives_id_reuse(graph):
+    """id() of a dead array can be recycled; the cache must not serve the old
+    quantized weights for a new array that happens to alias the id."""
+    eng = AmpleEngine(graph, EngineConfig(edges_per_tile=64, mixed_precision=True))
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((20, 6)), jnp.float32)
+    w_q, w_qp = eng._weight_q(w)
+    entry = eng._wq_cache[id(w)]
+    assert entry[0] is w  # strong ref pins the id for the cache's lifetime
+    # simulate CPython id reuse: a stale entry left under this array's id
+    w2 = jnp.asarray(np.random.default_rng(1).standard_normal((20, 6)), jnp.float32)
+    eng._wq_cache[id(w2)] = (object(), "stale_q", "stale_qp")
+    w2_q, w2_qp = eng._weight_q(w2)
+    assert not isinstance(w2_q, str), "stale entry served for a recycled id"
+    np.testing.assert_array_equal(
+        np.asarray(w2_q),
+        np.asarray(__import__("repro.core.quantization", fromlist=["x"]).quantize_per_channel(w2, axis=-1)[0]),
+    )
+    # repeated lookups of the live weight stay cached (same objects)
+    again_q, again_qp = eng._weight_q(w)
+    assert again_q is w_q and again_qp is w_qp
+
+
+def test_weight_q_cache_is_bounded(graph):
+    """Feeding ever-fresh weight arrays (a training loop) must not grow the
+    weight-quant cache without limit — LRU eviction bounds it."""
+    eng = AmpleEngine(graph, EngineConfig(edges_per_tile=64, mixed_precision=True))
+    for i in range(eng._WQ_CACHE_CAP + 20):
+        w = jnp.full((20, 6), float(i % 7) + 1.0, jnp.float32)
+        eng._weight_q(w)
+    assert len(eng._wq_cache) <= eng._WQ_CACHE_CAP
+
+
+# -------------------------------------- satellite: static activation scale/zp
+def test_warm_requests_skip_activation_calibration(graph, monkeypatch):
+    """Cold request calibrates int8 scale/zp once per call site; warm cache
+    hits reuse that static state — compute_scale_zp must not run again."""
+    import repro.core.aggregation as agg_mod
+    import repro.core.message_passing as mp_mod
+
+    calls = {"n": 0}
+    real = mp_mod.compute_scale_zp
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(mp_mod, "compute_scale_zp", counting)
+    monkeypatch.setattr(agg_mod, "compute_scale_zp", counting)
+
+    cfg = _cfg("gcn", precision="mixed")
+    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    cold = eng.infer(graph, graph.features)
+    assert calls["n"] > 0  # cold request calibrated
+    calls["n"] = 0
+    warm = eng.infer(graph, graph.features)
+    assert calls["n"] == 0, "warm cache hit recomputed activation scale/zp"
+    assert warm.cache_hit
+    np.testing.assert_array_equal(cold.outputs, warm.outputs)
+
+
+def test_engine_reuse_across_trace_and_eager(graph):
+    """Static quant state must not capture tracers: an engine used inside
+    jit/grad (training) and then eagerly (serving/eval) keeps working."""
+    eng = AmpleEngine(graph, EngineConfig(edges_per_tile=64, mixed_precision=True))
+    x = jnp.asarray(graph.features)
+
+    def loss(x_):
+        eng.begin_forward()
+        return eng.aggregate(x_, mode="sum").sum()
+
+    g1 = jax.grad(loss)(x)  # traced use: nothing traced may persist
+    assert np.isfinite(np.asarray(g1)).all()
+    eng.begin_forward()
+    y = eng.aggregate(x, mode="sum")  # eager reuse after the trace
+    assert np.isfinite(np.asarray(y)).all()
+    y2 = jax.jit(lambda x_: eng.aggregate(x_, mode="sum"))(x)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y), atol=1e-5)
+
+
+def test_direct_engine_use_keeps_dynamic_calibration(graph):
+    """Without begin_forward, aggregate stays per-call dynamic (no stale qp)."""
+    eng = AmpleEngine(graph, EngineConfig(edges_per_tile=64, mixed_precision=True))
+    x1 = jnp.asarray(graph.features)
+    x2 = x1 * 7.5  # very different range
+    a = np.asarray(eng.aggregate(x1, mode="sum"))
+    b = np.asarray(eng.aggregate(x2, mode="sum"))
+    # dynamic calibration scales with the input: b uses x2's own range
+    np.testing.assert_allclose(b, a * 7.5, rtol=5e-2, atol=5e-2)
+    assert not eng._act_qp  # no static slots were populated
+
+
+# ------------------------------------------------ satellite: plan persistence
+def test_plan_store_roundtrip_unsharded(graph, tmp_path):
+    from repro.checkpoint.plan_store import load_plan, save_plan
+
+    cfg = EngineConfig(edges_per_tile=64)
+    plan = compile_plans(graph, cfg, modes=("gcn", "sum"))
+    path = save_plan(str(tmp_path / "p.npz"), plan, graph=graph, extra={"k": "v"})
+    rec = load_plan(path)
+    assert rec.plan == plan and rec.plan.fingerprint == plan.fingerprint
+    assert rec.extra == {"k": "v"}
+    assert rec.plan.cfg == cfg
+    np.testing.assert_array_equal(rec.graph.indptr, graph.indptr)
+    np.testing.assert_array_equal(rec.plan.precision_tags, plan.precision_tags)
+    for mode in ("gcn", "sum"):
+        for tag, p in plan.mode_plans[mode].items():
+            q = rec.plan.mode_plans[mode][tag]
+            np.testing.assert_array_equal(p.gather_idx, q.gather_idx)
+            np.testing.assert_array_equal(p.coeff, q.coeff)
+            assert p.total_edges == q.total_edges
+
+
+def test_plan_store_roundtrip_sharded(graph, tmp_path):
+    from repro.checkpoint.plan_store import load_plan, save_plan
+
+    cfg = EngineConfig(edges_per_tile=64)
+    splan = compile_sharded_plans(graph, cfg, num_shards=3, modes=("sum",))
+    path = save_plan(str(tmp_path / "s.npz"), splan, graph=graph)
+    rec = load_plan(path)
+    assert rec.plan == splan
+    assert rec.plan.partition_fp == splan.partition_fp
+    np.testing.assert_array_equal(rec.plan.partition.starts, splan.partition.starts)
+    for a, b in zip(rec.plan.shards, splan.shards):
+        assert a.fingerprint == b.fingerprint
+        np.testing.assert_array_equal(a.shard.halo, b.shard.halo)
+        np.testing.assert_array_equal(a.shard.local_ids, b.shard.local_ids)
+        np.testing.assert_array_equal(a.plan.precision_tags, b.plan.precision_tags)
+    # the loaded plan executes: sharded aggregation equals the original's
+    x = jnp.asarray(graph.features)
+    eng_a = ShardedAmpleEngine(graph, splan)
+    eng_b = ShardedAmpleEngine(rec.graph, rec.plan)
+    np.testing.assert_array_equal(
+        np.asarray(eng_a.aggregate(x, mode="sum")),
+        np.asarray(eng_b.aggregate(x, mode="sum")),
+    )
+
+
+@pytest.mark.parametrize("num_shards", [1, 2])
+def test_serve_engine_warm_start_from_disk(graph, tmp_path, num_shards):
+    """Restarted engine warms its cache from disk: first request is a hit."""
+    cfg = _cfg("gcn")
+    a = GNNServeEngine(cfg, key=jax.random.PRNGKey(0), num_shards=num_shards)
+    cold = a.infer(graph, graph.features)
+    assert not cold.cache_hit
+    a.save_plan_cache(str(tmp_path))
+
+    b = GNNServeEngine(cfg, a.params, num_shards=num_shards)
+    assert b.load_plan_cache(str(tmp_path)) == 1
+    warm = b.infer(graph, graph.features)
+    assert warm.cache_hit and warm.plan_ms == 0.0
+    assert b.stats["planner_calls"] == 0
+    np.testing.assert_array_equal(cold.outputs, warm.outputs)
