@@ -205,6 +205,88 @@ def bench_gnn_serve(quick: bool) -> None:
     )
 
 
+# -------------------- gnn-serve continuous: event-driven offered load
+def bench_continuous_serve(quick: bool) -> None:
+    """Offered-load serving: per-request ``infer`` vs one-shot ``infer_batch``
+    vs event-driven continuous batching (AsyncGNNEngine), plus the padded
+    size-class plan-cache economics under a varying member mix."""
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.graphs.datasets import make_dataset
+    from repro.serve.async_gnn import AsyncGNNEngine
+    from repro.serve.gnn_engine import GNNRequest, GNNServeEngine
+
+    cfg = get_config("ample-gcn", reduced=True)
+    base = 120 if quick else 400
+    pool = [
+        make_dataset("cora", max_nodes=base + 17 * s, max_feature_dim=cfg.d_model, seed=s)
+        for s in range(6)
+    ]
+    eng = GNNServeEngine(
+        cfg,
+        key=jax.random.PRNGKey(0),
+        union_node_bucket=256 if quick else 1024,
+        union_edge_bucket=2048 if quick else 8192,
+    )
+    async_eng = AsyncGNNEngine(eng, window=4)
+
+    # Offered load: 8 outstanding requests drawn from the pool.
+    outstanding = [pool[i % len(pool)] for i in range(8)]
+    reqs = [GNNRequest(graph=g, features=g.features) for g in outstanding]
+    for g in pool:  # warm member plans + jit for every path
+        eng.infer(g, g.features)
+    async_eng.serve(reqs)
+    eng.infer_batch(reqs)
+
+    us_infer = _time(lambda: [eng.infer(g, g.features) for g in outstanding], reps=3)
+    us_batch = _time(lambda: eng.infer_batch(reqs), reps=3)
+    us_cont = _time(lambda: async_eng.serve(reqs), reps=3)
+    n = len(reqs)
+    emit(
+        "gnn_serve_offered_infer", us_infer / n,
+        f"requests={n};throughput_rps={n / (us_infer * 1e-6):.1f};mode=per-request",
+    )
+    emit(
+        "gnn_serve_offered_infer_batch", us_batch / n,
+        f"requests={n};throughput_rps={n / (us_batch * 1e-6):.1f};"
+        f"speedup_vs_infer={us_infer / max(us_batch, 1e-9):.2f}x;mode=one-union",
+    )
+    emit(
+        "gnn_serve_offered_continuous", us_cont / n,
+        f"requests={n};throughput_rps={n / (us_cont * 1e-6):.1f};"
+        f"speedup_vs_infer={us_infer / max(us_cont, 1e-9):.2f}x;"
+        f"window={async_eng.window};mode=continuous",
+    )
+
+    # Varying-mix workload on a fresh engine: padded size classes keep the
+    # member-plan cache hot even though no two batches share a composition.
+    mix_eng = GNNServeEngine(
+        cfg,
+        eng.params,
+        union_node_bucket=256 if quick else 1024,
+        union_edge_bucket=2048 if quick else 8192,
+    )
+    mix_async = AsyncGNNEngine(mix_eng, window=3)
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        picks = rng.choice(len(pool), size=rng.integers(2, 4), replace=False)
+        for i in picks:
+            mix_async.submit(pool[i], pool[i].features)
+        mix_async.step()
+    mix_async.drain()
+    info = mix_async.cache_info()
+    lookups = info["member_hits"] + info["member_misses"]
+    hit_rate = info["member_hits"] / max(lookups, 1)
+    emit(
+        "gnn_serve_padded_class_hit_rate", 0.0,
+        f"hit_rate={hit_rate:.3f};member_hits={info['member_hits']};"
+        f"member_misses={info['member_misses']};"
+        f"class_hits={info['class_hits']};class_misses={info['class_misses']};"
+        f"planner_calls={info['planner_calls']};batches={info['batches']}",
+    )
+
+
 # --------------------- gnn-serve sharded: partition-aware plan economics
 def bench_sharded_serve(quick: bool) -> None:
     """Shard count vs latency, halo-exchange volume and per-shard edge
@@ -298,22 +380,53 @@ BENCHES = [
     bench_engine_paths,
     bench_mixed_precision,
     bench_gnn_serve,
+    bench_continuous_serve,
     bench_sharded_serve,
     bench_moe_dispatch,
     bench_kernels,
 ]
 
 
+def write_artifact(path: str, quick: bool) -> None:
+    """Persist the emitted rows as a JSON artifact (CI uploads this — the
+    bench trajectory across PRs lives in these files, not the logs)."""
+    import json
+    import platform
+
+    records = []
+    for row in ROWS:
+        name, us, derived = row.split(",", 2)
+        rec = {"name": name, "us_per_call": float(us)}
+        for part in derived.split(";"):
+            if "=" in part:
+                k, v = part.split("=", 1)
+                rec[k] = v
+        records.append(rec)
+    payload = {
+        "quick": quick,
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "rows": records,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {len(records)} rows to {path}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default=None,
+                    help="write rows as a JSON artifact (e.g. BENCH_serve.json)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for bench in BENCHES:
         if args.only and args.only not in bench.__name__:
             continue
         bench(args.quick)
+    if args.out:
+        write_artifact(args.out, args.quick)
 
 
 if __name__ == "__main__":

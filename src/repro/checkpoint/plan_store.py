@@ -95,7 +95,14 @@ def _unpack_plan(
     header: Dict[str, Any], cfg: EngineConfig, prefix: str, z
 ) -> ExecutionPlan:
     tags = np.asarray(z[f"{prefix}tags"]).astype(str)
-    groups = {tag: np.nonzero(tags == tag)[0] for tag in np.unique(tags)}
+    # "pad" marks size-class padding nodes of an assembled union plan: they
+    # belong to no precision group (their rows must stay zero through the
+    # FTE), so they are excluded here exactly as assemble_union_plan does.
+    groups = {
+        tag: np.nonzero(tags == tag)[0]
+        for tag in np.unique(tags)
+        if tag != "pad"
+    }
     mode_plans: Dict[str, Dict[str, EdgeTilePlan]] = {}
     for mode, tag_meta in header["tiles"].items():
         mode_plans[mode] = {}

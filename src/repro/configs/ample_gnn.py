@@ -19,6 +19,12 @@ def _full(arch: str) -> ModelConfig:
         num_layers=2, d_model=300, num_heads=1, num_kv_heads=1,
         d_ff=256, vocab_size=100,  # yelp: 300 features, 100 classes
         dtype="float32",
+        # Continuous batching at production scale: admit up to 8 graphs per
+        # micro-batch and pad the union to coarse size classes so the plan
+        # and jit caches stay warm under varying request mixes.
+        gnn_batch_window=8,
+        gnn_union_node_bucket=1024,
+        gnn_union_edge_bucket=8192,
     )
 
 
@@ -28,6 +34,9 @@ def _reduced(arch: str) -> ModelConfig:
         num_layers=2, d_model=32, num_heads=1, num_kv_heads=1,
         d_ff=16, vocab_size=7, dtype="float32",
         gnn_edges_per_tile=64,
+        gnn_batch_window=4,
+        # buckets stay 0 here: smoke tests opt into padded size classes
+        # explicitly (GNNServeEngine union_node_bucket/union_edge_bucket)
     )
 
 

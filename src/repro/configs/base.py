@@ -82,6 +82,10 @@ class ModelConfig:
     gnn_precision: str = "mixed"  # mixed (Degree-Quant int8/float) | float
     gnn_edges_per_tile: int = 256  # event-driven tile width (AGE lanes)
     gnn_num_shards: int = 1  # >1: partition-aware execution (edge-balanced shards)
+    # Continuous-batching serve knobs (serve/async_gnn.py + GNNServeEngine):
+    gnn_batch_window: int = 8  # max requests admitted per micro-batch union
+    gnn_union_node_bucket: int = 0  # pad union batches to node size classes (0=exact)
+    gnn_union_edge_bucket: int = 0  # pad union tile stacks to edge size classes
 
     # --- frontend stubs (vlm/audio): inputs arrive as embeddings ---
     embeds_input: bool = False

@@ -52,6 +52,7 @@ __all__ = [
     "compile_plans",
     "compile_shard_plan",
     "compile_sharded_plans",
+    "assemble_union_plan",
     "shard_plan_key",
     "aggregation_coefficients",
     "engine_precision_tags",
@@ -204,6 +205,107 @@ def compile_plans(
         graph_fp=graph_fp,
         num_nodes=g.num_nodes,
         num_edges=g.num_edges,
+        cfg=cfg,
+        precision_tags=tags,
+        node_groups=groups,
+        mode_plans=mode_plans,
+    )
+
+
+def assemble_union_plan(
+    member_plans: Sequence[ExecutionPlan],
+    union: Graph,
+    *,
+    cfg: Optional[EngineConfig] = None,
+    edge_bucket: int = 0,
+) -> ExecutionPlan:
+    """Compose per-member ExecutionPlans into one padded disjoint-union plan.
+
+    The incremental counterpart of ``compile_plans``: each member graph was
+    planned once (Degree-Quant tags + edge tiles, both exactly as if served
+    solo) and the union plan is assembled by index relabelling
+    (``scheduler.concat_tile_plans``) — O(E) array copies, no planner. The
+    admission loop of the continuous-batching engine leans on this: a new
+    batch composition over known member structures costs assembly, not
+    planning.
+
+    ``union`` is the (possibly node-padded) disjoint union of the members'
+    *prepared* graphs, in member order; padding nodes beyond the members are
+    isolated, carry no plan tiles, and are excluded from the transform node
+    groups, so their rows stay exactly zero through every layer — batch-wide
+    int8 activation scales never see them. ``edge_bucket`` rounds each
+    per-(mode, tag) tile stack up to the size-class tile count so device
+    shapes recur across member mixes.
+    """
+    if not member_plans:
+        raise ValueError("assemble_union_plan of no member plans")
+    cfg = cfg if cfg is not None else member_plans[0].cfg
+    for p in member_plans:
+        if p.cfg != cfg:
+            raise ValueError("member plans were compiled under a different EngineConfig")
+    modes = member_plans[0].modes
+    for p in member_plans[1:]:
+        if p.modes != modes:
+            raise ValueError("member plans disagree on aggregation modes")
+    offsets = np.cumsum([0] + [p.num_nodes for p in member_plans])
+    n_real = int(offsets[-1])
+    if n_real > union.num_nodes:
+        raise ValueError(
+            f"member plans cover {n_real} nodes but union has {union.num_nodes}"
+        )
+    n_pad = union.num_nodes - n_real
+
+    tags = np.concatenate(
+        [np.asarray(p.precision_tags, dtype="U8") for p in member_plans]
+        + ([np.full(n_pad, "pad", dtype="U8")] if n_pad else [])
+    )
+    # Padding nodes belong to no precision group: the FTE streams skip their
+    # rows (they stay 0), so batch-wide activation calibration matches the
+    # unpadded union's exactly.
+    groups = {
+        tag: np.nonzero(tags == tag)[0]
+        for tag in np.unique(tags)
+        if tag != "pad"
+    }
+
+    mode_plans: Dict[str, Dict[str, sched.EdgeTilePlan]] = {}
+    for mode in modes:
+        per_tag: Dict[str, sched.EdgeTilePlan] = {}
+        tag_names = sorted(
+            {t for p in member_plans for t in p.mode_plans[mode]}
+        )
+        for tag in tag_names:
+            pieces = [
+                (p.mode_plans[mode][tag], offsets[i])
+                for i, p in enumerate(member_plans)
+                if tag in p.mode_plans[mode]
+            ]
+            min_tiles = 0
+            if edge_bucket > 0:
+                ept = pieces[0][0].edges_per_tile
+                real = sum(pl.total_edges for pl, _ in pieces)
+                _, e_class = sched.size_class(0, real, 0, edge_bucket)
+                min_tiles = -(-e_class // ept)
+            per_tag[tag] = sched.concat_tile_plans(
+                [pl for pl, _ in pieces],
+                [off for _, off in pieces],
+                num_nodes=union.num_nodes,
+                min_tiles=min_tiles,
+            )
+        mode_plans[mode] = per_tag
+
+    graph_fp = sched.graph_fingerprint(union)
+    h = hashlib.blake2b(digest_size=16)
+    h.update(graph_fp.encode())
+    h.update(f"\x00assembled:{edge_bucket}".encode())
+    for p in member_plans:
+        h.update(b"\x00")
+        h.update(p.fingerprint.encode())
+    return ExecutionPlan(
+        fingerprint=h.hexdigest(),
+        graph_fp=graph_fp,
+        num_nodes=union.num_nodes,
+        num_edges=union.num_edges,
         cfg=cfg,
         precision_tags=tags,
         node_groups=groups,

@@ -46,10 +46,13 @@ __all__ = [
     "build_padded_plan",
     "build_mixed_precision_plans",
     "pack_segments",
+    "concat_tile_plans",
     "graph_fingerprint",
     "plan_fingerprint",
     "partition_fingerprint",
     "shard_plan_fingerprint",
+    "size_class",
+    "union_bucket_fingerprint",
 ]
 
 
@@ -115,6 +118,57 @@ def shard_plan_fingerprint(g: Graph, starts: np.ndarray, shard: int, *parts: str
     h = hashlib.blake2b(digest_size=16)
     h.update(partition_fingerprint(g, starts).encode())
     h.update(f"\x00shard:{int(shard)}".encode())
+    for p in parts:
+        h.update(b"\x00")
+        h.update(str(p).encode())
+    return h.hexdigest()
+
+
+def size_class(
+    num_nodes: int, num_edges: int, node_bucket: int, edge_bucket: int
+) -> Tuple[int, int]:
+    """Round a (nodes, edges) pair up to its padded size class.
+
+    A bucket of 0 (or negative) leaves that dimension exact. Size classes are
+    the continuous-batching analogue of AMPLE's fixed nodeslot count: padding
+    a disjoint-union batch up to the class boundary trades a bounded amount
+    of wasted lanes for device-call shapes that recur across different member
+    mixes, so the jit cache and the plan cache both stop churning.
+    """
+    n = int(num_nodes)
+    e = int(num_edges)
+    if node_bucket > 0:
+        n = max(((n + node_bucket - 1) // node_bucket) * node_bucket, node_bucket)
+    if edge_bucket > 0:
+        e = max(((e + edge_bucket - 1) // edge_bucket) * edge_bucket, edge_bucket)
+    return n, e
+
+
+def union_bucket_fingerprint(
+    num_nodes: int,
+    num_edges: int,
+    node_bucket: int,
+    edge_bucket: int,
+    *parts: str,
+) -> str:
+    """Fingerprint of a padded union's **size class**, not its member mix.
+
+    Two disjoint-union batches whose (nodes, edges) land in the same bucket —
+    under the same planner configuration ``parts`` — hash identically, even
+    when their member graphs differ. The serving layer keys its class-level
+    cache on this, so warm size classes skip shape-dependent work (device
+    uploads, jit traces) however the admission window recomposed the batch;
+    the member-level plan pieces carry the structure-exact identity.
+
+    Granularity caveat: the class is keyed on the **total** edge count, while
+    mixed-precision plans pad tiles per precision group — two mixes in one
+    class whose float/int8 edge split straddles a tile-bucket boundary still
+    trace separately. A warm class is therefore an upper bound on shape
+    reuse under ``mixed_precision``; it is exact under the float policy.
+    """
+    n, e = size_class(num_nodes, num_edges, node_bucket, edge_bucket)
+    h = hashlib.blake2b(digest_size=16)
+    h.update(f"class:{n}:{e}:{int(node_bucket)}:{int(edge_bucket)}".encode())
     for p in parts:
         h.update(b"\x00")
         h.update(str(p).encode())
@@ -257,6 +311,76 @@ def build_edge_tile_plan(
         out_node=np.stack(tiles_o),
         node_ids=node_ids.astype(np.int32),
         num_nodes=g.num_nodes,
+        edges_per_tile=E,
+        segments_per_tile=S,
+        total_edges=total_edges,
+    )
+
+
+def concat_tile_plans(
+    plans: Sequence[EdgeTilePlan],
+    node_offsets: Sequence[int],
+    *,
+    num_nodes: int,
+    min_tiles: int = 0,
+) -> EdgeTilePlan:
+    """Stack member tile plans into one union plan by offsetting node ids.
+
+    This is the incremental half of padded disjoint-union batching: each
+    member graph's tiles were packed once (and cached) by
+    ``build_edge_tile_plan``; composing a new batch is pure array relabelling
+    — member ``k``'s gather/out indices shift by ``node_offsets[k]``, its
+    segment sentinel (the member's node count) is remapped to the union
+    sentinel ``num_nodes`` — so no planner runs however the admission window
+    recomposes the batch. The cost is that each member's last, partially
+    filled tile keeps its padding lanes (bounded by one tile per member).
+
+    ``min_tiles`` pads the stacked plan with all-invalid tiles (coeff 0,
+    sentinel segments) up to a tile-count bucket, giving recurring device
+    shapes across batches in the same size class.
+    """
+    if not plans:
+        raise ValueError("concat_tile_plans of no plans")
+    if len(plans) != len(node_offsets):
+        raise ValueError("one node offset per member plan required")
+    E = plans[0].edges_per_tile
+    S = plans[0].segments_per_tile
+    for p in plans:
+        if p.edges_per_tile != E or p.segments_per_tile != S:
+            raise ValueError("member plans disagree on tile geometry")
+    gather, coeff, segs, outs, node_ids = [], [], [], [], []
+    total_edges = 0
+    for p, off in zip(plans, node_offsets):
+        off = int(off)
+        if off + p.num_nodes > num_nodes:
+            raise ValueError(
+                f"member plan spans nodes [{off}, {off + p.num_nodes}) beyond "
+                f"union num_nodes {num_nodes}"
+            )
+        # Invalid lanes (coeff 0) keep whatever row they point at — offsetting
+        # them too is safe and keeps this a single vectorised add.
+        gather.append(p.gather_idx.astype(np.int64) + off)
+        coeff.append(p.coeff)
+        segs.append(p.seg_ids)
+        outs.append(
+            np.where(p.out_node == p.num_nodes, num_nodes, p.out_node + off)
+        )
+        node_ids.append(p.node_ids.astype(np.int64) + off)
+        total_edges += p.total_edges
+    n_tiles = sum(p.num_tiles for p in plans)
+    if min_tiles > n_tiles:
+        pad = min_tiles - n_tiles
+        gather.append(np.zeros((pad, E), np.int64))
+        coeff.append(np.zeros((pad, E), np.float32))
+        segs.append(np.full((pad, E), S - 1, np.int32))
+        outs.append(np.full((pad, S), num_nodes, np.int64))
+    return EdgeTilePlan(
+        gather_idx=np.concatenate(gather).astype(np.int32),
+        coeff=np.concatenate(coeff),
+        seg_ids=np.concatenate(segs).astype(np.int32),
+        out_node=np.concatenate(outs).astype(np.int32),
+        node_ids=np.concatenate(node_ids).astype(np.int32),
+        num_nodes=num_nodes,
         edges_per_tile=E,
         segments_per_tile=S,
         total_edges=total_edges,

@@ -152,7 +152,12 @@ def add_self_loops(g: Graph) -> Graph:
     return out
 
 
-def disjoint_union(graphs: "list[Graph]") -> Graph:
+def disjoint_union(
+    graphs: "list[Graph]",
+    *,
+    pad_num_nodes: Optional[int] = None,
+    pad_num_edges: Optional[int] = None,
+) -> Graph:
     """Block-diagonal union of independent graphs (no cross edges).
 
     Node ids of graph k are offset by the node counts of graphs 0..k-1, so
@@ -162,12 +167,39 @@ def disjoint_union(graphs: "list[Graph]") -> Graph:
     what lets the serving engine batch independent small-graph requests into
     one padded device call. Features are concatenated when all graphs carry
     them; edge weights likewise.
+
+    ``pad_num_nodes``/``pad_num_edges`` grow the union to a **size class**:
+    padding nodes are appended after the real members (isolated, zero
+    features), and padding edges — when requested — are self-edges spread
+    over the padding nodes, so they can never influence a real node's
+    aggregate. Padding a union to a node/edge bucket makes different member
+    mixes share device-call shapes, which is what lets the continuous-
+    batching serve path reuse one compiled executable across ever-changing
+    batch compositions. (That path pads *nodes* here and pads edge capacity
+    at the tile level via ``assemble_union_plan`` — cheaper than planning
+    fake edges; graph-level ``pad_num_edges`` is for callers that feed a
+    shape-stable union straight into ``compile_plans`` without the
+    member-piece machinery.)
     """
     if not graphs:
         raise ValueError("disjoint_union of no graphs")
-    if len(graphs) == 1:
+    if len(graphs) == 1 and pad_num_nodes is None and pad_num_edges is None:
         return graphs[0]
     offsets = np.cumsum([0] + [g.num_nodes for g in graphs])
+    n_real = int(offsets[-1])
+    e_real = sum(g.num_edges for g in graphs)
+    n_total = n_real if pad_num_nodes is None else int(pad_num_nodes)
+    e_total = e_real if pad_num_edges is None else int(pad_num_edges)
+    if n_total < n_real:
+        raise ValueError(f"pad_num_nodes {n_total} < union nodes {n_real}")
+    if e_total < e_real:
+        raise ValueError(f"pad_num_edges {e_total} < union edges {e_real}")
+    n_pad, e_pad = n_total - n_real, e_total - e_real
+    if e_pad > 0 and n_pad == 0:
+        raise ValueError(
+            "edge padding needs at least one padding node to attach self-edges "
+            f"to (pad_num_nodes={n_total} leaves none)"
+        )
     indptr = [np.asarray([0], np.int64)]
     indices = []
     edge_off = 0
@@ -175,16 +207,30 @@ def disjoint_union(graphs: "list[Graph]") -> Graph:
         indptr.append(g.indptr[1:] + edge_off)
         indices.append(g.indices.astype(np.int64) + off)
         edge_off += g.num_edges
+    if n_pad:
+        # e_pad self-edges spread round-robin over the padding nodes; a
+        # padding node's degree only ever shapes its own (discarded) row.
+        per = np.full(n_pad, e_pad // n_pad, np.int64)
+        per[: e_pad % n_pad] += 1
+        pad_ids = np.arange(n_real, n_total, dtype=np.int64)
+        indptr.append(edge_off + np.cumsum(per))
+        indices.append(np.repeat(pad_ids, per))
     features = None
     if all(g.features is not None for g in graphs):
         features = np.concatenate([g.features for g in graphs], axis=0)
+        if n_pad:
+            features = np.concatenate(
+                [features, np.zeros((n_pad, features.shape[1]), np.float32)], axis=0
+            )
     edge_weights = None
     if all(g.edge_weights is not None for g in graphs):
-        edge_weights = np.concatenate([g.edge_weights for g in graphs])
+        edge_weights = np.concatenate(
+            [g.edge_weights for g in graphs] + [np.zeros(e_pad, np.float32)]
+        )
     return Graph(
         indptr=np.concatenate(indptr),
         indices=np.concatenate(indices).astype(np.int32),
-        num_nodes=int(offsets[-1]),
+        num_nodes=n_total,
         features=features,
         edge_weights=edge_weights,
         name="+".join(dict.fromkeys(g.name for g in graphs)),

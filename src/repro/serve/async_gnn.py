@@ -1,0 +1,218 @@
+"""Event-driven continuous batching for GNN serving — AMPLE at the queue.
+
+AMPLE's core move is replacing the synchronous double-buffering barrier with
+event-driven nodeslots: a slot frees the moment its node finishes, so short
+nodes never wait behind stragglers. ``GNNServeEngine.infer_batch`` still has
+exactly that barrier at the serving layer — every request up front, one
+exact-shape union, everyone waits for everyone. ``AsyncGNNEngine`` removes
+it:
+
+  * **admission queue** — ``submit`` validates a request immediately (clear
+    errors at the door, not deep in a union concatenate) and enqueues a
+    ticket; the caller keeps the ticket and reads its result whenever it
+    completes;
+  * **micro-batch window** — each ``step`` admits up to ``window`` queued
+    requests (bounded by a node budget) into the next disjoint-union batch,
+    exactly the slot-recycling loop of continuous-batching LLM engines:
+    slots freed by a completed batch are refilled from the queue head on the
+    very next tick;
+  * **slot recycling without starvation** — admission is strictly FIFO: an
+    oversized request closes the current window rather than being skipped,
+    so completion order equals submission order and no request starves;
+  * **padded size classes** — when the underlying engine has union buckets
+    configured, each window's union is padded to a node/edge size class and
+    its plan assembled from cached per-member pieces, so the ever-changing
+    batch composition stops churning the plan cache and the jit cache.
+
+The engine is deterministic and loop-agnostic: ``submit`` is O(1), ``step``
+is the event-loop tick, and ``GNNTicket.result()`` drives the loop until its
+request completes. A window served by ``step`` goes through the very same
+``_plan_for_batch`` + ``_run`` steps as the synchronous ``infer_batch``, so
+async outputs are **bitwise-identical** to the synchronous engine given the
+same admitted composition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.graphs.csr import Graph
+from repro.serve.gnn_engine import GNNRequest, GNNResponse, GNNServeEngine
+
+__all__ = ["GNNTicket", "AsyncGNNEngine"]
+
+
+@dataclasses.dataclass
+class GNNTicket:
+    """A submitted request's handle: pending until its micro-batch ran."""
+
+    seq: int  # admission order, assigned by submit()
+    request: GNNRequest
+    response: Optional[GNNResponse] = None
+    _engine: Optional["AsyncGNNEngine"] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    @property
+    def done(self) -> bool:
+        return self.response is not None
+
+    def result(self) -> GNNResponse:
+        """The response; drives the owning engine's loop until completion."""
+        while not self.done:
+            if self._engine is None or not self._engine.step():
+                raise RuntimeError(
+                    f"ticket {self.seq} is pending but its engine has no "
+                    "admissible work — was it detached?"
+                )
+        return self.response
+
+
+class AsyncGNNEngine:
+    """Continuous-batching front end over a ``GNNServeEngine``.
+
+    Parameters
+    ----------
+    engine: a configured ``GNNServeEngine`` — or a ``family="gnn"``
+        ModelConfig, from which one is built (``engine_kwargs`` forwarded,
+        e.g. ``union_node_bucket``/``num_shards``).
+    window: max requests admitted into one micro-batch; defaults to
+        ``cfg.gnn_batch_window``. The window is the slot count: a completed
+        batch frees all its slots for the next tick's admissions.
+    max_batch_nodes: optional node budget per micro-batch. A queued request
+        that would overflow the budget closes the window (it is served first
+        next tick) — stragglers delay nobody behind them beyond their own
+        batch, and nobody overtakes them.
+    """
+
+    def __init__(
+        self,
+        engine,
+        params=None,
+        *,
+        window: Optional[int] = None,
+        max_batch_nodes: Optional[int] = None,
+        **engine_kwargs,
+    ):
+        if isinstance(engine, GNNServeEngine):
+            if params is not None or engine_kwargs:
+                raise ValueError(
+                    "pass params/engine kwargs only when constructing from a "
+                    "ModelConfig, not when wrapping an existing engine"
+                )
+            self.engine = engine
+        elif isinstance(engine, ModelConfig):
+            self.engine = GNNServeEngine(engine, params, **engine_kwargs)
+        else:
+            raise TypeError(
+                f"engine must be a GNNServeEngine or a ModelConfig, got "
+                f"{type(engine).__name__}"
+            )
+        w = self.engine.cfg.gnn_batch_window if window is None else window
+        if w < 1:
+            raise ValueError("window must be >= 1")
+        self.window = int(w)
+        self.max_batch_nodes = max_batch_nodes
+        self._queue: Deque[GNNTicket] = deque()
+        self._seq = 0
+        self.stats: Dict[str, int] = {
+            "submitted": 0,
+            "completed": 0,
+            "steps": 0,
+            "max_queue_depth": 0,
+        }
+
+    # ------------------------------------------------------------ admission
+    def submit(self, graph: Graph, features, *, arch: str = "") -> GNNTicket:
+        """Admit one request into the queue; returns its ticket immediately.
+
+        Validation happens here, at the admission boundary: a mismatched
+        feature matrix or an empty graph raises now, before the request can
+        poison a union batch other members are riding in.
+        """
+        arch = self.engine._arch(arch)
+        features = self.engine._validate_request(graph, features)
+        ticket = GNNTicket(
+            seq=self._seq,
+            request=GNNRequest(graph=graph, features=features, arch=arch),
+            _engine=self,
+        )
+        self._seq += 1
+        self._queue.append(ticket)
+        self.stats["submitted"] += 1
+        self.stats["max_queue_depth"] = max(
+            self.stats["max_queue_depth"], len(self._queue)
+        )
+        return ticket
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # ------------------------------------------------------------ event loop
+    def _admit(self) -> List[GNNTicket]:
+        """Pop the next micro-batch off the queue head (FIFO, budgeted)."""
+        batch: List[GNNTicket] = []
+        nodes = 0
+        while self._queue and len(batch) < self.window:
+            nxt = self._queue[0]
+            n = nxt.request.graph.num_nodes
+            if (
+                batch
+                and self.max_batch_nodes is not None
+                and nodes + n > self.max_batch_nodes
+            ):
+                break  # close the window; nxt leads the next batch
+            batch.append(self._queue.popleft())
+            nodes += n
+        return batch
+
+    def step(self) -> List[GNNTicket]:
+        """One event-loop tick: admit a window, run its union, complete it.
+
+        Returns the completed tickets (empty when the queue was idle). The
+        union call is ``GNNServeEngine.infer_batch`` — plan assembly + one
+        device call — so everything the synchronous engine guarantees
+        (per-member Degree-Quant tags, plan/size-class caching, bitwise
+        warm repeats) holds per micro-batch.
+        """
+        batch = self._admit()
+        if not batch:
+            return []
+        try:
+            responses = self.engine.infer_batch([t.request for t in batch])
+        except Exception:
+            # Never strand admitted tickets: put the window back at the queue
+            # head in order, so the failure propagates to whoever is driving
+            # the loop while every request stays observable and retryable.
+            self._queue.extendleft(reversed(batch))
+            raise
+        self.stats["steps"] += 1
+        for ticket, resp in zip(batch, responses):
+            ticket.response = resp
+        self.stats["completed"] += len(batch)
+        return batch
+
+    def drain(self) -> List[GNNResponse]:
+        """Run the loop until the queue is empty; responses in admission order."""
+        done: List[GNNTicket] = []
+        while self._queue:
+            done.extend(self.step())
+        return [t.response for t in sorted(done, key=lambda t: t.seq)]
+
+    def serve(self, requests: Sequence[GNNRequest]) -> List[GNNResponse]:
+        """Submit a request stream and drain it — the offered-load benchmark
+        entry point. Unlike ``infer_batch`` this never builds one giant
+        union: requests flow through ``window``-sized micro-batches."""
+        for r in requests:
+            self.submit(r.graph, r.features, arch=r.arch)
+        return self.drain()
+
+    # ------------------------------------------------------------- metrics
+    def cache_info(self) -> Dict[str, int]:
+        return {**self.engine.cache_info(), **self.stats}

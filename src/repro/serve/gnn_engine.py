@@ -20,6 +20,7 @@ the cacheable artifact:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
 import time
 from collections import OrderedDict
@@ -37,13 +38,14 @@ from repro.core.message_passing import (
     ExecutionPlan,
     ShardPlan,
     ShardedExecutionPlan,
+    assemble_union_plan,
     compile_plans,
     compile_shard_plan,
     compile_sharded_plans,
     engine_precision_tags,
     shard_plan_key,
 )
-from repro.core.scheduler import plan_fingerprint
+from repro.core.scheduler import plan_fingerprint, size_class, union_bucket_fingerprint
 from repro.distributed.graph_shard import ShardedAmpleEngine
 from repro.graphs.csr import Graph, disjoint_union
 from repro.graphs.partition import Partition, partition_by_edges, validate_partition
@@ -67,8 +69,17 @@ class GNNResponse:
     cache_hit: bool
     fingerprint: str  # plan-cache key the request resolved to
     plan_ms: float  # host planning time (0.0 on a cache hit)
-    run_ms: float  # device execution time
+    run_ms: float  # device execution wall time of the WHOLE batch this
+    # request rode in (every member of one union call reports the same
+    # number; divide by batch_size — or read run_ms_per_member — for an
+    # amortized per-request figure)
     num_shards: int = 1  # shards the plan executed over (1 = unsharded path)
+    batch_size: int = 1  # members in the union device call that produced this
+
+    @property
+    def run_ms_per_member(self) -> float:
+        """Amortized device time per batch member (= run_ms when served solo)."""
+        return self.run_ms / max(self.batch_size, 1)
 
 
 class GNNServeEngine:
@@ -87,6 +98,14 @@ class GNNServeEngine:
         the sharded path and fixes ``num_shards`` to its shard count.
     mesh: optional 1-D ``("shard",)`` device mesh for SPMD shard execution;
         without one, shards run as a host loop on the local device.
+    union_node_bucket / union_edge_bucket: >0 switches batched serving to
+        **padded union size classes**: member graphs are planned (and cached)
+        individually, the union plan is assembled by index relabelling, and
+        nodes/tiles are padded up to the bucket so different member mixes
+        share device shapes. 0 (default) keeps exact-shape union plans.
+        Defaults come from ``cfg.gnn_union_node_bucket`` /
+        ``cfg.gnn_union_edge_bucket``; ignored on the sharded path, whose
+        unions are planned exactly.
     """
 
     def __init__(
@@ -99,6 +118,8 @@ class GNNServeEngine:
         num_shards: int = 1,
         partition: Optional[Partition] = None,
         mesh=None,
+        union_node_bucket: Optional[int] = None,
+        union_edge_bucket: Optional[int] = None,
         key=None,
     ):
         if cfg.family != "gnn":
@@ -114,6 +135,12 @@ class GNNServeEngine:
         self.partition = partition
         self.num_shards = partition.num_shards if partition is not None else num_shards
         self.mesh = mesh
+        self.union_node_bucket = (
+            cfg.gnn_union_node_bucket if union_node_bucket is None else union_node_bucket
+        )
+        self.union_edge_bucket = (
+            cfg.gnn_union_edge_bucket if union_edge_bucket is None else union_edge_bucket
+        )
         # fingerprint -> (prepared graph, plan, engine); OrderedDict as LRU.
         # The engine rides along so its weight-quant cache survives across
         # requests (params are fixed for this serve engine's lifetime).
@@ -125,6 +152,14 @@ class GNNServeEngine:
         # request is reusable by any later request on the same partitioned
         # structure, independently of the assembled plan above.
         self._shard_plans: "OrderedDict[str, ShardPlan]" = OrderedDict()
+        # Member-plan pieces for the padded-union path, keyed on the member's
+        # structure fingerprint: value = (prepared member graph, its solo
+        # ExecutionPlan). A member planned for one batch mix is reusable by
+        # every later mix containing it — this cache, not the assembled-plan
+        # LRU, is what keeps the planner cold under varying compositions.
+        self._member_plans: "OrderedDict[str, Tuple[Graph, ExecutionPlan]]" = OrderedDict()
+        # Size classes already served (device shapes warm); statistics only.
+        self._classes_seen: "OrderedDict[str, None]" = OrderedDict()
         self.stats: Dict[str, int] = {
             "requests": 0,
             "batches": 0,
@@ -134,11 +169,23 @@ class GNNServeEngine:
             "evictions": 0,
             "shard_hits": 0,
             "warm_loads": 0,
+            "member_hits": 0,
+            "member_misses": 0,
+            "class_hits": 0,
+            "class_misses": 0,
         }
 
     @property
     def sharded(self) -> bool:
         return self.num_shards > 1 or self.partition is not None
+
+    @property
+    def padded_unions(self) -> bool:
+        """True when batched requests plan through padded union size classes."""
+        return (
+            (self.union_node_bucket > 0 or self.union_edge_bucket > 0)
+            and not self.sharded
+        )
 
     # ------------------------------------------------------------ plan cache
     def _cache_key(self, g: Graph, arch: str, members: Optional[Sequence[Graph]]) -> str:
@@ -203,6 +250,110 @@ class GNNServeEngine:
             )
             for m in members
         ])
+
+    # ------------------------------------------ padded union size classes
+    def _member_plan(self, cfg, m: Graph, arch: str) -> Tuple[Graph, ExecutionPlan]:
+        """One member graph's (prepared graph, solo plan), LRU-cached.
+
+        Tags are computed on the member's own degree distribution — identical
+        Degree-Quant protection to solo serving — so any assembly of cached
+        members preserves the per-member tagging guarantee of ``infer_batch``.
+        """
+        key = plan_fingerprint(m, repr(self.engine_cfg), arch, "member")
+        if key in self._member_plans:
+            self._member_plans.move_to_end(key)
+            self.stats["member_hits"] += 1
+            return self._member_plans[key]
+        self.stats["member_misses"] += 1
+        self.stats["planner_calls"] += 1
+        prepared = gnn_api.prepare_graph(cfg, m)
+        plan = compile_plans(
+            prepared,
+            self.engine_cfg,
+            modes=(gnn_api.agg_mode(cfg),),
+            precision_tags=engine_precision_tags(prepared, self.engine_cfg),
+        )
+        self._member_plans[key] = (prepared, plan)
+        while len(self._member_plans) > max(self.plan_cache_size * 8, 64):
+            self._member_plans.popitem(last=False)
+        return prepared, plan
+
+    def _plan_for_padded(
+        self, members: Sequence[Graph], arch: str
+    ) -> Tuple[Graph, ExecutionPlan, AmpleEngine, bool, float]:
+        """Size-class planning: cached member pieces → assembled padded union.
+
+        The serve cache resolves in two levels. The **size class**
+        (``union_bucket_fingerprint`` over the bucketed node/edge counts) is
+        the shape-level key: a warm class means the device executable and
+        upload shapes recur, whatever the member mix. The member mix itself
+        only decides which cached plan pieces are relabelled into the
+        assembled plan — an O(E) copy, never a planner call for known
+        members. ``cache_hit`` is True when neither the members nor the
+        assembly needed the planner; ``plan_ms`` covers whatever planning +
+        assembly this call actually paid (member compilation still counts
+        when the assembled plan itself was resident, e.g. right after
+        ``load_plan_cache`` warmed the assembled LRU but not the pieces).
+        """
+        cfg = dataclasses.replace(self.cfg, gnn_arch=arch)
+        t0 = time.perf_counter()
+        misses_before = self.stats["member_misses"]
+        pieces = [self._member_plan(cfg, m, arch) for m in members]
+        members_cold = self.stats["member_misses"] > misses_before
+        n_real = sum(p.num_nodes for p, _ in pieces)
+        e_real = sum(p.num_edges for p, _ in pieces)
+        class_fp = union_bucket_fingerprint(
+            n_real,
+            e_real,
+            self.union_node_bucket,
+            self.union_edge_bucket,
+            repr(self.engine_cfg),
+            arch,
+        )
+        if class_fp in self._classes_seen:
+            self._classes_seen.move_to_end(class_fp)
+            self.stats["class_hits"] += 1
+        else:
+            self._classes_seen[class_fp] = None
+            self.stats["class_misses"] += 1
+            while len(self._classes_seen) > self.plan_cache_size * 8:
+                self._classes_seen.popitem(last=False)
+
+        h = hashlib.blake2b(digest_size=16)
+        h.update(class_fp.encode())
+        for _, mp in pieces:
+            h.update(b"\x00")
+            h.update(mp.fingerprint.encode())
+        key = h.hexdigest()
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            self.stats["cache_hits"] += 1
+            prepared, plan, engine = self._cache[key]
+            plan_ms = (
+                (time.perf_counter() - t0) * 1e3 if members_cold else 0.0
+            )
+            return prepared, plan, engine, not members_cold, plan_ms
+
+        self.stats["cache_misses"] += 1
+        n_class, _ = size_class(
+            n_real, e_real, self.union_node_bucket, self.union_edge_bucket
+        )
+        union = disjoint_union(
+            [p for p, _ in pieces], pad_num_nodes=n_class
+        )
+        plan = assemble_union_plan(
+            [mp for _, mp in pieces],
+            union,
+            cfg=self.engine_cfg,
+            edge_bucket=self.union_edge_bucket,
+        )
+        engine = AmpleEngine(union, plan=plan)
+        plan_ms = (time.perf_counter() - t0) * 1e3
+        self._cache[key] = (union, plan, engine)
+        while len(self._cache) > self.plan_cache_size:
+            self._cache.popitem(last=False)
+            self.stats["evictions"] += 1
+        return union, plan, engine, False, plan_ms
 
     def _plan_for_sharded(
         self, g: Graph, arch: str, members: Optional[Sequence[Graph]] = None
@@ -291,7 +442,68 @@ class GNNServeEngine:
             )
         return requested or self.cfg.gnn_arch
 
+    def _validate_request(self, graph: Graph, features) -> np.ndarray:
+        """Admission-time input checks with actionable errors.
+
+        Without these, a bad request surfaces deep in the union path as a
+        cryptic concatenate/split shape failure — after other members'
+        work was already spent.
+        """
+        if graph.num_nodes == 0:
+            raise ValueError(
+                "cannot serve a zero-node graph; drop empty members before "
+                "submission"
+            )
+        f = np.asarray(features, np.float32)
+        if f.ndim != 2:
+            raise ValueError(
+                f"features must be 2-D [num_nodes, feature_dim], got shape "
+                f"{tuple(f.shape)}"
+            )
+        if f.shape[0] != graph.num_nodes:
+            raise ValueError(
+                f"features have {f.shape[0]} rows but graph {graph.name!r} has "
+                f"{graph.num_nodes} nodes"
+            )
+        want = self.cfg.gnn_layer_dims[0]
+        if f.shape[1] != want:
+            raise ValueError(
+                f"features have {f.shape[1]} columns but {self.cfg.name} "
+                f"expects {want} (cfg.d_model)"
+            )
+        return f
+
+    def _plan_for_batch(
+        self, members: Sequence[Graph], arch: str
+    ) -> Tuple[Graph, Union[ExecutionPlan, ShardedExecutionPlan], AmpleEngine, bool, float]:
+        """Plan-assembly step for a disjoint-union batch — path dispatch.
+
+        The reusable half the continuous-batching loop drives incrementally:
+        sharded engines plan the exact union per shard, padded engines
+        assemble cached member pieces into a size-class plan, and the default
+        engine compiles the exact union (with per-member Degree-Quant tags).
+        """
+        if self.padded_unions:
+            return self._plan_for_padded(members, arch)
+        union = disjoint_union(list(members))
+        if self.sharded:
+            return self._plan_for_sharded(union, arch, members)
+        return self._plan_for(union, arch, members)
+
+    @staticmethod
+    def _pad_features(features: np.ndarray, num_nodes: int) -> np.ndarray:
+        """Zero rows up to the size-class node count (no-op when exact)."""
+        if num_nodes <= features.shape[0]:
+            return features
+        return np.concatenate(
+            [features,
+             np.zeros((num_nodes - features.shape[0], features.shape[1]),
+                      np.float32)],
+            axis=0,
+        )
+
     def _run(self, arch: str, prepared: Graph, engine: AmpleEngine, features) -> Tuple[np.ndarray, float]:
+        """Execution step: one padded device call over an assembled plan."""
         cfg = dataclasses.replace(self.cfg, gnn_arch=arch)
         t0 = time.perf_counter()
         y, _ = gnn_api.gnn_forward(
@@ -301,16 +513,25 @@ class GNNServeEngine:
         return y, (time.perf_counter() - t0) * 1e3
 
     def infer(self, graph: Graph, features, *, arch: str = "") -> GNNResponse:
-        """Serve one request; plans come from the LRU cache when warm."""
-        self.stats["requests"] += 1
+        """Serve one request; plans come from the LRU cache when warm.
+
+        With padded unions enabled the request is served as a batch of one —
+        its member plan piece then pre-warms every future batch containing
+        this structure.
+        """
         arch = self._arch(arch)
-        if self.sharded:
+        features = self._validate_request(graph, features)
+        if self.padded_unions:
+            prepared, plan, engine, hit, plan_ms = self._plan_for_padded([graph], arch)
+            features = self._pad_features(features, prepared.num_nodes)
+        elif self.sharded:
             prepared, plan, engine, hit, plan_ms = self._plan_for_sharded(graph, arch)
         else:
             prepared, plan, engine, hit, plan_ms = self._plan_for(graph, arch)
         y, run_ms = self._run(arch, prepared, engine, features)
+        self.stats["requests"] += 1
         return GNNResponse(
-            outputs=y,
+            outputs=y[: graph.num_nodes],
             cache_hit=hit,
             fingerprint=plan.fingerprint,
             plan_ms=plan_ms,
@@ -330,26 +551,27 @@ class GNNServeEngine:
         protection to solo serving), while int8 activation scale/zero-point
         remain batch-wide — the usual granularity trade-off of batched
         quantized serving.
+
+        Internally this is ``_plan_for_batch`` (plan assembly) followed by
+        ``_run`` (one device call) — the same two steps the continuous-
+        batching ``AsyncGNNEngine`` drives per admission window, so a
+        micro-batch admitted asynchronously is bitwise-identical to the same
+        composition served here.
         """
         if not requests:
             return []
         arch = self._arch(requests[0].arch)
         for r in requests[1:]:
             self._arch(r.arch)  # every request must match this engine's arch
+        feats = [self._validate_request(r.graph, r.features) for r in requests]
+        members = [r.graph for r in requests]
+        prepared, plan, engine, hit, plan_ms = self._plan_for_batch(members, arch)
+        features = self._pad_features(np.concatenate(feats, axis=0), prepared.num_nodes)
+        y, run_ms = self._run(arch, prepared, engine, features)
+        # Counted only on success, so a failed-and-requeued continuous-batching
+        # window doesn't double-count when it retries.
         self.stats["requests"] += len(requests)
         self.stats["batches"] += 1
-        members = [r.graph for r in requests]
-        union = disjoint_union(members)
-        features = np.concatenate(
-            [np.asarray(r.features, np.float32) for r in requests], axis=0
-        )
-        if self.sharded:
-            prepared, plan, engine, hit, plan_ms = self._plan_for_sharded(
-                union, arch, members
-            )
-        else:
-            prepared, plan, engine, hit, plan_ms = self._plan_for(union, arch, members)
-        y, run_ms = self._run(arch, prepared, engine, features)
         out: List[GNNResponse] = []
         start = 0
         for r in requests:
@@ -362,6 +584,7 @@ class GNNServeEngine:
                     plan_ms=plan_ms,
                     run_ms=run_ms,
                     num_shards=getattr(plan, "num_shards", 1),
+                    batch_size=len(requests),
                 )
             )
             start = stop

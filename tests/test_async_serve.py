@@ -1,0 +1,323 @@
+"""Event-driven continuous batching: AsyncGNNEngine + padded union size classes.
+
+The contract under test: a micro-batch admitted asynchronously is served
+through the very same plan-assembly + execution steps as the synchronous
+``infer_batch``, so identical admitted compositions are **bitwise** identical;
+admission is FIFO (no starvation, completion order == submission order); and
+padded size classes keep the member-plan cache hot across varying mixes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.graphs import make_dataset
+from repro.graphs.csr import Graph
+from repro.serve.async_gnn import AsyncGNNEngine, GNNTicket
+from repro.serve.gnn_engine import GNNRequest, GNNServeEngine
+
+ARCHS = ["gcn", "gin", "sage"]
+
+
+def _cfg(arch, *, precision="mixed"):
+    return dataclasses.replace(
+        get_config(f"ample-{arch}", reduced=True),
+        d_model=20, d_ff=12, vocab_size=6, gnn_precision=precision,
+        gnn_edges_per_tile=64,
+    )
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return [
+        make_dataset("cora", max_nodes=n, max_feature_dim=20, seed=s)
+        for n, s in [(60, 1), (45, 2), (75, 3), (30, 4)]
+    ]
+
+
+# ------------------------------------------------- async == sync, bitwise
+@pytest.mark.parametrize("arch", ARCHS)
+def test_async_matches_sync_bitwise(arch, pool):
+    """One admitted window == one synchronous infer_batch, bit for bit
+    (mixed precision on, so plan caching and quant state are exercised)."""
+    eng = GNNServeEngine(_cfg(arch), key=jax.random.PRNGKey(7))
+    async_eng = AsyncGNNEngine(eng, window=len(pool))
+    for g in pool:
+        async_eng.submit(g, g.features)
+    got = async_eng.drain()
+    want = eng.infer_batch([GNNRequest(graph=g, features=g.features) for g in pool])
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a.outputs, b.outputs)
+        assert a.fingerprint == b.fingerprint
+    assert async_eng.stats["steps"] == 1
+
+
+def test_async_matches_sync_windowed(pool):
+    """window=2 splits the stream into pair compositions; each pair is
+    bitwise the synchronous infer_batch of that pair."""
+    eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(3))
+    async_eng = AsyncGNNEngine(eng, window=2)
+    for g in pool:
+        async_eng.submit(g, g.features)
+    got = async_eng.drain()
+    assert async_eng.stats["steps"] == 2
+    for off, pair in ((0, pool[:2]), (2, pool[2:])):
+        want = eng.infer_batch(
+            [GNNRequest(graph=g, features=g.features) for g in pair]
+        )
+        for i, b in enumerate(want):
+            np.testing.assert_array_equal(got[off + i].outputs, b.outputs)
+
+
+@pytest.mark.parametrize("num_shards", [1, 2])
+def test_async_sharded_matches_sync(num_shards, pool):
+    """The admission loop drives the sharded plan path identically."""
+    eng = GNNServeEngine(
+        _cfg("gcn"), key=jax.random.PRNGKey(5), num_shards=num_shards
+    )
+    async_eng = AsyncGNNEngine(eng, window=3)
+    members = pool[:3]
+    for g in members:
+        async_eng.submit(g, g.features)
+    got = async_eng.drain()
+    want = eng.infer_batch(
+        [GNNRequest(graph=g, features=g.features) for g in members]
+    )
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a.outputs, b.outputs)
+        assert a.num_shards == num_shards
+
+
+def test_ticket_result_drives_loop(pool):
+    """Reading a pending ticket's result ticks the event loop to completion."""
+    async_eng = AsyncGNNEngine(_cfg("gin"), window=2, key=jax.random.PRNGKey(1))
+    t1 = async_eng.submit(pool[0], pool[0].features)
+    t2 = async_eng.submit(pool[1], pool[1].features)
+    assert not t1.done and not t2.done and async_eng.pending == 2
+    r2 = t2.result()  # drives step(); both ride the same micro-batch
+    assert t1.done and t2.done and async_eng.pending == 0
+    assert r2.outputs.shape == (pool[1].num_nodes, 6)
+    assert r2.batch_size == 2
+
+
+# ----------------------------------------------- fairness / slot recycling
+def test_fifo_order_and_straggler_isolation(pool):
+    """A node-budget-busting straggler closes its window but is neither
+    skipped nor overtaken: completion order equals submission order."""
+    big = make_dataset("cora", max_nodes=150, max_feature_dim=20, seed=9)
+    eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(2))
+    async_eng = AsyncGNNEngine(eng, window=4, max_batch_nodes=160)
+    order = [pool[0], big, pool[1], pool[2]]  # 60, 150, 45, 75 nodes
+    tickets = [async_eng.submit(g, g.features) for g in order]
+
+    first = async_eng.step()
+    assert [t.seq for t in first] == [0]  # big (150) won't fit next to 60
+    second = async_eng.step()
+    assert [t.seq for t in second] == [1]  # the straggler rides alone
+    third = async_eng.step()
+    assert [t.seq for t in third] == [2, 3]  # freed slots recycle together
+    assert async_eng.step() == []  # idle tick is a no-op
+    assert [t.response.batch_size for t in tickets] == [1, 1, 2, 2]
+
+
+def test_window_slot_recycling_refills_from_queue(pool):
+    """Every tick admits up to `window` requests — slots freed by a completed
+    batch are immediately refilled from the queue head."""
+    async_eng = AsyncGNNEngine(_cfg("sage"), window=2, key=jax.random.PRNGKey(4))
+    for g in pool:
+        async_eng.submit(g, g.features)
+    sizes = []
+    while async_eng.pending:
+        sizes.append(len(async_eng.step()))
+    assert sizes == [2, 2]
+    assert async_eng.stats["completed"] == 4
+
+
+# ------------------------------------------------- padded size-class cache
+def test_padded_size_class_cache_hits_across_mixes(pool):
+    """Varying member mixes in one size class: the planner runs once per
+    distinct member, never per composition."""
+    eng = GNNServeEngine(
+        _cfg("gcn"), key=jax.random.PRNGKey(0),
+        union_node_bucket=256, union_edge_bucket=4096,
+    )
+    async_eng = AsyncGNNEngine(eng, window=3)
+    mixes = [pool[:2], [pool[0], pool[2]], [pool[1], pool[2]], [pool[2], pool[0]]]
+    for mix in mixes:
+        for g in mix:
+            async_eng.submit(g, g.features)
+        async_eng.step()
+    async_eng.drain()
+    info = async_eng.cache_info()
+    lookups = info["member_hits"] + info["member_misses"]
+    assert info["member_misses"] == 3  # one planner visit per distinct member
+    assert info["member_hits"] == lookups - 3
+    assert info["member_hits"] / lookups > 0.5
+    assert info["class_hits"] >= 3  # all mixes land in one size class
+    assert info["planner_calls"] == 3
+    # exact composition repeat is a full assembled-plan hit
+    again = eng.infer_batch(
+        [GNNRequest(graph=g, features=g.features) for g in mixes[0]]
+    )
+    assert all(r.cache_hit for r in again)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_padded_matches_exact_shapes(arch, pool):
+    """Padded size-class serving returns the same answers as exact-shape
+    union serving (float tolerance: tile packing order differs)."""
+    cfg = _cfg(arch)
+    exact = GNNServeEngine(cfg, key=jax.random.PRNGKey(11))
+    padded = GNNServeEngine(
+        cfg, exact.params, union_node_bucket=128, union_edge_bucket=512
+    )
+    reqs = [GNNRequest(graph=g, features=g.features) for g in pool[:3]]
+    a = exact.infer_batch(reqs)
+    b = padded.infer_batch(reqs)
+    for x, y in zip(a, b):
+        assert x.outputs.shape == y.outputs.shape  # padding rows sliced off
+        np.testing.assert_allclose(x.outputs, y.outputs, atol=1e-5, rtol=1e-5)
+    # repeat composition on the padded engine is warm and bitwise-stable
+    c = padded.infer_batch(reqs)
+    for y, z in zip(b, c):
+        assert z.cache_hit
+        np.testing.assert_array_equal(y.outputs, z.outputs)
+
+
+def test_padded_single_infer_prewarms_batches(pool):
+    """Solo requests and batch members share one member-plan cache."""
+    eng = GNNServeEngine(
+        _cfg("gin"), key=jax.random.PRNGKey(6), union_node_bucket=128
+    )
+    eng.infer(pool[0], pool[0].features)
+    eng.infer(pool[1], pool[1].features)
+    assert eng.stats["member_misses"] == 2
+    eng.infer_batch(
+        [GNNRequest(graph=g, features=g.features) for g in pool[:2]]
+    )
+    assert eng.stats["member_misses"] == 2  # batch reused both solo pieces
+    assert eng.stats["member_hits"] == 2
+
+
+# ------------------------------------------------------- input validation
+def test_submit_rejects_bad_feature_rows(pool):
+    async_eng = AsyncGNNEngine(_cfg("gcn"), key=jax.random.PRNGKey(0))
+    bad = np.zeros((pool[0].num_nodes - 5, 20), np.float32)
+    with pytest.raises(ValueError, match="rows but graph"):
+        async_eng.submit(pool[0], bad)
+    with pytest.raises(ValueError, match="must be 2-D"):
+        async_eng.submit(pool[0], np.zeros(pool[0].num_nodes, np.float32))
+    assert async_eng.pending == 0  # nothing half-admitted
+
+
+def test_engine_rejects_zero_node_graph(pool):
+    eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(0))
+    empty = Graph(
+        indptr=np.zeros(1, np.int64), indices=np.zeros(0, np.int32), num_nodes=0
+    )
+    with pytest.raises(ValueError, match="zero-node graph"):
+        eng.infer(empty, np.zeros((0, 20), np.float32))
+    reqs = [
+        GNNRequest(graph=pool[0], features=pool[0].features),
+        GNNRequest(graph=empty, features=np.zeros((0, 20), np.float32)),
+    ]
+    with pytest.raises(ValueError, match="zero-node graph"):
+        eng.infer_batch(reqs)
+
+
+def test_infer_batch_rejects_mismatched_features(pool):
+    eng = GNNServeEngine(_cfg("sage"), key=jax.random.PRNGKey(0))
+    reqs = [
+        GNNRequest(graph=pool[0], features=pool[0].features),
+        GNNRequest(graph=pool[1], features=pool[0].features),  # wrong rows
+    ]
+    with pytest.raises(ValueError, match="rows but graph"):
+        eng.infer_batch(reqs)
+
+
+# --------------------------------------------------- response accounting
+def test_response_batch_size_and_amortized_run_ms(pool):
+    eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(8))
+    solo = eng.infer(pool[0], pool[0].features)
+    assert solo.batch_size == 1
+    assert solo.run_ms_per_member == solo.run_ms
+    batch = eng.infer_batch(
+        [GNNRequest(graph=g, features=g.features) for g in pool[:3]]
+    )
+    for r in batch:
+        assert r.batch_size == 3
+        assert r.run_ms_per_member == pytest.approx(r.run_ms / 3)
+    # every member of one union call reports the same whole-batch wall time
+    assert len({r.run_ms for r in batch}) == 1
+
+
+# ---------------------------------------------------------- persistence
+def test_padded_plan_cache_roundtrip(tmp_path, pool):
+    """Assembled (padded) union plans persist and warm-start a new engine;
+    the 'pad' tag must not resurrect as a transform node group on load."""
+    eng = GNNServeEngine(
+        _cfg("gcn"), key=jax.random.PRNGKey(12),
+        union_node_bucket=128, union_edge_bucket=512,
+    )
+    reqs = [GNNRequest(graph=g, features=g.features) for g in pool[:2]]
+    want = eng.infer_batch(reqs)
+    eng.save_plan_cache(str(tmp_path))
+
+    warm = GNNServeEngine(
+        eng.cfg, eng.params,
+        union_node_bucket=128, union_edge_bucket=512,
+    )
+    assert warm.load_plan_cache(str(tmp_path)) >= 1
+    got = warm.infer_batch(reqs)
+    # The assembled plan was resident so no assembly ran, but the member
+    # pieces were cold and honestly count as planning paid by this request.
+    assert all(not r.cache_hit and r.plan_ms > 0.0 for r in got)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a.outputs, b.outputs)
+    hot = warm.infer_batch(reqs)  # pieces + assembly now warm: full hit
+    assert all(r.cache_hit and r.plan_ms == 0.0 for r in hot)
+    for a, b in zip(want, hot):
+        np.testing.assert_array_equal(a.outputs, b.outputs)
+
+
+def test_submit_rejects_bad_feature_columns(pool):
+    """Wrong feature width is rejected at the admission door, not as a
+    cryptic concatenate failure after co-admitted members were planned."""
+    async_eng = AsyncGNNEngine(_cfg("gcn"), key=jax.random.PRNGKey(0))
+    bad = np.zeros((pool[0].num_nodes, 13), np.float32)
+    with pytest.raises(ValueError, match="13 columns"):
+        async_eng.submit(pool[0], bad)
+    assert async_eng.pending == 0
+
+
+def test_step_failure_requeues_tickets(pool, monkeypatch):
+    """A batch-execution failure must not strand admitted tickets: the
+    window goes back to the queue head in order and the error propagates."""
+    eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(0))
+    async_eng = AsyncGNNEngine(eng, window=2)
+    t1 = async_eng.submit(pool[0], pool[0].features)
+    t2 = async_eng.submit(pool[1], pool[1].features)
+
+    real = eng.infer_batch
+    calls = {"n": 0}
+
+    def flaky(requests):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient device failure")
+        return real(requests)
+
+    monkeypatch.setattr(eng, "infer_batch", flaky)
+    with pytest.raises(RuntimeError, match="transient"):
+        async_eng.step()
+    assert async_eng.pending == 2  # both tickets back in the queue, in order
+    assert not t1.done and not t2.done
+    done = async_eng.drain()  # retry succeeds
+    assert [t.done for t in (t1, t2)] == [True, True]
+    assert [r.outputs.shape[0] for r in done] == [g.num_nodes for g in pool[:2]]
+    assert async_eng.stats["steps"] == 1  # the failed tick never counted

@@ -120,3 +120,56 @@ def test_halo_nodes_are_remote_neighbors():
             nbrs.update(g.neighbors(i).tolist())
         remote = {x for x in nbrs if x < lo or x >= hi}
         assert remote == set(halo.tolist())
+
+
+# ------------------------------------------------- padded disjoint unions
+def test_disjoint_union_node_padding():
+    from repro.graphs import disjoint_union, validate
+
+    a = make_lognormal_graph(40, 4.0, seed=1)
+    b = make_lognormal_graph(25, 3.0, seed=2)
+    u = disjoint_union([a, b], pad_num_nodes=128)
+    validate(u)
+    assert u.num_nodes == 128
+    assert u.num_edges == a.num_edges + b.num_edges
+    # padding nodes are isolated: no edges in, and never a gather source
+    assert np.all(np.diff(u.indptr[65:]) == 0)
+    assert u.num_edges == 0 or u.indices.max() < 65
+
+
+def test_disjoint_union_edge_padding_self_edges_only():
+    from repro.graphs import disjoint_union, validate
+
+    a = make_lognormal_graph(40, 4.0, seed=3)
+    target_e = a.num_edges + 37
+    u = disjoint_union([a], pad_num_nodes=64, pad_num_edges=target_e)
+    validate(u)
+    assert u.num_nodes == 64 and u.num_edges == target_e
+    # every padding edge is a self-edge on a padding node
+    rows = np.repeat(np.arange(64), np.diff(u.indptr))
+    pad_lanes = rows >= 40
+    assert pad_lanes.sum() == 37
+    np.testing.assert_array_equal(u.indices[pad_lanes], rows[pad_lanes])
+
+
+def test_disjoint_union_padded_features_zero_rows():
+    from repro.graphs import disjoint_union
+
+    a = make_dataset("cora", max_nodes=30, max_feature_dim=8, seed=1)
+    b = make_dataset("cora", max_nodes=20, max_feature_dim=8, seed=2)
+    u = disjoint_union([a, b], pad_num_nodes=64)
+    assert u.features.shape == (64, 8)
+    np.testing.assert_array_equal(u.features[:50], np.concatenate([a.features, b.features]))
+    assert not u.features[50:].any()
+
+
+def test_disjoint_union_padding_validation():
+    from repro.graphs import disjoint_union
+
+    a = make_lognormal_graph(40, 4.0, seed=4)
+    with pytest.raises(ValueError, match="pad_num_nodes"):
+        disjoint_union([a], pad_num_nodes=10)
+    with pytest.raises(ValueError, match="pad_num_edges"):
+        disjoint_union([a], pad_num_nodes=40, pad_num_edges=a.num_edges - 1)
+    with pytest.raises(ValueError, match="padding node"):
+        disjoint_union([a], pad_num_nodes=40, pad_num_edges=a.num_edges + 5)

@@ -139,3 +139,59 @@ def test_pack_segments_feasible(lengths, cap):
     assert num_tiles * cap <= 2 * total + 2 * cap
     for i, ln in enumerate(lengths):
         assert 0 <= offset_of[i] < cap
+
+
+# --------------------------------------- padded union size-class planning
+def test_size_class_rounds_up():
+    from repro.core.scheduler import size_class
+
+    assert size_class(100, 900, 256, 1024) == (256, 1024)
+    assert size_class(256, 1024, 256, 1024) == (256, 1024)
+    assert size_class(257, 1025, 256, 1024) == (512, 2048)
+    assert size_class(100, 900, 0, 0) == (100, 900)  # buckets off = exact
+    assert size_class(0, 0, 256, 1024) == (256, 1024)  # never below one bucket
+
+
+def test_union_bucket_fingerprint_is_class_keyed():
+    from repro.core.scheduler import union_bucket_fingerprint
+
+    # different member mixes, same size class -> same key
+    a = union_bucket_fingerprint(100, 900, 256, 1024, "cfg", "gcn")
+    b = union_bucket_fingerprint(130, 1000, 256, 1024, "cfg", "gcn")
+    assert a == b
+    # crossing a bucket boundary, changing buckets, or changing config parts
+    # all change the key
+    assert union_bucket_fingerprint(300, 900, 256, 1024, "cfg", "gcn") != a
+    assert union_bucket_fingerprint(100, 900, 128, 1024, "cfg", "gcn") != a
+    assert union_bucket_fingerprint(100, 900, 256, 1024, "cfg", "gin") != a
+
+
+def test_concat_tile_plans_matches_union_aggregation():
+    """Assembled member tiles == dense union aggregation (exact edge cover)."""
+    from repro.core.scheduler import concat_tile_plans
+    from repro.graphs import disjoint_union
+
+    a = make_lognormal_graph(30, 4.0, seed=1)
+    b = make_lognormal_graph(20, 3.0, seed=2)
+    u = disjoint_union([a, b], pad_num_nodes=64)
+    pa = build_edge_tile_plan(a, edges_per_tile=32)
+    pb = build_edge_tile_plan(b, edges_per_tile=32)
+    cat = concat_tile_plans([pa, pb], [0, 30], num_nodes=64, min_tiles=12)
+    assert cat.num_tiles == 12  # padded up to the tile bucket
+    assert cat.total_edges == a.num_edges + b.num_edges
+    got = _edge_multiset_from_tiles(cat)
+    want = _edge_multiset_from_graph(u)
+    assert got == want
+
+
+def test_concat_tile_plans_rejects_geometry_mismatch():
+    import pytest
+
+    from repro.core.scheduler import concat_tile_plans
+
+    a = build_edge_tile_plan(make_lognormal_graph(20, 3.0, seed=1), edges_per_tile=32)
+    b = build_edge_tile_plan(make_lognormal_graph(20, 3.0, seed=2), edges_per_tile=64)
+    with pytest.raises(ValueError, match="tile geometry"):
+        concat_tile_plans([a, b], [0, 20], num_nodes=40)
+    with pytest.raises(ValueError, match="beyond"):
+        concat_tile_plans([a], [30], num_nodes=40)
