@@ -12,10 +12,23 @@ is unavailable.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from typing import Callable, List
 
 import numpy as np
+
+# Large-graph rows regenerate yelp/reddit-scale lognormal graphs; cache the
+# structures on disk so repeat bench runs skip the dominant setup cost.
+# Anchored to the repo root (same default as tests/conftest.py) so runs from
+# any cwd share one cache.
+os.environ.setdefault(
+    "REPRO_DATASET_CACHE",
+    os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        ".dataset-cache",
+    ),
+)
 
 ROWS: List[str] = []
 
@@ -320,6 +333,132 @@ def bench_sharded_serve(quick: bool) -> None:
         )
 
 
+# ----------------- out-of-core serving: budget vs latency/bytes/hit rate
+def bench_outofcore(quick: bool) -> None:
+    """Full-scale reddit + yelp inference under feature budgets smaller than
+    the feature matrix: the out-of-core path keeps features host-resident and
+    streams chunks through the plan-driven prefetcher. Sweeps budget vs
+    latency, bytes streamed and chunk-cache hit rate (the artifact rows CI
+    uploads as BENCH_prefetch.json)."""
+    import dataclasses as dc
+
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.graphs.datasets import PAPER_DATASETS, make_dataset
+    from repro.serve.gnn_engine import GNNServeEngine
+
+    # --quick: mid-size subsets, CI-friendly; full: the paper's full scales.
+    cap = 8_000 if quick else None
+    fdim = 128 if quick else None
+    tile = 1_024 if quick else 4_096
+    for name in ("reddit", "yelp"):
+        spec = PAPER_DATASETS[name]
+        g = make_dataset(name, max_nodes=cap, max_feature_dim=fdim, seed=0)
+        feat_bytes = g.features.nbytes
+        base = get_config("ample-gcn", reduced=quick)
+        cfg = dc.replace(
+            base,
+            d_model=g.feature_dim,
+            vocab_size=spec.num_classes,
+            gnn_edges_per_tile=tile,
+        )
+        # One engine for the whole sweep: the plan compiles once, and only
+        # ``feature_budget_bytes`` moves between points (the sweep knob).
+        chunk_rows = 1_024 if quick else 8_192
+        eng = GNNServeEngine(
+            cfg,
+            feature_budget_bytes=0,
+            feature_chunk_rows=chunk_rows,
+            key=jax.random.PRNGKey(0),
+        )
+        cold = eng.infer(g, g.features)  # planner + dense-path jit, untimed
+        # Floor each budget at one f32 chunk (the minimum the cache can hold)
+        # rather than a fixed size, so sweep points stay distinct at --quick
+        # scales instead of collapsing onto one clamped value.
+        floor = chunk_rows * g.feature_dim * 4
+        # Untimed streamed warmup: compiles the tile-step/gather/upload jits
+        # (budget-independent shapes) so the first sweep point isn't inflated
+        # by one-time compilation.
+        eng.feature_budget_bytes = max(feat_bytes // 8, floor)
+        eng.infer(g, g.features)
+        in_mem_us = None
+        for frac in (0, 8, 4, 2):  # 0 = in-memory reference, then budget sweep
+            eng.feature_budget_bytes = (
+                0 if frac == 0 else max(feat_bytes // frac, floor)
+            )
+            t0 = time.perf_counter()
+            r = eng.infer(g, g.features)
+            us = (time.perf_counter() - t0) * 1e6
+            if frac == 0:
+                in_mem_us = us
+                emit(
+                    f"outofcore_{name}_inmem", us,
+                    f"nodes={g.num_nodes};edges={g.num_edges};"
+                    f"feat_mb={feat_bytes >> 20};plan_ms={cold.plan_ms:.0f};"
+                    f"streamed={r.streamed}",
+                )
+                continue
+            emit(
+                f"outofcore_{name}_budget_1_{frac}", us,
+                f"budget_mb={eng.feature_budget_bytes / (1 << 20):.1f};"
+                f"feat_mb={feat_bytes / (1 << 20):.1f};"
+                f"bytes_streamed={r.bytes_streamed};"
+                f"chunk_hit_rate={r.chunk_hit_rate:.3f};"
+                f"prefetch_overlap={r.prefetch_overlap:.3f};"
+                f"vs_inmem={us / max(in_mem_us, 1e-9):.2f}x;streamed={r.streamed}",
+            )
+
+
+# ------------- prefetcher calibration: simulated depth vs measured budget
+def bench_prefetch_calibration(quick: bool) -> None:
+    """Calibrate the discrete-event prefetcher model against the measured
+    chunk cache: sweep the simulator's prefetch depth (deeper → fewer stall
+    cycles) next to the measured budget sweep (bigger cache → higher chunk
+    hit rate); both trends must be monotone (asserted by tests)."""
+    from repro.core.scheduler import build_chunk_schedule, build_edge_tile_plan
+    from repro.core.simulator import SimConfig, simulate
+    from repro.graphs.datasets import make_dataset
+    from repro.memory.feature_store import FeatureStore
+    from repro.memory.prefetcher import ChunkPrefetcher, StreamStats
+
+    n = 5_000 if quick else 20_000
+    g = make_dataset("flickr", max_nodes=n, max_feature_dim=64, seed=0)
+
+    for depth in (0, 1, 2, 4):
+        res = simulate(
+            g, feature_dim=256, cfg=SimConfig(prefetch_depth=depth)
+        )
+        emit(
+            f"prefetch_sim_depth_{depth}", 0.0,
+            f"fetch_stall_frac={res.fetch_stall_frac:.4f};"
+            f"latency_ms={res.latency_ms:.3f}",
+        )
+
+    store = FeatureStore.from_array(g.features, chunk_rows=512)
+    plan = build_edge_tile_plan(g, edges_per_tile=1_024)
+    schedule = build_chunk_schedule(plan, store.chunk_rows)
+    # Sweep explicit slot counts (budget = slots × chunk bytes): fractional
+    # budgets can round to the same slot count at --quick scales, which
+    # would record duplicate rows under distinct names.
+    for slots in (1, 2, 4, 8):
+        budget = slots * store.chunk_bytes_f32
+        stats = StreamStats()
+        pf = ChunkPrefetcher(
+            store, schedule, stream="f32", budget_bytes=budget, stats=stats
+        )
+        t0 = time.perf_counter()
+        pf.aggregate(plan).block_until_ready()
+        us = (time.perf_counter() - t0) * 1e6
+        emit(
+            f"prefetch_measured_slots_{slots}", us,
+            f"budget_mb={budget / (1 << 20):.2f};"
+            f"chunk_hit_rate={stats.hit_rate:.4f};"
+            f"bytes_streamed={stats.bytes_streamed};"
+            f"evictions={stats.evictions};waves={stats.waves}",
+        )
+
+
 # --------------------------------------------- MoE event-driven dispatch
 def bench_moe_dispatch(quick: bool) -> None:
     import jax
@@ -382,6 +521,8 @@ BENCHES = [
     bench_gnn_serve,
     bench_continuous_serve,
     bench_sharded_serve,
+    bench_outofcore,
+    bench_prefetch_calibration,
     bench_moe_dispatch,
     bench_kernels,
 ]
@@ -416,13 +557,20 @@ def write_artifact(path: str, quick: bool) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings of bench names to run")
+    ap.add_argument("--skip", default=None,
+                    help="comma-separated substrings of bench names to skip")
     ap.add_argument("--out", default=None,
                     help="write rows as a JSON artifact (e.g. BENCH_serve.json)")
     args = ap.parse_args()
+    wanted = [s for s in (args.only or "").split(",") if s]
+    unwanted = [s for s in (args.skip or "").split(",") if s]
     print("name,us_per_call,derived")
     for bench in BENCHES:
-        if args.only and args.only not in bench.__name__:
+        if wanted and not any(s in bench.__name__ for s in wanted):
+            continue
+        if any(s in bench.__name__ for s in unwanted):
             continue
         bench(args.quick)
     if args.out:

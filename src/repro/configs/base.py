@@ -86,6 +86,12 @@ class ModelConfig:
     gnn_batch_window: int = 8  # max requests admitted per micro-batch union
     gnn_union_node_bucket: int = 0  # pad union batches to node size classes (0=exact)
     gnn_union_edge_bucket: int = 0  # pad union tile stacks to edge size classes
+    # Out-of-core serving (memory/feature_store.py + memory/prefetcher.py):
+    # requests whose feature matrix exceeds the budget keep features host-
+    # resident and stream them chunk-wise (bitwise-identical outputs);
+    # 0 disables streaming (everything uploads, the historical path).
+    gnn_feature_budget_bytes: int = 0  # device bytes granted to feature chunks
+    gnn_feature_chunk_rows: int = 0  # rows per chunk (0 = derive from budget)
 
     # --- frontend stubs (vlm/audio): inputs arrive as embeddings ---
     embeds_input: bool = False

@@ -44,6 +44,16 @@ from repro.graphs.partition import (
     validate_partition,
 )
 
+# repro.memory imports repro.core (scheduler/quantization/transformation), so
+# the engine pulls the streamed executors in lazily — a module-level import
+# here would deadlock whichever package is imported first.
+
+
+def _streamed_features_type():
+    from repro.memory.prefetcher import StreamedFeatures
+
+    return StreamedFeatures
+
 __all__ = [
     "EngineConfig",
     "ExecutionPlan",
@@ -616,6 +626,9 @@ class AmpleEngine:
         self._forward_active = False
         self._agg_slot = 0
         self._fte_slot = 0
+        # Chunk-access schedules for the out-of-core path, keyed on
+        # (mode, tag, chunk_rows, reorder) — per-plan-static like dplans.
+        self._chunk_schedules: Dict[tuple, object] = {}
 
     # ------------------------------------------------- static quant state
     def begin_forward(self) -> None:
@@ -634,10 +647,27 @@ class AmpleEngine:
         self._agg_slot = 0
         self._fte_slot = 0
 
-    def _activation_qp(self, values_fn: Callable[[], jnp.ndarray], kind: str) -> QuantParams:
-        """Scale/zp for one quantized call site (lazy: warm slots skip the calc)."""
+    def _activation_qp(
+        self,
+        values_fn: Optional[Callable[[], jnp.ndarray]],
+        kind: str,
+        *,
+        make_qp: Optional[Callable[[], QuantParams]] = None,
+    ) -> QuantParams:
+        """Scale/zp for one quantized call site (lazy: warm slots skip the calc).
+
+        ``make_qp`` overrides the cold calibration source — the streamed
+        paths pass a host-side factory (bitwise-equal to the device
+        reduction) so the SAME slot protocol serves dense and streamed
+        forwards; a warm slot cached by either path feeds both.
+        """
+        calibrate = (
+            make_qp
+            if make_qp is not None
+            else lambda: compute_scale_zp(values_fn(), symmetric=True)
+        )
         if not self._forward_active:
-            return compute_scale_zp(values_fn(), symmetric=True)
+            return calibrate()
         if kind == "agg":
             slot = ("agg", self._agg_slot)
             self._agg_slot += 1
@@ -645,7 +675,7 @@ class AmpleEngine:
             slot = ("fte", self._fte_slot)
             self._fte_slot += 1
         if slot not in self._act_qp:
-            qp = compute_scale_zp(values_fn(), symmetric=True)
+            qp = calibrate()
             if isinstance(qp.scale, jax.core.Tracer):
                 # Under jit/grad tracing (training) the calibration is part of
                 # the traced computation — caching it would leak tracers, so
@@ -679,9 +709,81 @@ class AmpleEngine:
             )
         return self._plans[mode]
 
+    # ------------------------------------------------- out-of-core streaming
+    def _chunk_schedule(self, mode: str, tag: str, sf):
+        """Schedule cache for the streamed path (per-plan-static artifact)."""
+        key = (mode, tag, sf.store.chunk_rows, sf.reorder)
+        if key not in self._chunk_schedules:
+            self._chunk_schedules[key] = sched.build_chunk_schedule(
+                self.plans(mode)[tag], sf.store.chunk_rows, reorder=sf.reorder
+            )
+        return self._chunk_schedules[key]
+
+    def _aggregate_streamed(self, sf, mode: str) -> jnp.ndarray:
+        from repro.memory.prefetcher import aggregate_streamed
+
+        if sf.store.num_rows != self.graph.num_nodes:
+            raise ValueError(
+                f"feature store has {sf.store.num_rows} rows but graph has "
+                f"{self.graph.num_nodes} nodes"
+            )
+        plans = self.plans(mode)
+        schedules = {tag: self._chunk_schedule(mode, tag, sf) for tag in plans}
+        qp = None
+        if self.cfg.mixed_precision and "int8" in plans:
+            qp = self._activation_qp(None, "agg", make_qp=sf.agg_qp)
+        return aggregate_streamed(
+            sf,
+            plans,
+            schedules,
+            num_nodes=self.graph.num_nodes,
+            mixed=self.cfg.mixed_precision,
+            qp=qp,
+        )
+
+    def _transform_streamed(
+        self,
+        sf,
+        w: jnp.ndarray,
+        b: Optional[jnp.ndarray],
+        activation: Optional[Callable[[jnp.ndarray], jnp.ndarray]],
+    ) -> jnp.ndarray:
+        from repro.memory.prefetcher import _host_fte_qp, transform_streamed
+
+        if sf.store.num_rows != self.graph.num_nodes:
+            raise ValueError(
+                f"feature store has {sf.store.num_rows} rows but graph has "
+                f"{self.graph.num_nodes} nodes"
+            )
+        if not self.cfg.mixed_precision:
+            # A float-policy FTE over the full matrix cannot be row-blocked
+            # bitwise-identically (f32 matmul blocking reassociates), so the
+            # store is materialized — loud in telemetry, never silent.
+            sf.stats.fallbacks += 1
+            sf.stats.fallback_bytes += sf.nbytes
+            return transform_dense(jnp.asarray(sf.store.dense()), w, b, activation)
+        w_q, w_qp = self._weight_q(w)
+        a_qp = None
+        ids = self.node_groups.get("int8")
+        if self._forward_active and ids is not None and ids.size:
+            a_qp = self._activation_qp(
+                None, "fte", make_qp=lambda: _host_fte_qp(sf.store.amax_rows(ids))
+            )
+        return transform_streamed(
+            sf, self.node_groups, w, b, activation,
+            w_q=w_q, w_qp=w_qp, a_qp=a_qp,
+        )
+
     # ----------------------------------------------------------------- AGE
     def aggregate(self, x: jnp.ndarray, *, mode: str = "sum") -> jnp.ndarray:
-        """Event-driven mixed-precision aggregation of node embeddings."""
+        """Event-driven mixed-precision aggregation of node embeddings.
+
+        ``x`` may be a ``memory.StreamedFeatures`` handle instead of a dense
+        matrix: aggregation then runs chunk-streamed through the prefetcher
+        under its feature budget, bitwise-identical to the dense path.
+        """
+        if isinstance(x, _streamed_features_type()):
+            return self._aggregate_streamed(x, mode)
         plans = self.plans(mode)
         dplans = self._device_plans(mode, plans)
         if self.cfg.mixed_precision:
@@ -723,7 +825,15 @@ class AmpleEngine:
         b: Optional[jnp.ndarray] = None,
         activation: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
     ) -> jnp.ndarray:
-        """Mixed-precision transformation of aggregated embeddings."""
+        """Mixed-precision transformation of aggregated embeddings.
+
+        Accepts a ``memory.StreamedFeatures`` handle for ``h``: the int8
+        group then streams chunk-blocked (1-byte rows, exact int32 matmul)
+        and the float-protected block is gathered once — bitwise-identical
+        to the dense mixed path (GraphSAGE's φ over stored features).
+        """
+        if isinstance(h, _streamed_features_type()):
+            return self._transform_streamed(h, w, b, activation)
         if not self.cfg.mixed_precision:
             return transform_dense(h, w, b, activation)
         w_q, w_qp = self._weight_q(w)

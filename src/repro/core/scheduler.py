@@ -41,10 +41,13 @@ __all__ = [
     "Bucket",
     "BucketPlan",
     "PaddedPlan",
+    "ChunkSchedule",
     "build_edge_tile_plan",
     "build_bucket_plan",
     "build_padded_plan",
     "build_mixed_precision_plans",
+    "build_chunk_schedule",
+    "tile_runs",
     "pack_segments",
     "concat_tile_plans",
     "graph_fingerprint",
@@ -564,6 +567,121 @@ def build_mixed_precision_plans(
             node_ids=ids,
         )
     return plans
+
+
+# ---------------------------------------------------------------------------
+# Chunk-access schedule — the prefetcher's programming (out-of-core serving)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkSchedule:
+    """An EdgeTilePlan annotated with the feature chunks each tile gathers.
+
+    This is the host-side programming of the prefetcher (§3.3): the feature
+    matrix is split into ``chunk_rows``-row chunks, every tile is annotated
+    with the sorted chunk ids its gather lanes touch (all lanes, including
+    invalid coeff-0 lanes — those still read a row, and their ±0 products
+    must reproduce bitwise), and tiles are emitted in an execution ``order``
+    chosen to raise chunk reuse between consecutive tiles.
+
+    ``order`` only ever permutes whole *runs* (see :func:`tile_runs`): a node
+    split across tiles lands in consecutive tiles, so keeping runs intact
+    preserves each output row's scatter-add order — the streamed executor is
+    bitwise-identical to the in-memory scan however the runs are permuted.
+    """
+
+    chunk_rows: int
+    num_chunks: int
+    order: np.ndarray  # int64[T] tile execution order (permutes whole runs)
+    tile_chunks: Tuple[np.ndarray, ...]  # per plan-tile sorted unique chunk ids
+    runs: np.ndarray  # int64[R+1] run boundaries over plan tile indices
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.order.shape[0])
+
+    @property
+    def num_runs(self) -> int:
+        return int(self.runs.shape[0]) - 1
+
+    @property
+    def total_chunk_visits(self) -> int:
+        """Σ over tiles of chunks touched — uploads if nothing were cached."""
+        return int(sum(c.size for c in self.tile_chunks))
+
+    def max_tile_chunks(self) -> int:
+        """Largest single-tile working set (waves needed = ceil(this/slots))."""
+        return int(max((c.size for c in self.tile_chunks), default=0))
+
+
+def tile_runs(plan: EdgeTilePlan) -> np.ndarray:
+    """Boundaries of split-chains: maximal spans of tiles sharing an out node.
+
+    ``build_edge_tile_plan`` splits an overflowing node across *consecutive*
+    tiles (the partial-response mechanism), so a run is the unit that may be
+    reordered without perturbing any output row's accumulation order: within
+    a run the split node's partial sums stay in tile order, and no node spans
+    two runs. Returns int64[num_runs + 1] half-open boundaries.
+    """
+    T = plan.num_tiles
+    bounds = [0]
+    sentinel = plan.num_nodes
+    for t in range(1, T):
+        prev = plan.out_node[t - 1]
+        cur = plan.out_node[t]
+        prev_valid = prev[prev != sentinel]
+        cur_valid = cur[cur != sentinel]
+        if prev_valid.size and cur_valid.size and np.intersect1d(
+            prev_valid, cur_valid, assume_unique=False
+        ).size:
+            continue  # a node spans the boundary: same run
+        bounds.append(t)
+    bounds.append(T)
+    return np.asarray(bounds, np.int64)
+
+
+def build_chunk_schedule(
+    plan: EdgeTilePlan,
+    chunk_rows: int,
+    *,
+    reorder: bool = True,
+) -> ChunkSchedule:
+    """Annotate a tile plan with chunk accesses and a locality-aware order.
+
+    The reordering pass sorts *runs* by the median chunk id their tiles
+    gather from — runs whose accesses centre on the same region of the
+    feature matrix execute back-to-back, so a budget-bound chunk cache sees
+    longer reuse chains (an O(T log T) clustering heuristic; Belady eviction
+    in the prefetcher does the rest). ``reorder=False`` keeps plan order
+    (useful as the control arm when measuring the reordering win).
+    """
+    if chunk_rows <= 0:
+        raise ValueError("chunk_rows must be positive")
+    num_chunks = -(-max(plan.num_nodes, 1) // chunk_rows)
+    tile_chunks = tuple(
+        np.unique(plan.gather_idx[t].astype(np.int64) // chunk_rows)
+        for t in range(plan.num_tiles)
+    )
+    runs = tile_runs(plan)
+    order = np.arange(plan.num_tiles, dtype=np.int64)
+    if reorder and runs.size > 2:
+        keys = []
+        for r in range(runs.size - 1):
+            lo, hi = int(runs[r]), int(runs[r + 1])
+            touched = np.concatenate([tile_chunks[t] for t in range(lo, hi)])
+            keys.append(float(np.median(touched)) if touched.size else 0.0)
+        run_order = np.argsort(np.asarray(keys), kind="stable")
+        order = np.concatenate(
+            [np.arange(runs[r], runs[r + 1], dtype=np.int64) for r in run_order]
+        )
+    return ChunkSchedule(
+        chunk_rows=int(chunk_rows),
+        num_chunks=int(num_chunks),
+        order=order,
+        tile_chunks=tile_chunks,
+        runs=runs,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,13 @@ class SimConfig:
     fte_macs: int = 32 * 32  # systolic array MACs/cycle (shared)
     instr_overhead_cycles: int = 32  # NID programming + interrupt per node
     event_driven: bool = True  # False = double-buffered baseline
+    # Prefetcher lookahead (§3.3): with depth P, a slot's next fetch is
+    # issued up to P × (its previous node's aggregation time) before the
+    # slot frees, hiding HBM latency behind the running aggregation. 0
+    # reproduces the historical no-lookahead timing exactly; the measured
+    # counterpart is memory/prefetcher.py's chunk cache (see the
+    # bench_prefetch_calibration sweep).
+    prefetch_depth: int = 0
 
 
 @dataclasses.dataclass
@@ -121,19 +128,26 @@ def simulate(
     t_end = 0.0
 
     if cfg.event_driven:
+        prev_agg = np.zeros(cfg.num_nodeslots)  # last agg duration per slot
         for idx, v in enumerate(order):
             free_t, slot = heapq.heappop(slots)
             start = free_t + cfg.instr_overhead_cycles
             bank = slot % cfg.hbm_banks
-            fstart = max(start, bank_free[bank])
-            fetch_stall += fstart - start
+            # Prefetch lookahead: the slot's fetch may be issued while its
+            # previous node was still aggregating (depth × that duration).
+            lookahead = cfg.prefetch_depth * prev_agg[slot]
+            fstart = max(start - lookahead, bank_free[bank])
             # partial response: agg starts when the first chunk has landed
             first_chunk = fetch_c[v] * min(
                 1.0, cfg.fetch_tag_capacity / max(int(deg[v]), 1)
             )
-            agg_start = fstart + first_chunk
+            agg_start = max(start, fstart + first_chunk)
+            # stall = slot cycles spent waiting on data (bank grant + first
+            # chunk arrival); the prefetcher's whole purpose is shrinking it.
+            fetch_stall += agg_start - start
             agg_end = max(agg_start + agg_c[v], fstart + fetch_c[v])
             bank_free[bank] = fstart + fetch_c[v]
+            prev_agg[slot] = agg_c[v]
             fte_start = max(agg_end, fte_free)
             fte_end = fte_start + fte_c[v]
             fte_free = fte_end

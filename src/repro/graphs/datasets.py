@@ -16,13 +16,34 @@ by the *sum*). All generators are deterministic in ``seed``.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, Optional
 
 import numpy as np
 
 from repro.graphs.csr import Graph
 
-__all__ = ["DatasetSpec", "PAPER_DATASETS", "make_dataset", "make_lognormal_graph"]
+__all__ = [
+    "DatasetSpec",
+    "PAPER_DATASETS",
+    "make_dataset",
+    "make_lognormal_graph",
+    "dataset_cache_dir",
+]
+
+#: Environment variable naming the on-disk dataset cache directory. Unset
+#: (and no explicit ``cache_dir``) disables caching — generation stays pure.
+CACHE_ENV = "REPRO_DATASET_CACHE"
+
+#: Cache-key version of the structure generator. Bump on ANY change to
+#: ``make_lognormal_graph``'s output so cached graphs can't go stale.
+_GEN_VERSION = 1
+
+
+def dataset_cache_dir() -> Optional[str]:
+    """The configured on-disk cache directory, or None when disabled."""
+    d = os.environ.get(CACHE_ENV, "").strip()
+    return d or None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +148,48 @@ def make_lognormal_graph(
     )
 
 
+def _cached_structure(
+    cache_dir: str, spec: DatasetSpec, n: int, seed: int
+) -> Graph:
+    """Load (or generate-and-save) a graph *structure* from the disk cache.
+
+    Keyed on everything that shapes the topology: a generator version (bump
+    ``_GEN_VERSION`` whenever ``make_lognormal_graph``'s construction
+    changes, or stale structures survive on disk), name, node count, mean
+    degree, sigma and seed. Only the structure is cached — features are
+    cheap to regenerate deterministically and would triple the disk
+    footprint. The write is atomic (tmp + rename) so concurrent test
+    workers never observe a half-written file.
+    """
+    key = (
+        f"{spec.name}-n{n}-d{spec.mean_degree:g}-s{spec.sigma:g}-seed{seed}"
+        f"-g{_GEN_VERSION}"
+    )
+    path = os.path.join(cache_dir, f"{key}.npz")
+    if os.path.exists(path):
+        with np.load(path) as z:
+            return Graph(
+                indptr=z["indptr"],
+                indices=z["indices"],
+                num_nodes=int(z["num_nodes"]),
+                name=str(z["name"]),
+            )
+    g = make_lognormal_graph(
+        n, spec.mean_degree, sigma=spec.sigma, seed=seed, name=spec.name
+    )
+    os.makedirs(cache_dir, exist_ok=True)
+    tmp = f"{path}.{os.getpid()}.tmp.npz"  # savez appends .npz otherwise
+    np.savez(
+        tmp,
+        indptr=g.indptr,
+        indices=g.indices,
+        num_nodes=np.int64(g.num_nodes),
+        name=np.str_(g.name),
+    )
+    os.replace(tmp, path)
+    return g
+
+
 def make_dataset(
     spec_or_name,
     *,
@@ -135,12 +198,19 @@ def make_dataset(
     feature_scale: float = 1.0,
     max_nodes: Optional[int] = None,
     max_feature_dim: Optional[int] = None,
+    cache_dir: Optional[str] = None,
 ) -> Graph:
     """Instantiate a paper dataset (optionally size-reduced for CPU benches).
 
     ``max_nodes`` / ``max_feature_dim`` scale the graph down proportionally —
     used by smoke tests and CPU wall-clock benches; the discrete-event
     simulator always uses the full published sizes.
+
+    ``cache_dir`` (or the ``REPRO_DATASET_CACHE`` env var) enables an
+    on-disk structure cache keyed on (spec, size, seed): regenerating yelp's
+    717K-node lognormal graph dominates every large-graph test/bench run, so
+    repeat processes load the CSR arrays instead. Cached loads are
+    bit-identical to generation (asserted by tests).
     """
     spec = (
         spec_or_name
@@ -153,9 +223,13 @@ def make_dataset(
         if max_feature_dim is None
         else min(spec.feature_dim, max_feature_dim)
     )
-    g = make_lognormal_graph(
-        n, spec.mean_degree, sigma=spec.sigma, seed=seed, name=spec.name
-    )
+    cdir = cache_dir if cache_dir is not None else dataset_cache_dir()
+    if cdir:
+        g = _cached_structure(cdir, spec, n, seed)
+    else:
+        g = make_lognormal_graph(
+            n, spec.mean_degree, sigma=spec.sigma, seed=seed, name=spec.name
+        )
     if with_features:
         rng = np.random.default_rng(seed + 1)
         feats = rng.standard_normal((n, d)).astype(np.float32) * feature_scale

@@ -16,6 +16,13 @@ micro-batch unions as they arrive, padded to size classes
 ``--window``.
 
     python -m repro.launch.serve --arch ample-gcn --continuous-batching
+
+``--feature-budget-mb`` caps the device bytes granted to node features:
+requests whose feature matrix exceeds the budget are served **out-of-core**
+— features stay host-resident in a chunked feature store and stream through
+the plan-driven prefetcher, with bitwise-identical outputs.
+
+    python -m repro.launch.serve --arch ample-gcn --nodes 20000 --feature-budget-mb 1
 """
 from __future__ import annotations
 
@@ -48,7 +55,13 @@ def serve_gnn(cfg, args) -> None:
     from repro.graphs import make_dataset
     from repro.serve.gnn_engine import GNNRequest, GNNServeEngine
 
-    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(0), num_shards=args.num_shards)
+    budget = int(args.feature_budget_mb * (1 << 20)) if args.feature_budget_mb > 0 else 0
+    eng = GNNServeEngine(
+        cfg,
+        key=jax.random.PRNGKey(0),
+        num_shards=args.num_shards,
+        feature_budget_bytes=budget or None,
+    )
     g = make_dataset(
         args.dataset, max_nodes=args.nodes, max_feature_dim=cfg.d_model, seed=0
     )
@@ -56,6 +69,12 @@ def serve_gnn(cfg, args) -> None:
     print(
         f"arch={cfg.name} graph={g.name} nodes={g.num_nodes} edges={g.num_edges} "
         f"shards={args.num_shards}"
+        + (
+            f" feature_budget={budget / (1 << 20):.2f}MB "
+            f"(features {x.nbytes / (1 << 20):.2f}MB)"
+            if budget
+            else ""
+        )
     )
 
     # Repeat traffic on one graph: the second request skips the planner
@@ -63,9 +82,14 @@ def serve_gnn(cfg, args) -> None:
     for i in range(max(args.requests, 2)):
         r = eng.infer(g, x)
         tag = "hit " if r.cache_hit else "cold"
+        stream = (
+            f"  streamed {r.bytes_streamed >> 10}KB hit={r.chunk_hit_rate:.2f}"
+            if r.streamed
+            else ""
+        )
         print(
             f"request {i}: plan[{tag}] {r.plan_ms:7.1f} ms  run {r.run_ms:6.1f} ms  "
-            f"out {r.outputs.shape}  shards={r.num_shards}"
+            f"out {r.outputs.shape}  shards={r.num_shards}{stream}"
         )
 
     if eng.sharded:
@@ -185,6 +209,12 @@ def main():
     ap.add_argument("--edge-bucket", type=int, default=-1,
                     help="pad union tile stacks to this edge size class "
                          "(-1 = cfg.gnn_union_edge_bucket, 0 = exact shapes)")
+    ap.add_argument("--feature-budget-mb", type=float, default=0,
+                    help="out-of-core serving: device feature budget in MB; "
+                         "requests whose feature matrix exceeds it stream "
+                         "chunk-wise from the host feature store (0 = cfg "
+                         "default / off). Outputs are bitwise-identical to "
+                         "the in-memory path.")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)

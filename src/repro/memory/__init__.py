@@ -1,0 +1,33 @@
+"""Out-of-core memory subsystem: host-resident features + plan-driven prefetch.
+
+AMPLE's third pillar — "a prefetcher for data and instructions is implemented
+to optimize off-chip memory access" (§3.3) — lives here for the TPU repro:
+
+* ``feature_store``  — a chunked, host-resident :class:`FeatureStore` holding
+  node features off-device in two representations (f32 for the float gather
+  stream, int8 under the aggregation scale for the int8 stream), optionally
+  ``np.memmap``-backed so host RSS stays bounded too;
+* ``prefetcher``     — a :class:`ChunkPrefetcher` executing a scheduler
+  ``ChunkSchedule`` against a fixed-budget device chunk cache (reuse-distance
+  eviction, double-buffered chunk uploads overlapping the running tile), and
+  the streamed aggregation/transform executors that are bitwise-identical to
+  the in-memory engine paths.
+"""
+from repro.memory.feature_store import FeatureStore, default_chunk_rows
+from repro.memory.prefetcher import (
+    ChunkPrefetcher,
+    StreamStats,
+    StreamedFeatures,
+    aggregate_streamed,
+    scale_add_streamed,
+)
+
+__all__ = [
+    "FeatureStore",
+    "default_chunk_rows",
+    "ChunkPrefetcher",
+    "StreamStats",
+    "StreamedFeatures",
+    "aggregate_streamed",
+    "scale_add_streamed",
+]

@@ -1,0 +1,578 @@
+"""Plan-driven chunk prefetcher + streamed executors (out-of-core serving).
+
+``ChunkPrefetcher`` executes a ``core.scheduler.ChunkSchedule`` against a
+fixed-budget device chunk cache:
+
+* **budget** — the cache is ``num_slots`` shape-stable slots of
+  ``chunk_rows`` feature rows; ``num_slots = budget_bytes // chunk_bytes``
+  (min 1). A tile whose working set exceeds the cache is served in *waves*:
+  each wave pins at most ``num_slots`` chunks, gathers its lanes into the
+  tile's gather buffer by masked select, and hands the slots back — so any
+  budget down to a single chunk completes, it just streams more bytes
+  (thrashing is visible in telemetry, exactly the trade-off the
+  ``bench_outofcore`` sweep measures).
+* **reuse-distance eviction** — the schedule is known ahead of time, so
+  eviction is Belady-optimal: the resident chunk with the farthest next use
+  goes first.
+* **double buffering** — after a tile's step is issued (async dispatch),
+  chunks for the next ``prefetch_depth`` tiles are uploaded into free slots
+  so the copy overlaps the running tile's aggregation; the overlap fraction
+  (prefetched / total uploads) is reported in :class:`StreamStats`.
+
+Bitwise contract: the streamed executors reproduce the in-memory engine
+paths bit for bit. Gathered rows are exact copies of the dense rows (f32
+chunks are row slices; int8 chunks match ``quantization.quantize`` under the
+store's aggregation scale), tiles execute with the same per-tile op sequence
+as the ``aggregate_edge_tiles`` scan body, and the schedule's reordering
+permutes whole runs only, preserving every output row's scatter-add order
+(see ``scheduler.tile_runs``). The FTE stream exploits exactness instead:
+int8 matmuls accumulate in int32 (associativity-free), so chunk-blocked
+execution equals the monolithic matmul, while the small float-protected
+block is gathered and transformed in one piece.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduler as sched
+from repro.core.quantization import INT8_MAX, QuantParams
+from repro.core.transformation import transform_dense
+from repro.memory.feature_store import FeatureStore
+
+__all__ = [
+    "StreamStats",
+    "StreamedFeatures",
+    "ChunkPrefetcher",
+    "aggregate_streamed",
+    "transform_streamed",
+    "scale_add_streamed",
+]
+
+_INF = np.iinfo(np.int64).max
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Telemetry of one (or several merged) streamed executions.
+
+    ``accesses = chunk_hits + chunk_misses`` counts tile→chunk visits;
+    ``uploads = chunk_misses + prefetched`` counts host→device chunk copies
+    (a prefetched chunk's later visit is a hit, its copy overlapped compute).
+    """
+
+    bytes_streamed: int = 0  # feature bytes moved host->device
+    instr_bytes: int = 0  # per-tile plan arrays (the instruction stream)
+    chunk_hits: int = 0
+    chunk_misses: int = 0  # demand uploads (visit found chunk absent)
+    prefetched: int = 0  # uploads issued ahead of their first visit
+    evictions: int = 0
+    waves: int = 0
+    tiles: int = 0
+    fallbacks: int = 0  # dense materializations (budget violated, loud)
+    fallback_bytes: int = 0
+
+    @property
+    def accesses(self) -> int:
+        return self.chunk_hits + self.chunk_misses
+
+    @property
+    def uploads(self) -> int:
+        return self.chunk_misses + self.prefetched
+
+    @property
+    def hit_rate(self) -> float:
+        return self.chunk_hits / self.accesses if self.accesses else 0.0
+
+    @property
+    def prefetch_overlap(self) -> float:
+        """Fraction of chunk copies that overlapped compute (double buffer)."""
+        return self.prefetched / self.uploads if self.uploads else 0.0
+
+    def merge(self, other: "StreamStats") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+    def as_dict(self) -> Dict[str, float]:
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
+        d["hit_rate"] = self.hit_rate
+        d["prefetch_overlap"] = self.prefetch_overlap
+        return d
+
+
+class StreamedFeatures:
+    """Handle standing in for a dense feature matrix on the streamed path.
+
+    Carries the host store, the device feature budget and the telemetry the
+    serving layer reads back. The engine's ``aggregate``/``transform`` accept
+    it wherever they accept a dense array; arithmetic consumers use
+    :func:`scale_add_streamed`.
+    """
+
+    def __init__(
+        self,
+        store: FeatureStore,
+        budget_bytes: int,
+        *,
+        prefetch_depth: int = 1,
+        reorder: bool = True,
+    ):
+        self.store = store
+        self.budget_bytes = int(budget_bytes)
+        self.prefetch_depth = int(prefetch_depth)
+        self.reorder = bool(reorder)
+        self.stats = StreamStats()
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.store.shape
+
+    @property
+    def ndim(self) -> int:
+        return 2
+
+    @property
+    def nbytes(self) -> int:
+        return self.store.nbytes
+
+    def agg_qp(self) -> QuantParams:
+        """The aggregation-stream QuantParams — bitwise-equal to
+        ``compute_scale_zp(dense_x, symmetric=True)``."""
+        scale = jnp.asarray(self.store.agg_scale, jnp.float32)
+        return QuantParams(scale=scale, zero_point=jnp.zeros_like(scale))
+
+
+# --------------------------------------------------------------- device ops
+@partial(jax.jit, donate_argnums=(0,))
+def _upload_slot(buf: jnp.ndarray, chunk: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.dynamic_update_slice(buf, chunk[None], (slot, 0, 0))
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _gather_wave(
+    gathered: jnp.ndarray,
+    buf: jnp.ndarray,
+    slot_idx: jnp.ndarray,
+    off: jnp.ndarray,
+    mask: jnp.ndarray,
+) -> jnp.ndarray:
+    rows = buf[slot_idx, off]
+    return jnp.where(mask[:, None], rows, gathered)
+
+
+@partial(jax.jit, static_argnames=("segments_per_tile",), donate_argnums=(0,))
+def _tile_step_f32(
+    out: jnp.ndarray,
+    gathered: jnp.ndarray,
+    coeff: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    out_node: jnp.ndarray,
+    *,
+    segments_per_tile: int,
+) -> jnp.ndarray:
+    partial_sums = jax.ops.segment_sum(
+        gathered * coeff[:, None], seg_ids, num_segments=segments_per_tile
+    )
+    return out.at[out_node].add(partial_sums)
+
+
+@partial(jax.jit, static_argnames=("segments_per_tile",), donate_argnums=(0,))
+def _tile_step_i8(
+    out: jnp.ndarray,
+    gathered_q: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero_point: jnp.ndarray,
+    coeff: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    out_node: jnp.ndarray,
+    *,
+    segments_per_tile: int,
+) -> jnp.ndarray:
+    # On-chip dequant after the 1-byte gather — same elementwise chain as the
+    # in-memory path's whole-matrix dequantize followed by gather.
+    gathered = ((gathered_q.astype(jnp.float32) - zero_point) * scale).astype(
+        jnp.float32
+    )
+    partial_sums = jax.ops.segment_sum(
+        gathered * coeff[:, None], seg_ids, num_segments=segments_per_tile
+    )
+    return out.at[out_node].add(partial_sums)
+
+
+# ------------------------------------------------------------- chunk cache
+class ChunkPrefetcher:
+    """Fixed-budget device chunk cache executing one plan stream.
+
+    One instance serves one precision stream of one aggregation call; the
+    float and int8 streams run sequentially, so each gets the full budget.
+    ``stream`` selects the representation: ``"f32"`` gathers raw rows,
+    ``"i8"`` gathers 1-byte rows quantized under the store's agg scale.
+    """
+
+    def __init__(
+        self,
+        store: FeatureStore,
+        schedule: sched.ChunkSchedule,
+        *,
+        stream: str,
+        budget_bytes: int,
+        prefetch_depth: int = 1,
+        stats: Optional[StreamStats] = None,
+        quant_scale=None,
+    ):
+        if schedule.chunk_rows != store.chunk_rows:
+            raise ValueError(
+                f"schedule chunk_rows {schedule.chunk_rows} != store "
+                f"{store.chunk_rows}"
+            )
+        if stream not in ("f32", "i8"):
+            raise ValueError(f"unknown stream {stream!r}")
+        self.store = store
+        self.schedule = schedule
+        self.stream = stream
+        # The int8 stream must be quantized under the SAME scale it is later
+        # dequantized with. A warm engine's static slot calibration may carry
+        # an earlier request's scale; when it differs from this store's own,
+        # chunks are re-quantized host-side on upload (bitwise-equal to
+        # quantize(x, slot_qp) on the dense matrix) instead of using the
+        # store's precomputed int8 representation.
+        self.quant_scale = (
+            np.float32(store.agg_scale) if quant_scale is None else np.float32(quant_scale)
+        )
+        self.prefetch_depth = max(int(prefetch_depth), 0)
+        self.stats = stats if stats is not None else StreamStats()
+        self.chunk_bytes = (
+            store.chunk_bytes_f32 if stream == "f32" else store.chunk_bytes_i8
+        )
+        slots = max(int(budget_bytes) // self.chunk_bytes, 1)
+        self.num_slots = int(min(slots, max(schedule.num_chunks, 1)))
+        dtype = jnp.float32 if stream == "f32" else jnp.int8
+        self._buf = jnp.zeros(
+            (self.num_slots, store.chunk_rows, store.dim), dtype
+        )
+        self._slot_of: Dict[int, int] = {}
+        self._chunk_in: List[int] = [-1] * self.num_slots
+        self._free: List[int] = list(range(self.num_slots))
+        # Belady bookkeeping: per-chunk sorted visit positions + a cursor.
+        self._positions: Dict[int, np.ndarray] = {}
+        self._cursor: Dict[int, int] = {}
+        for pos, t in enumerate(schedule.order):
+            for c in schedule.tile_chunks[int(t)]:
+                self._positions.setdefault(int(c), []).append(pos)  # type: ignore[arg-type]
+        self._positions = {
+            c: np.asarray(p, np.int64) for c, p in self._positions.items()
+        }
+        self._cursor = {c: 0 for c in self._positions}
+
+    # ------------------------------------------------------------ plumbing
+    def _host_chunk(self, c: int) -> np.ndarray:
+        if self.stream == "f32":
+            return self.store.chunk_f32(c)
+        if self.quant_scale == self.store.agg_scale:
+            return self.store.chunk_i8(c)  # precomputed under the same scale
+        return FeatureStore._quantize_block(self.store.chunk_f32(c), self.quant_scale)
+
+    def _next_use(self, c: int) -> int:
+        p = self._positions.get(c)
+        if p is None:
+            return _INF
+        k = self._cursor[c]
+        return int(p[k]) if k < p.size else _INF
+
+    def _consume(self, c: int) -> None:
+        if c in self._cursor:
+            self._cursor[c] += 1
+
+    def _evict_slot(self, pinned: set, *, min_use: int = -1) -> Optional[int]:
+        """Free the resident chunk with the farthest next use (Belady).
+
+        ``min_use`` makes the eviction conditional: a victim is only taken
+        when its next use is strictly beyond it — the prefetch path passes
+        the incoming chunk's next use so prefetching never displaces hotter
+        data. Returns None when no admissible victim exists.
+        """
+        victim, victim_use = -1, min_use
+        for slot, c in enumerate(self._chunk_in):
+            if c < 0 or c in pinned:
+                continue
+            use = self._next_use(c)
+            if use > victim_use:
+                victim, victim_use = slot, use
+        if victim < 0:
+            return None
+        del self._slot_of[self._chunk_in[victim]]
+        self._chunk_in[victim] = -1
+        self.stats.evictions += 1
+        return victim
+
+    def _upload(self, c: int, slot: int, *, prefetch: bool) -> None:
+        self._buf = _upload_slot(
+            self._buf, jnp.asarray(self._host_chunk(c)), jnp.int32(slot)
+        )
+        self._slot_of[c] = slot
+        self._chunk_in[slot] = c
+        self.stats.bytes_streamed += self.chunk_bytes
+        if prefetch:
+            self.stats.prefetched += 1
+        else:
+            self.stats.chunk_misses += 1
+
+    def _prefetch_ahead(self, pos: int) -> None:
+        """Upload chunks the next ``prefetch_depth`` tiles need so the copy
+        overlaps the just-issued tile step (async dispatch) — into free slots
+        first, else by evicting a resident chunk whose next use is strictly
+        farther than the prefetched chunk's (the Belady comparison, so
+        prefetching never displaces hotter data)."""
+        if self.prefetch_depth <= 0:
+            return
+        order = self.schedule.order
+        for p in range(pos + 1, min(pos + 1 + self.prefetch_depth, order.size)):
+            for c in self.schedule.tile_chunks[int(order[p])]:
+                c = int(c)
+                if c in self._slot_of:
+                    continue
+                if self._free:
+                    slot = self._free.pop()
+                else:
+                    slot = self._evict_slot(set(), min_use=self._next_use(c))
+                    if slot is None:
+                        return
+                self._upload(c, slot, prefetch=True)
+
+    # ----------------------------------------------------------- execution
+    def aggregate(
+        self,
+        plan: sched.EdgeTilePlan,
+        *,
+        qp: Optional[QuantParams] = None,
+    ) -> jnp.ndarray:
+        """Stream one plan's tiles through the cache; returns f32[N, D].
+
+        Bitwise-identical to ``aggregate_edge_tiles`` on the dense matrix
+        (f32 stream) / on the dequantized matrix (i8 stream): same gathered
+        values, same per-tile op sequence, per-row scatter order preserved
+        by the run-respecting schedule.
+        """
+        if self.stream == "i8" and qp is None:
+            raise ValueError("int8 stream needs the aggregation QuantParams")
+        R = self.store.chunk_rows
+        S = plan.segments_per_tile
+        n = plan.num_nodes
+        out = jnp.zeros((n + 1, self.store.dim), jnp.float32)
+        lane_bytes = plan.gather_idx[0].nbytes + plan.coeff[0].nbytes + (
+            plan.seg_ids[0].nbytes + plan.out_node[0].nbytes
+        )
+        for pos, t in enumerate(self.schedule.order):
+            t = int(t)
+            gi = plan.gather_idx[t].astype(np.int64)
+            lane_chunk = gi // R
+            lane_off = jnp.asarray(gi % R, jnp.int32)
+            todo = [int(c) for c in self.schedule.tile_chunks[t]]
+            gathered = jnp.zeros(
+                (gi.size,) + (self.store.dim,),
+                jnp.float32 if self.stream == "f32" else jnp.int8,
+            )
+            self.stats.tiles += 1
+            while todo:
+                wave: List[int] = []
+                pinned: set = set()
+                rest: List[int] = []
+                for c in todo:
+                    if c in self._slot_of:
+                        wave.append(c)
+                        pinned.add(c)
+                        self.stats.chunk_hits += 1
+                    else:
+                        rest.append(c)
+                for c in list(rest):
+                    if len(pinned) >= self.num_slots:
+                        break
+                    if self._free:
+                        slot = self._free.pop()
+                    else:
+                        slot = self._evict_slot(pinned)
+                        if slot is None:
+                            break
+                    self._upload(c, slot, prefetch=False)
+                    wave.append(c)
+                    pinned.add(c)
+                    rest.remove(c)
+                for c in wave:
+                    self._consume(c)
+                slot_lut = np.zeros(self.schedule.num_chunks, np.int32)
+                in_wave = np.zeros(self.schedule.num_chunks, bool)
+                for c in wave:
+                    slot_lut[c] = self._slot_of[c]
+                    in_wave[c] = True
+                mask = in_wave[lane_chunk]
+                slot_idx = jnp.asarray(slot_lut[lane_chunk], jnp.int32)
+                gathered = _gather_wave(
+                    gathered, self._buf, slot_idx, lane_off, jnp.asarray(mask)
+                )
+                self.stats.waves += 1
+                todo = rest
+            coeff = jnp.asarray(plan.coeff[t])
+            seg_ids = jnp.asarray(plan.seg_ids[t])
+            out_node = jnp.asarray(plan.out_node[t])
+            self.stats.instr_bytes += lane_bytes
+            if self.stream == "f32":
+                out = _tile_step_f32(
+                    out, gathered, coeff, seg_ids, out_node, segments_per_tile=S
+                )
+            else:
+                out = _tile_step_i8(
+                    out, gathered, qp.scale, qp.zero_point, coeff, seg_ids,
+                    out_node, segments_per_tile=S,
+                )
+            self._prefetch_ahead(pos)
+        return out[:n]
+
+
+# -------------------------------------------------------- streamed executors
+def aggregate_streamed(
+    sf: StreamedFeatures,
+    plans: Mapping[str, sched.EdgeTilePlan],
+    schedules: Mapping[str, sched.ChunkSchedule],
+    *,
+    num_nodes: int,
+    mixed: bool,
+    qp: Optional[QuantParams] = None,
+) -> jnp.ndarray:
+    """Chunk-streamed mirror of the engine's aggregation dispatch.
+
+    ``mixed`` replays ``aggregate_mixed_precision``'s combine order exactly
+    (zeros + float stream + int8 stream); non-mixed returns the float stream
+    alone, matching the engine's direct ``aggregate_edge_tiles`` call.
+    """
+    for tag in plans:
+        if tag not in ("float", "int8"):
+            raise ValueError(f"unknown precision tag {tag!r}")
+
+    def run(tag: str, stream: str, qp_: Optional[QuantParams]) -> jnp.ndarray:
+        pf = ChunkPrefetcher(
+            sf.store,
+            schedules[tag],
+            stream=stream,
+            budget_bytes=sf.budget_bytes,
+            prefetch_depth=sf.prefetch_depth,
+            stats=sf.stats,
+            quant_scale=(
+                np.float32(np.asarray(qp_.scale)) if qp_ is not None else None
+            ),
+        )
+        return pf.aggregate(plans[tag], qp=qp_)
+
+    if not mixed:
+        return run("float", "f32", None)
+    out = jnp.zeros((num_nodes, sf.store.dim), jnp.float32)
+    if "float" in plans:
+        out = out + run("float", "f32", None)
+    if "int8" in plans:
+        out = out + run("int8", "i8", qp if qp is not None else sf.agg_qp())
+    return out
+
+
+def _host_fte_qp(amax: np.float32) -> QuantParams:
+    """Host mirror of ``compute_scale_zp(rows, symmetric=True)`` given the
+    exact row-set amax (max never rounds, the scalar ops are IEEE-exact)."""
+    scale = np.maximum(
+        np.float32(amax / np.float32(INT8_MAX)), np.float32(1e-8)
+    )
+    scale_j = jnp.asarray(scale, jnp.float32)
+    return QuantParams(scale=scale_j, zero_point=jnp.zeros_like(scale_j))
+
+
+def transform_streamed(
+    sf: StreamedFeatures,
+    node_group_ids: Mapping[str, np.ndarray],
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    activation: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+    *,
+    w_q: jnp.ndarray,
+    w_qp: QuantParams,
+    a_qp: Optional[QuantParams] = None,
+) -> jnp.ndarray:
+    """Mixed-precision FTE over stored features, bitwise-equal to
+    ``transform_mixed_precision`` on the dense matrix.
+
+    The float-protected block (a few % of nodes under Degree-Quant) is
+    host-gathered and transformed in one matmul — identical shape and values
+    to the in-memory group matmul. The int8 block streams chunk-blocked:
+    rows are quantized host-side under ``a_qp`` and move as 1-byte elements,
+    and the int8×int8→int32 matmul accumulates exactly, so per-chunk blocks
+    equal the monolithic matmul row for row.
+    """
+    store = sf.store
+    out = jnp.zeros((store.num_rows, w.shape[1]), jnp.float32)
+    for tag, ids in node_group_ids.items():
+        if ids.size == 0:
+            continue
+        ids = np.asarray(ids, np.int64)
+        if tag == "float":
+            rows = jnp.asarray(store.gather_rows_f32(ids))
+            sf.stats.bytes_streamed += int(rows.size) * 4
+            y = transform_dense(rows, w, b, activation)
+            out = out.at[jnp.asarray(ids, jnp.int32)].set(y)
+        elif tag == "int8":
+            if a_qp is None:
+                a_qp = _host_fte_qp(store.amax_rows(ids))
+            scale_np = np.float32(np.asarray(a_qp.scale))
+            # Same expression as transform_int8's dequant coefficient.
+            deq = a_qp.scale * w_qp.scale.reshape(1, -1)
+            chunk_of = np.unique(ids // store.chunk_rows)
+            for c in chunk_of:
+                _, local = store.chunk_row_selection(int(c), ids)
+                if local.size == 0:
+                    continue
+                lo, hi = store.chunk_range(int(c))
+                blk = store.chunk_f32(int(c))[: hi - lo]
+                # Host quantize under the FTE scale (shared helper, bitwise
+                # == quantization.quantize with zp=0); whole-chunk rows keep
+                # the device shapes stable, non-group rows are computed and
+                # discarded (matmul rows independent).
+                hq = jnp.asarray(FeatureStore._quantize_block(blk, scale_np))
+                sf.stats.bytes_streamed += int(hq.size)
+                acc = jnp.dot(
+                    hq.astype(jnp.int32),
+                    w_q.astype(jnp.int32),
+                    preferred_element_type=jnp.int32,
+                )
+                y = acc.astype(jnp.float32) * deq
+                if b is not None:
+                    y = y + b
+                if activation is not None:
+                    y = activation(y)
+                out = out.at[jnp.asarray(lo + local, jnp.int32)].set(
+                    y[jnp.asarray(local, jnp.int32)]
+                )
+        else:
+            raise ValueError(f"unknown precision tag {tag!r}")
+    return out
+
+
+def scale_add_streamed(
+    sf: StreamedFeatures, alpha, m: jnp.ndarray
+) -> jnp.ndarray:
+    """Chunk-streamed ``alpha * x + m`` (GIN's aggregation-side residual).
+
+    Elementwise per row, so chunk blocks concatenate to the exact dense
+    result; streams the f32 representation once.
+    """
+    store = sf.store
+    if m.shape[0] != store.num_rows:
+        raise ValueError(
+            f"residual rows {m.shape[0]} != store rows {store.num_rows}"
+        )
+    parts = []
+    for c in range(store.num_chunks):
+        lo, hi = store.chunk_range(c)
+        blk = jnp.asarray(store.chunk_f32(c)[: hi - lo])
+        sf.stats.bytes_streamed += int(blk.size) * 4
+        parts.append(alpha * blk + m[lo:hi])
+    return jnp.concatenate(parts, axis=0)

@@ -155,7 +155,11 @@ def gnn_init(cfg: ModelConfig, key) -> Dict:
 
 
 def gnn_apply(cfg: ModelConfig, params: Dict, engine: AmpleEngine, x) -> jnp.ndarray:
-    return get_arch(cfg.gnn_arch).apply(cfg, params, engine, jnp.asarray(x))
+    from repro.memory.prefetcher import StreamedFeatures
+
+    if not isinstance(x, StreamedFeatures):  # streamed handles pass through
+        x = jnp.asarray(x)
+    return get_arch(cfg.gnn_arch).apply(cfg, params, engine, x)
 
 
 def gnn_reference(cfg: ModelConfig, params: Dict, g: Graph, x) -> jnp.ndarray:
@@ -170,15 +174,21 @@ def gnn_forward(params: Dict, cfg: ModelConfig, batch: Dict) -> Tuple[jnp.ndarra
 
     ``batch`` carries ``graph`` (a CSR Graph) and ``features`` f32[N, D];
     callers holding a compiled engine (the serving path) pass it as
-    ``batch["engine"]`` to skip plan compilation. Returns ``(logits, aux)``
-    with logits f32[N, num_classes], matching the LM tuple contract so
-    ``loss_fn`` works unchanged for node classification.
+    ``batch["engine"]`` to skip plan compilation. ``features`` may also be a
+    ``memory.StreamedFeatures`` handle — the out-of-core path: the feature
+    matrix stays host-resident and the engine streams it chunk-wise under
+    the handle's budget. Returns ``(logits, aux)`` with logits
+    f32[N, num_classes], matching the LM tuple contract so ``loss_fn``
+    works unchanged for node classification.
     """
-    x = jnp.asarray(batch["features"])
+    from repro.memory.prefetcher import StreamedFeatures
+
+    feats = batch["features"]
+    x = feats if isinstance(feats, StreamedFeatures) else jnp.asarray(feats)
     engine = batch.get("engine")
     n = engine.graph.num_nodes if engine is not None else batch["graph"].num_nodes
     want = cfg.gnn_layer_dims[0]
-    if x.ndim != 2 or x.shape != (n, want):
+    if x.ndim != 2 or tuple(x.shape) != (n, want):
         raise ValueError(
             f"features must be [{n}, {want}] for {cfg.name} on this graph "
             f"(num_nodes={n}, cfg.d_model={want}), got {tuple(x.shape)}"

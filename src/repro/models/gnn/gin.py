@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.message_passing import AmpleEngine
 from repro.graphs.csr import Graph
+from repro.memory.prefetcher import StreamedFeatures, scale_add_streamed
 from repro.models.gnn import api
 from repro.models.gnn.layers import mlp_init
 
@@ -54,7 +55,10 @@ def apply(cfg: ModelConfig, params: Dict, engine: AmpleEngine, x: jnp.ndarray) -
     n = len(params["layers"])
     for i, mlp in enumerate(params["layers"]):
         m = engine.aggregate(x, mode=mode)
-        h = (1.0 + params["eps"]) * x + m  # aggregation-side residual
+        if isinstance(x, StreamedFeatures):  # out-of-core first layer
+            h = scale_add_streamed(x, 1.0 + params["eps"], m)
+        else:
+            h = (1.0 + params["eps"]) * x + m  # aggregation-side residual
         x = _mlp_through_engine(engine, mlp, h)
         if i < n - 1:
             x = jax.nn.relu(x)

@@ -75,11 +75,24 @@ class GNNResponse:
     # amortized per-request figure)
     num_shards: int = 1  # shards the plan executed over (1 = unsharded path)
     batch_size: int = 1  # members in the union device call that produced this
+    # Out-of-core telemetry (all zero on the in-memory path). Like run_ms,
+    # these describe the WHOLE device call: every member of one streamed
+    # union batch reports the same bytes_streamed — read
+    # bytes_streamed_per_member for an amortized per-request figure.
+    streamed: bool = False  # features stayed host-resident, chunk-streamed
+    bytes_streamed: int = 0  # feature bytes moved host->device by the call
+    chunk_hit_rate: float = 0.0  # chunk-cache hits / accesses
+    prefetch_overlap: float = 0.0  # uploads overlapped with compute / uploads
 
     @property
     def run_ms_per_member(self) -> float:
         """Amortized device time per batch member (= run_ms when served solo)."""
         return self.run_ms / max(self.batch_size, 1)
+
+    @property
+    def bytes_streamed_per_member(self) -> float:
+        """Amortized feature traffic per batch member (= bytes_streamed solo)."""
+        return self.bytes_streamed / max(self.batch_size, 1)
 
 
 class GNNServeEngine:
@@ -106,6 +119,15 @@ class GNNServeEngine:
         Defaults come from ``cfg.gnn_union_node_bucket`` /
         ``cfg.gnn_union_edge_bucket``; ignored on the sharded path, whose
         unions are planned exactly.
+    feature_budget_bytes: >0 enables **out-of-core serving**: a request whose
+        feature matrix exceeds the budget keeps features host-resident in a
+        chunked ``memory.FeatureStore`` and the engine streams them through
+        a budget-bound device chunk cache (reuse-distance eviction, double-
+        buffered prefetch) — outputs are bitwise-identical to the in-memory
+        path. Requests that fit take the existing path unchanged. Default
+        ``cfg.gnn_feature_budget_bytes`` (0 = off).
+    feature_chunk_rows: rows per feature chunk (0 derives a size from the
+        budget). Default ``cfg.gnn_feature_chunk_rows``.
     """
 
     def __init__(
@@ -120,6 +142,8 @@ class GNNServeEngine:
         mesh=None,
         union_node_bucket: Optional[int] = None,
         union_edge_bucket: Optional[int] = None,
+        feature_budget_bytes: Optional[int] = None,
+        feature_chunk_rows: Optional[int] = None,
         key=None,
     ):
         if cfg.family != "gnn":
@@ -141,6 +165,30 @@ class GNNServeEngine:
         self.union_edge_bucket = (
             cfg.gnn_union_edge_bucket if union_edge_bucket is None else union_edge_bucket
         )
+        self.feature_budget_bytes = (
+            cfg.gnn_feature_budget_bytes
+            if feature_budget_bytes is None
+            else feature_budget_bytes
+        )
+        self.feature_chunk_rows = (
+            cfg.gnn_feature_chunk_rows
+            if feature_chunk_rows is None
+            else feature_chunk_rows
+        )
+        if self.feature_budget_bytes > 0 and (
+            self.sharded or self.engine_cfg.use_kernel
+        ):
+            # Better a loud no-op than a user believing the cap is active
+            # and meeting an OOM on a genuinely large graph.
+            import warnings
+
+            reason = "sharded engines" if self.sharded else "use_kernel engines"
+            warnings.warn(
+                f"feature_budget_bytes is ignored on {reason}: the streamed "
+                "executors serve the plain single-device jnp path only; "
+                "requests will run fully in-memory",
+                stacklevel=2,
+            )
         # fingerprint -> (prepared graph, plan, engine); OrderedDict as LRU.
         # The engine rides along so its weight-quant cache survives across
         # requests (params are fixed for this serve engine's lifetime).
@@ -160,6 +208,12 @@ class GNNServeEngine:
         self._member_plans: "OrderedDict[str, Tuple[Graph, ExecutionPlan]]" = OrderedDict()
         # Size classes already served (device shapes warm); statistics only.
         self._classes_seen: "OrderedDict[str, None]" = OrderedDict()
+        # FeatureStore LRU for the out-of-core path, keyed on (feature array
+        # identity, row count, chunk rows) with a strong ref held — id()
+        # alone is unsound once the original is collected, same reasoning as
+        # the weight-quant cache.
+        self._stores: "OrderedDict[tuple, Tuple[np.ndarray, object]]" = OrderedDict()
+        self._last_stream = None  # StreamStats of the most recent _run
         self.stats: Dict[str, int] = {
             "requests": 0,
             "batches": 0,
@@ -173,6 +227,12 @@ class GNNServeEngine:
             "member_misses": 0,
             "class_hits": 0,
             "class_misses": 0,
+            "streamed_requests": 0,
+            "bytes_streamed": 0,
+            "chunk_hits": 0,
+            "chunk_misses": 0,
+            "prefetched_uploads": 0,
+            "stream_fallbacks": 0,
         }
 
     @property
@@ -502,15 +562,121 @@ class GNNServeEngine:
             axis=0,
         )
 
-    def _run(self, arch: str, prepared: Graph, engine: AmpleEngine, features) -> Tuple[np.ndarray, float]:
-        """Execution step: one padded device call over an assembled plan."""
+    # ------------------------------------------------- out-of-core streaming
+    def _stream_eligible(self, engine: AmpleEngine, features: np.ndarray) -> bool:
+        """Stream iff a budget is set, the matrix exceeds it, and the plan
+        executes on the plain single-device engine (the sharded executor
+        gathers per-shard row sets and is served in-memory). Kernel-routed
+        engines (``use_kernel``) are excluded: the streamed executors are
+        the jnp oracle, and Pallas vs oracle can differ by an int8 rounding
+        step — streaming there would break the bitwise guarantee."""
+        return (
+            self.feature_budget_bytes > 0
+            and type(engine) is AmpleEngine
+            and not self.engine_cfg.use_kernel
+            and features.nbytes > self.feature_budget_bytes
+        )
+
+    def _feature_stream(
+        self,
+        features: np.ndarray,
+        *,
+        cache_store: bool = True,
+        store_key=None,  # caller-held object of any array-like type
+    ):
+        """Wrap ``features`` in a StreamedFeatures handle (store LRU-cached).
+
+        Repeat traffic holding the same feature array skips the store build
+        (chunking + int8 quantization) exactly like repeat structures skip
+        the planner. The store is tag-independent — it holds every row in
+        both representations — so one store serves any plan over the matrix.
+
+        ``store_key`` is the caller-held array the cache identity hangs on
+        when ``features`` itself is derived per call — the padded-union path
+        pads a fresh copy each request, so keying on the *original* matrix
+        (plus the padded row count) is what lets warm padded requests hit.
+        ``cache_store=False`` builds an ephemeral store instead: the batch
+        path concatenates a fresh union matrix per call, so id-keyed entries
+        could never hit again and would only pin dead matrices in the LRU.
+        """
+        from repro.memory.feature_store import FeatureStore, default_chunk_rows
+        from repro.memory.prefetcher import StreamedFeatures
+
+        rows = self.feature_chunk_rows or default_chunk_rows(
+            features.shape[0], features.shape[1], self.feature_budget_bytes
+        )
+        if not cache_store:
+            store = FeatureStore.from_array(features, chunk_rows=rows)
+            return StreamedFeatures(store, self.feature_budget_bytes)
+        key_arr = store_key if store_key is not None else features
+        key = (id(key_arr), features.shape[0], rows)
+        entry = self._stores.get(key)
+        if entry is None or entry[0] is not key_arr:
+            store = FeatureStore.from_array(features, chunk_rows=rows)
+            self._stores[key] = (key_arr, store)
+            while len(self._stores) > 4:
+                self._stores.popitem(last=False)
+        else:
+            self._stores.move_to_end(key)
+        store = self._stores[key][1]
+        return StreamedFeatures(store, self.feature_budget_bytes)
+
+    def _run(
+        self,
+        arch: str,
+        prepared: Graph,
+        engine: AmpleEngine,
+        features,
+        *,
+        cache_store: bool = True,
+        store_key=None,
+    ) -> Tuple[np.ndarray, float]:
+        """Execution step: one padded device call over an assembled plan.
+
+        When the feature matrix exceeds ``feature_budget_bytes`` (and the
+        plan runs on the single-device engine), features stay host-resident
+        and the engine streams them chunk-wise — same outputs, bit for bit;
+        telemetry lands in ``stats`` and on the response. ``cache_store``
+        is False on the batch path (per-call union matrices never repeat);
+        ``store_key`` carries the caller-held array identity when
+        ``features`` is a per-call padded copy.
+        """
         cfg = dataclasses.replace(self.cfg, gnn_arch=arch)
+        self._last_stream = None
+        batch_features = features
+        if self._stream_eligible(engine, features):
+            sf = self._feature_stream(
+                features, cache_store=cache_store, store_key=store_key
+            )
+            batch_features = sf
+            self._last_stream = sf.stats
         t0 = time.perf_counter()
         y, _ = gnn_api.gnn_forward(
-            self.params, cfg, {"graph": prepared, "features": features, "engine": engine}
+            self.params, cfg,
+            {"graph": prepared, "features": batch_features, "engine": engine},
         )
         y = np.asarray(jax.block_until_ready(y))
-        return y, (time.perf_counter() - t0) * 1e3
+        run_ms = (time.perf_counter() - t0) * 1e3
+        if self._last_stream is not None:
+            s = self._last_stream
+            self.stats["bytes_streamed"] += s.bytes_streamed
+            self.stats["chunk_hits"] += s.chunk_hits
+            self.stats["chunk_misses"] += s.chunk_misses
+            self.stats["prefetched_uploads"] += s.prefetched
+            self.stats["stream_fallbacks"] += s.fallbacks
+        return y, run_ms
+
+    def _stream_fields(self) -> Dict[str, object]:
+        """Response fields describing the most recent ``_run``'s streaming."""
+        s = self._last_stream
+        if s is None:
+            return {}
+        return {
+            "streamed": True,
+            "bytes_streamed": s.bytes_streamed,
+            "chunk_hit_rate": s.hit_rate,
+            "prefetch_overlap": s.prefetch_overlap,
+        }
 
     def infer(self, graph: Graph, features, *, arch: str = "") -> GNNResponse:
         """Serve one request; plans come from the LRU cache when warm.
@@ -520,6 +686,10 @@ class GNNServeEngine:
         this structure.
         """
         arch = self._arch(arch)
+        # The store-cache identity is the CALLER's object: validation may
+        # convert (float64/jnp inputs), and padding copies — keying on either
+        # derived array would rebuild the store on every warm request.
+        original = features
         features = self._validate_request(graph, features)
         if self.padded_unions:
             prepared, plan, engine, hit, plan_ms = self._plan_for_padded([graph], arch)
@@ -528,8 +698,10 @@ class GNNServeEngine:
             prepared, plan, engine, hit, plan_ms = self._plan_for_sharded(graph, arch)
         else:
             prepared, plan, engine, hit, plan_ms = self._plan_for(graph, arch)
-        y, run_ms = self._run(arch, prepared, engine, features)
+        y, run_ms = self._run(arch, prepared, engine, features, store_key=original)
         self.stats["requests"] += 1
+        if self._last_stream is not None:
+            self.stats["streamed_requests"] += 1
         return GNNResponse(
             outputs=y[: graph.num_nodes],
             cache_hit=hit,
@@ -537,6 +709,7 @@ class GNNServeEngine:
             plan_ms=plan_ms,
             run_ms=run_ms,
             num_shards=getattr(plan, "num_shards", 1),
+            **self._stream_fields(),
         )
 
     def infer_batch(self, requests: Sequence[GNNRequest]) -> List[GNNResponse]:
@@ -567,13 +740,18 @@ class GNNServeEngine:
         members = [r.graph for r in requests]
         prepared, plan, engine, hit, plan_ms = self._plan_for_batch(members, arch)
         features = self._pad_features(np.concatenate(feats, axis=0), prepared.num_nodes)
-        y, run_ms = self._run(arch, prepared, engine, features)
+        y, run_ms = self._run(arch, prepared, engine, features, cache_store=False)
         # Counted only on success, so a failed-and-requeued continuous-batching
         # window doesn't double-count when it retries.
         self.stats["requests"] += len(requests)
+        if self._last_stream is not None:
+            # Every member of the streamed union call counts, so
+            # streamed_requests / requests is the true streamed fraction.
+            self.stats["streamed_requests"] += len(requests)
         self.stats["batches"] += 1
         out: List[GNNResponse] = []
         start = 0
+        stream_fields = self._stream_fields()
         for r in requests:
             stop = start + r.graph.num_nodes
             out.append(
@@ -585,6 +763,7 @@ class GNNServeEngine:
                     run_ms=run_ms,
                     num_shards=getattr(plan, "num_shards", 1),
                     batch_size=len(requests),
+                    **stream_fields,
                 )
             )
             start = stop
@@ -646,7 +825,24 @@ class GNNServeEngine:
 
     # ------------------------------------------------------------- metrics
     def cache_info(self) -> Dict[str, int]:
-        return {"size": len(self._cache), "capacity": self.plan_cache_size, **self.stats}
+        """Plan-cache counters plus derived streaming rates.
+
+        ``chunk_hit_rate`` / ``prefetch_overlap`` aggregate over every
+        streamed request this engine served (0.0 when nothing streamed).
+        """
+        accesses = self.stats["chunk_hits"] + self.stats["chunk_misses"]
+        uploads = self.stats["chunk_misses"] + self.stats["prefetched_uploads"]
+        return {
+            "size": len(self._cache),
+            "capacity": self.plan_cache_size,
+            **self.stats,
+            "chunk_hit_rate": (
+                self.stats["chunk_hits"] / accesses if accesses else 0.0
+            ),
+            "prefetch_overlap": (
+                self.stats["prefetched_uploads"] / uploads if uploads else 0.0
+            ),
+        }
 
     def shard_report(self) -> Optional[Dict[str, object]]:
         """Shard economics (edge balance, halo volume) of the most recently

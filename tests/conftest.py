@@ -5,10 +5,20 @@ single real CPU device; only launch/dryrun.py fakes 512 devices.
 stubs in ``_hypothesis_compat`` instead of dying at collection."""
 from __future__ import annotations
 
+import os
+
 import numpy as np
 import pytest
 
 from _hypothesis_compat import HAVE_HYPOTHESIS
+
+# Large-graph tests regenerate Table-4 lognormal graphs per process; cache
+# the structures on disk (repo-local, gitignored) so repeat runs skip the
+# dominant setup cost. Explicit REPRO_DATASET_CACHE settings win.
+os.environ.setdefault(
+    "REPRO_DATASET_CACHE",
+    os.path.join(os.path.dirname(os.path.dirname(__file__)), ".dataset-cache"),
+)
 
 if HAVE_HYPOTHESIS:
     from hypothesis import HealthCheck, settings
