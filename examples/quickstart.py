@@ -120,6 +120,22 @@ def main():
           f"{r.bytes_streamed >> 10}KB moved, chunk hit rate "
           f"{r.chunk_hit_rate:.2f}, bitwise == in-memory: {exact}")
 
+    # 8. Runtime edge coefficients: GAT through the same serving stack. The
+    #    attention coefficients are computed from node features per layer per
+    #    request and scattered through the plan's edge_ids indirection — the
+    #    plan cache stays structure-keyed, so warm GAT traffic has exactly
+    #    GCN's hit economics (plan_ms == 0, no planner after the cold call).
+    gat_cfg = dataclasses.replace(get_config("ample-gat", reduced=True),
+                                  d_model=cfg.d_model)
+    gat = GNNServeEngine(gat_cfg, key=jax.random.PRNGKey(0))
+    g_cold = gat.infer(g, g.features)
+    g_warm = gat.infer(g, g.features)
+    print(f"gat ({gat_cfg.gnn_heads} heads, runtime coeffs): cold plan "
+          f"{g_cold.plan_ms:.1f} ms, warm plan {g_warm.plan_ms:.1f} ms "
+          f"(cache_hit={g_warm.cache_hit}, planner_calls="
+          f"{gat.stats['planner_calls']}, bitwise warm repeat: "
+          f"{bool((g_cold.outputs == g_warm.outputs).all())})")
+
 
 if __name__ == "__main__":
     main()

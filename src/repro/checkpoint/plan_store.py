@@ -34,7 +34,7 @@ from repro.graphs.partition import Partition, ShardSubgraph
 
 __all__ = ["save_plan", "load_plan", "PlanRecord"]
 
-_PLAN_ARRAYS = ("gather_idx", "coeff", "seg_ids", "out_node", "node_ids")
+_PLAN_ARRAYS = ("gather_idx", "coeff", "seg_ids", "out_node", "node_ids", "edge_ids")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,8 +108,20 @@ def _unpack_plan(
         mode_plans[mode] = {}
         for tag, meta in tag_meta.items():
             base = f"{prefix}p/{mode}/{tag}/"
+            arrays = {
+                name: np.asarray(z[base + name])
+                for name in _PLAN_ARRAYS
+                if base + name in z
+            }
+            if "edge_ids" not in arrays:
+                # Files written before the runtime-coefficient indirection:
+                # structurally valid, but opted out of runtime coeffs
+                # (every lane reads the -1 padding slot).
+                arrays["edge_ids"] = np.full(
+                    arrays["gather_idx"].shape, -1, np.int32
+                )
             mode_plans[mode][tag] = EdgeTilePlan(
-                **{name: np.asarray(z[base + name]) for name in _PLAN_ARRAYS},
+                **arrays,
                 num_nodes=int(meta["num_nodes"]),
                 edges_per_tile=int(meta["edges_per_tile"]),
                 segments_per_tile=int(meta["segments_per_tile"]),

@@ -1,16 +1,23 @@
-"""The paper's own workload: GCN/GIN/GraphSAGE inference over Table-4 graphs.
+"""The paper's workload plus the attention extension: GCN/GIN/GraphSAGE/GAT
+inference over Table-4 graphs.
 
-One registered config per Table-3 model, all family="gnn" and dispatched
-through the unified model API (models/api.py -> models/gnn/api.py). d_model
-carries the feature width, d_ff the hidden width and vocab_size the class
-count (see launch/dryrun.py for the GNN input specs); ``gnn_arch`` selects
-the registry entry, ``gnn_precision`` the Degree-Quant policy. The FULL
-configs are Yelp-scale (717k nodes, 300 features, 100 classes); the REDUCED
-ones smoke-test on CPU.
+One registered config per Table-3 model — plus ``ample-gat``, the runtime-
+coefficient arch the event-driven pipeline unlocks beyond the paper — all
+family="gnn" and dispatched through the unified model API (models/api.py ->
+models/gnn/api.py). d_model carries the feature width, d_ff the hidden width
+and vocab_size the class count (see launch/dryrun.py for the GNN input
+specs); ``gnn_arch`` selects the registry entry, ``gnn_precision`` the
+Degree-Quant policy, ``gnn_heads`` the GAT attention heads (hidden widths
+must divide by it). The FULL configs are Yelp-scale (717k nodes, 300
+features, 100 classes); the REDUCED ones smoke-test on CPU.
 """
 import functools
 
 from repro.configs.base import ModelConfig, register
+
+# GAT concatenates head outputs on hidden layers, so d_ff % heads == 0.
+_HEADS = {"gat": 4}
+_HEADS_REDUCED = {"gat": 2}
 
 
 def _full(arch: str) -> ModelConfig:
@@ -19,6 +26,7 @@ def _full(arch: str) -> ModelConfig:
         num_layers=2, d_model=300, num_heads=1, num_kv_heads=1,
         d_ff=256, vocab_size=100,  # yelp: 300 features, 100 classes
         dtype="float32",
+        gnn_heads=_HEADS.get(arch, 1),
         # Continuous batching at production scale: admit up to 8 graphs per
         # micro-batch and pad the union to coarse size classes so the plan
         # and jit caches stay warm under varying request mixes.
@@ -33,6 +41,7 @@ def _reduced(arch: str) -> ModelConfig:
         name=f"ample-{arch}", family="gnn", gnn_arch=arch, reduced=True,
         num_layers=2, d_model=32, num_heads=1, num_kv_heads=1,
         d_ff=16, vocab_size=7, dtype="float32",
+        gnn_heads=_HEADS_REDUCED.get(arch, 1),
         gnn_edges_per_tile=64,
         gnn_batch_window=4,
         # buckets stay 0 here: smoke tests opt into padded size classes
@@ -40,7 +49,7 @@ def _reduced(arch: str) -> ModelConfig:
     )
 
 
-for _arch in ("gcn", "gin", "sage"):
+for _arch in ("gcn", "gin", "sage", "gat"):
     register(
         f"ample-{_arch}",
         functools.partial(_full, _arch),

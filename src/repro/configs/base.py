@@ -76,16 +76,21 @@ class ModelConfig:
     encoder_layers: int = 0  # >0 => encoder-decoder (seamless)
 
     # --- GNN (family="gnn"): drives models/gnn/api.py ---
-    gnn_arch: str = "gcn"  # gcn | gin | sage (registry key)
+    gnn_arch: str = "gcn"  # gcn | gin | sage | gat (registry key)
     gnn_hidden: Tuple[int, ...] = ()  # explicit hidden widths; () -> (d_ff,)*(L-1)
     gnn_agg: str = ""  # aggregation coefficient mode override ("" = arch default)
     gnn_precision: str = "mixed"  # mixed (Degree-Quant int8/float) | float
     gnn_edges_per_tile: int = 256  # event-driven tile width (AGE lanes)
+    gnn_heads: int = 1  # attention heads (gat); hidden dims must divide by it
     gnn_num_shards: int = 1  # >1: partition-aware execution (edge-balanced shards)
     # Continuous-batching serve knobs (serve/async_gnn.py + GNNServeEngine):
     gnn_batch_window: int = 8  # max requests admitted per micro-batch union
     gnn_union_node_bucket: int = 0  # pad union batches to node size classes (0=exact)
     gnn_union_edge_bucket: int = 0  # pad union tile stacks to edge size classes
+    # Latency-aware window close: a partially filled admission window is held
+    # open until the oldest queued request has waited this long, then admits
+    # whatever arrived (0 = historical behaviour: admit immediately).
+    gnn_window_timeout_ms: float = 0.0
     # Out-of-core serving (memory/feature_store.py + memory/prefetcher.py):
     # requests whose feature matrix exceeds the budget keep features host-
     # resident and stream them chunk-wise (bitwise-identical outputs);

@@ -7,7 +7,9 @@ from repro.core.scheduler import (
     partition_fingerprint, shard_plan_fingerprint,
 )
 from repro.core.degree_quant import DegreeQuantConfig, inference_precision_tags, sample_protection_mask
+from repro.core.aggregation import tile_edge_coeff
 from repro.core.message_passing import (
     AmpleEngine, EngineConfig, ExecutionPlan, ShardPlan, ShardedExecutionPlan,
-    aggregation_coefficients, compile_plans, compile_shard_plan, compile_sharded_plans,
+    aggregation_coefficients, assemble_union_plan, compile_plans,
+    compile_shard_plan, compile_sharded_plans,
 )

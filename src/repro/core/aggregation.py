@@ -33,30 +33,68 @@ from repro.core.quantization import QuantParams, compute_scale_zp, dequantize, q
 __all__ = [
     "DeviceTilePlan",
     "to_device_plan",
+    "tile_edge_coeff",
     "aggregate_edge_tiles",
     "aggregate_bucket_plan",
     "aggregate_padded_plan",
     "aggregate_mixed_precision",
+    "segment_max_edge_tiles",
+    "edge_segment_sum_tiles",
     "dense_reference",
 ]
 
 
 class DeviceTilePlan(NamedTuple):
-    """jnp mirror of scheduler.EdgeTilePlan (leaves scanned over axis 0)."""
+    """jnp mirror of scheduler.EdgeTilePlan (leaves scanned over axis 0).
+
+    ``edge_ids`` is None when the plan was uploaded without the runtime-
+    coefficient indirection (static-coeff modes never read it, and the array
+    is as large as ``gather_idx`` — engines upload it on first use instead).
+    """
 
     gather_idx: jnp.ndarray  # int32[T, E]
     coeff: jnp.ndarray  # f32[T, E]
     seg_ids: jnp.ndarray  # int32[T, E]
     out_node: jnp.ndarray  # int32[T, S]
+    edge_ids: Optional[jnp.ndarray]  # int32[T, E]; -1 on padding lanes
 
 
-def to_device_plan(plan: sched.EdgeTilePlan) -> DeviceTilePlan:
+def to_device_plan(
+    plan: sched.EdgeTilePlan, *, with_edge_ids: bool = True
+) -> DeviceTilePlan:
     return DeviceTilePlan(
         gather_idx=jnp.asarray(plan.gather_idx, jnp.int32),
         coeff=jnp.asarray(plan.coeff, jnp.float32),
         seg_ids=jnp.asarray(plan.seg_ids, jnp.int32),
         out_node=jnp.asarray(plan.out_node, jnp.int32),
+        edge_ids=(
+            jnp.asarray(plan.edge_ids, jnp.int32) if with_edge_ids else None
+        ),
     )
+
+
+def tile_edge_coeff(
+    dplan: DeviceTilePlan, edge_coeff: jnp.ndarray, *, fill: float = 0.0
+) -> jnp.ndarray:
+    """Scatter a per-edge runtime vector into tile layout: f32/…[T, E].
+
+    ``edge_coeff`` is indexed by graph edge position (the space
+    ``EdgeTilePlan.edge_ids`` maps lanes into); padding lanes (edge id -1)
+    read ``fill``. This is the runtime half of the coefficient indirection:
+    the tile arrays stay structure-keyed while the values change per request.
+    """
+    if dplan.edge_ids is None:
+        raise ValueError(
+            "device plan was uploaded without edge_ids; rebuild it with "
+            "to_device_plan(plan, with_edge_ids=True) to use runtime "
+            "coefficients"
+        )
+    e = edge_coeff.shape[0]
+    padded = jnp.concatenate(
+        [edge_coeff, jnp.full((1,), fill, edge_coeff.dtype)]
+    )
+    idx = jnp.where(dplan.edge_ids < 0, e, dplan.edge_ids)
+    return padded[idx]
 
 
 @partial(jax.jit, static_argnames=("num_nodes", "segments_per_tile", "use_kernel"))
@@ -67,20 +105,31 @@ def aggregate_edge_tiles(
     num_nodes: int,
     segments_per_tile: int,
     use_kernel: bool = False,
+    edge_coeff: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Event-driven aggregation: scan tiles, segment-reduce, scatter-add.
 
     ``use_kernel`` routes the per-tile reduction through the Pallas AGE kernel
     (kernels/segment_agg); the default path is pure jnp and serves as its
     always-on oracle.
+
+    ``edge_coeff`` supplies a runtime per-edge coefficient vector (f32[E] in
+    graph edge space); it is scattered into tile layout through the plan's
+    ``edge_ids`` and **multiplied** with the static coeff. Plans compiled in
+    ``"runtime"`` mode carry static coeff 1 on every real lane, so the
+    runtime vector takes effect verbatim there (``1.0 * c == c`` bitwise);
+    padding lanes are 0 in both factors.
     """
+    coeff = dplan.coeff
+    if edge_coeff is not None:
+        coeff = coeff * tile_edge_coeff(dplan, edge_coeff)
     if use_kernel:
         from repro.kernels.segment_agg import ops as seg_ops
 
         return seg_ops.aggregate_tiles(
             x,
             dplan.gather_idx,
-            dplan.coeff,
+            coeff,
             dplan.seg_ids,
             dplan.out_node,
             num_nodes=num_nodes,
@@ -99,7 +148,9 @@ def aggregate_edge_tiles(
         out = out.at[out_node].add(partial_sums)
         return out, None
 
-    out, _ = jax.lax.scan(body, out, dplan)
+    out, _ = jax.lax.scan(
+        body, out, (dplan.gather_idx, coeff, dplan.seg_ids, dplan.out_node)
+    )
     return out[:num_nodes]
 
 
@@ -158,6 +209,67 @@ def aggregate_padded_plan(x: jnp.ndarray, plan: sched.PaddedPlan) -> jnp.ndarray
     return out
 
 
+@partial(jax.jit, static_argnames=("num_nodes", "segments_per_tile"))
+def segment_max_edge_tiles(
+    scores: jnp.ndarray,
+    dplan: DeviceTilePlan,
+    *,
+    num_nodes: int,
+    segments_per_tile: int,
+) -> jnp.ndarray:
+    """Destination-segment max of a per-edge vector, over the event-driven
+    tiles: f32[N] (−inf for nodes this plan gives no edges).
+
+    The max-shift pass of a numerically stable segment softmax (GAT): scores
+    are scattered into tile layout through ``edge_ids`` (padding lanes read
+    −inf), reduced per segment, and combined across split tiles by
+    scatter-max — the partial-response mechanism with max in place of add.
+    """
+    sc = tile_edge_coeff(dplan, scores, fill=-jnp.inf)
+    out = jnp.full((num_nodes + 1,), -jnp.inf, scores.dtype)
+
+    def body(out, tile):
+        sc_t, seg_ids, out_node = tile
+        partial_max = jax.ops.segment_max(
+            sc_t, seg_ids, num_segments=segments_per_tile
+        )
+        out = out.at[out_node].max(partial_max)
+        return out, None
+
+    out, _ = jax.lax.scan(body, out, (sc, dplan.seg_ids, dplan.out_node))
+    return out[:num_nodes]
+
+
+@partial(jax.jit, static_argnames=("num_nodes", "segments_per_tile"))
+def edge_segment_sum_tiles(
+    values: jnp.ndarray,
+    dplan: DeviceTilePlan,
+    *,
+    num_nodes: int,
+    segments_per_tile: int,
+) -> jnp.ndarray:
+    """Destination-segment sum of a per-edge vector over the tiles: f32[N].
+
+    The denominator pass of the segment softmax: exp-shifted scores scatter
+    through ``edge_ids`` (padding lanes read 0) and accumulate exactly like
+    the aggregation scan, so split nodes combine by the same partial-response
+    scatter-add.
+    """
+    v = tile_edge_coeff(dplan, values, fill=0.0)
+    out = jnp.zeros((num_nodes + 1,), values.dtype)
+
+    def body(out, tile):
+        v_t, seg_ids, out_node = tile
+        partial_sums = jax.ops.segment_sum(
+            v_t, seg_ids, num_segments=segments_per_tile
+        )
+        out = out.at[out_node].add(partial_sums)
+        return out, None
+
+    out, _ = jax.lax.scan(body, out, (v, dplan.seg_ids, dplan.out_node))
+    return out[:num_nodes]
+
+
 def aggregate_mixed_precision(
     x: jnp.ndarray,
     plans: Dict[str, sched.EdgeTilePlan],
@@ -166,6 +278,7 @@ def aggregate_mixed_precision(
     use_kernel: bool = False,
     qp: Optional[QuantParams] = None,
     device_plans: Optional[Dict[str, DeviceTilePlan]] = None,
+    edge_coeff: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Mixed-precision AGE: the float plan consumes fp32 embeddings; the int8
     plan consumes int8-quantized embeddings (4× lighter gather traffic — the
@@ -179,7 +292,10 @@ def aggregate_mixed_precision(
     here, and the sharded executor a globally calibrated qp so every shard
     quantizes identically. ``device_plans`` supplies already-uploaded
     ``DeviceTilePlan`` mirrors keyed like ``plans`` (host→device conversion is
-    per-plan-static and cacheable).
+    per-plan-static and cacheable). ``edge_coeff`` is the runtime per-edge
+    coefficient vector (graph edge space) both precision streams scatter
+    through their ``edge_ids`` maps — each plan covers a disjoint destination
+    subset, so one vector feeds both.
     """
     device_plans = device_plans or {}
 
@@ -195,6 +311,7 @@ def aggregate_mixed_precision(
             num_nodes=num_nodes,
             segments_per_tile=p.segments_per_tile,
             use_kernel=use_kernel,
+            edge_coeff=edge_coeff,
         )
     if "int8" in plans:
         p = plans["int8"]
@@ -208,6 +325,7 @@ def aggregate_mixed_precision(
             num_nodes=num_nodes,
             segments_per_tile=p.segments_per_tile,
             use_kernel=use_kernel,
+            edge_coeff=edge_coeff,
         )
     for tag, p in plans.items():
         if tag not in ("float", "int8"):

@@ -26,6 +26,8 @@ from repro.core import scheduler as sched
 from repro.core.aggregation import (
     aggregate_edge_tiles,
     aggregate_mixed_precision,
+    edge_segment_sum_tiles,
+    segment_max_edge_tiles,
     to_device_plan,
 )
 from repro.core.degree_quant import DegreeQuantConfig, inference_precision_tags
@@ -82,11 +84,16 @@ class EngineConfig:
 def aggregation_coefficients(g: Graph, mode: str) -> np.ndarray:
     """Per-edge coefficients folding the aggregation function into the plan.
 
-      * "sum"  — coeff 1 (GIN)
-      * "mean" — coeff 1/deg(i) (GraphSAGE)
-      * "gcn"  — coeff 1/√(d̂_i d̂_j) (GCN; self-loops must already be present)
+      * "sum"     — coeff 1 (GIN)
+      * "mean"    — coeff 1/deg(i) (GraphSAGE)
+      * "gcn"     — coeff 1/√(d̂_i d̂_j) (GCN; self-loops must already be present)
+      * "runtime" — coeff 1 as a pure lane mask: the real per-edge values
+        arrive at request time (GAT attention) and are scattered through the
+        plan's ``edge_ids`` indirection, multiplying the static 1s — so the
+        compiled plan stays structure-keyed while coefficients change every
+        request.
     """
-    if mode == "sum":
+    if mode in ("sum", "runtime"):
         return np.ones(g.num_edges, np.float32)
     if mode == "mean":
         deg = np.maximum(g.degrees, 1).astype(np.float32)
@@ -258,6 +265,7 @@ def assemble_union_plan(
         if p.modes != modes:
             raise ValueError("member plans disagree on aggregation modes")
     offsets = np.cumsum([0] + [p.num_nodes for p in member_plans])
+    edge_offsets = np.cumsum([0] + [p.num_edges for p in member_plans])
     n_real = int(offsets[-1])
     if n_real > union.num_nodes:
         raise ValueError(
@@ -286,21 +294,27 @@ def assemble_union_plan(
         )
         for tag in tag_names:
             pieces = [
-                (p.mode_plans[mode][tag], offsets[i])
+                (p.mode_plans[mode][tag], offsets[i], edge_offsets[i])
                 for i, p in enumerate(member_plans)
                 if tag in p.mode_plans[mode]
             ]
             min_tiles = 0
             if edge_bucket > 0:
                 ept = pieces[0][0].edges_per_tile
-                real = sum(pl.total_edges for pl, _ in pieces)
+                real = sum(pl.total_edges for pl, _, _ in pieces)
                 _, e_class = sched.size_class(0, real, 0, edge_bucket)
                 min_tiles = -(-e_class // ept)
             per_tag[tag] = sched.concat_tile_plans(
-                [pl for pl, _ in pieces],
-                [off for _, off in pieces],
+                [pl for pl, _, _ in pieces],
+                [off for _, off, _ in pieces],
                 num_nodes=union.num_nodes,
                 min_tiles=min_tiles,
+                # Member edges occupy contiguous slices of the union's edge
+                # array (members precede padding self-edges), so the member
+                # graphs' cumulative edge counts relabel edge_ids into union
+                # edge space — a request-time coefficient vector over the
+                # union then scatters correctly through the assembled plan.
+                edge_offsets=[eoff for _, _, eoff in pieces],
             )
         mode_plans[mode] = per_tag
 
@@ -629,6 +643,15 @@ class AmpleEngine:
         # Chunk-access schedules for the out-of-core path, keyed on
         # (mode, tag, chunk_rows, reorder) — per-plan-static like dplans.
         self._chunk_schedules: Dict[tuple, object] = {}
+        # Device copies of per-tile plan arrays for the streamed executor,
+        # keyed like _chunk_schedules: a warm streamed request re-uploads
+        # zero plan bytes (the instruction stream is plan-static).
+        self._stream_tiles: Dict[tuple, object] = {}
+        # (src, dst) node ids per edge — structural, cached for edge_softmax.
+        self._edge_endpoints: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+        # Modes whose plans were verified to carry live edge ids (the check
+        # scans the tile arrays once; results are plan-static).
+        self._eids_checked: set = set()
 
     # ------------------------------------------------- static quant state
     def begin_forward(self) -> None:
@@ -684,10 +707,30 @@ class AmpleEngine:
             self._act_qp[slot] = qp
         return self._act_qp[slot]
 
-    def _device_plans(self, mode: str, plans: Mapping[str, sched.EdgeTilePlan]) -> Dict:
-        if mode in self._dplan_cache:
-            return self._dplan_cache[mode]
-        dplans = {tag: to_device_plan(p) for tag, p in plans.items()}
+    def _device_plans(
+        self,
+        mode: str,
+        plans: Mapping[str, sched.EdgeTilePlan],
+        *,
+        edge_ids: bool = False,
+    ) -> Dict:
+        """Cached device uploads of one mode's tile plans.
+
+        ``edge_ids`` uploads the runtime-coefficient indirection map too —
+        it is as large as ``gather_idx`` and static-coeff modes never read
+        it, so it rides along only on first runtime-coefficient use (a
+        cached entry without it is upgraded in place).
+        """
+        cached = self._dplan_cache.get(mode)
+        if cached is not None and (
+            not edge_ids
+            or all(d.edge_ids is not None for d in cached.values())
+        ):
+            return cached
+        dplans = {
+            tag: to_device_plan(p, with_edge_ids=edge_ids)
+            for tag, p in plans.items()
+        }
         # Inside jit/grad tracing, array creation is staged into the trace
         # (DynamicJaxprTracer constants) — caching those would leak tracers
         # into later eager calls, so only concrete uploads are kept.
@@ -696,6 +739,29 @@ class AmpleEngine:
         ):
             self._dplan_cache[mode] = dplans
         return dplans
+
+    def _require_edge_ids(self, mode: str, plans: Mapping[str, sched.EdgeTilePlan]) -> None:
+        """Refuse runtime coefficients on plans without live edge ids.
+
+        Plans persisted before the indirection existed load with every lane
+        at -1 (structurally valid, statically servable); scattering through
+        them would silently zero every coefficient — fail loudly instead.
+        """
+        if mode in self._eids_checked:
+            return
+        for tag, p in plans.items():
+            # Every real edge must own exactly one live lane — a partial
+            # count means some member of an assembled union was loaded from
+            # a pre-indirection file (its lanes sit at -1) and would be
+            # silently zeroed by the scatter.
+            if int((p.edge_ids >= 0).sum()) != p.total_edges:
+                raise ValueError(
+                    f"plan for mode {mode!r} tag {tag!r} carries edge-id "
+                    "indirection for only part of its edges (a member "
+                    "persisted before runtime coefficients?); recompile the "
+                    "plan to use edge_coeff / edge_softmax"
+                )
+        self._eids_checked.add(mode)
 
     # ---------------------------------------------------------------- plans
     def plans(self, mode: str) -> Mapping[str, sched.EdgeTilePlan]:
@@ -719,6 +785,24 @@ class AmpleEngine:
             )
         return self._chunk_schedules[key]
 
+    def _stream_tiles_for(self, mode: str, tag: str, sf):
+        """Device copies of one plan's per-tile arrays (plan-static).
+
+        Built (and charged to ``instr_bytes``) once per (mode, tag, chunking)
+        — warm streamed requests re-upload zero plan bytes; only feature
+        chunks move.
+        """
+        from repro.memory.prefetcher import make_device_tile_stream
+
+        key = (mode, tag, sf.store.chunk_rows, sf.reorder)
+        if key not in self._stream_tiles:
+            ts = make_device_tile_stream(
+                self.plans(mode)[tag], self._chunk_schedule(mode, tag, sf)
+            )
+            self._stream_tiles[key] = ts
+            sf.stats.instr_bytes += ts.nbytes  # the cold upload, charged once
+        return self._stream_tiles[key]
+
     def _aggregate_streamed(self, sf, mode: str) -> jnp.ndarray:
         from repro.memory.prefetcher import aggregate_streamed
 
@@ -729,6 +813,7 @@ class AmpleEngine:
             )
         plans = self.plans(mode)
         schedules = {tag: self._chunk_schedule(mode, tag, sf) for tag in plans}
+        tiles = {tag: self._stream_tiles_for(mode, tag, sf) for tag in plans}
         qp = None
         if self.cfg.mixed_precision and "int8" in plans:
             qp = self._activation_qp(None, "agg", make_qp=sf.agg_qp)
@@ -739,6 +824,7 @@ class AmpleEngine:
             num_nodes=self.graph.num_nodes,
             mixed=self.cfg.mixed_precision,
             qp=qp,
+            tiles=tiles,
         )
 
     def _transform_streamed(
@@ -775,17 +861,43 @@ class AmpleEngine:
         )
 
     # ----------------------------------------------------------------- AGE
-    def aggregate(self, x: jnp.ndarray, *, mode: str = "sum") -> jnp.ndarray:
+    def aggregate(
+        self,
+        x: jnp.ndarray,
+        *,
+        mode: str = "sum",
+        edge_coeff: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
         """Event-driven mixed-precision aggregation of node embeddings.
 
         ``x`` may be a ``memory.StreamedFeatures`` handle instead of a dense
         matrix: aggregation then runs chunk-streamed through the prefetcher
         under its feature budget, bitwise-identical to the dense path.
+
+        ``edge_coeff`` is a runtime per-edge coefficient vector (f32[E] in
+        this graph's edge space), scattered into tile layout through the
+        plan's ``edge_ids`` map and multiplied with the static coefficients
+        — the GAT attention path. The plan itself stays structure-keyed, so
+        serving caches are untouched by per-request coefficient changes.
         """
         if isinstance(x, _streamed_features_type()):
+            if edge_coeff is not None:
+                raise ValueError(
+                    "runtime edge coefficients require dense embeddings; the "
+                    "streamed aggregation path serves static-coefficient "
+                    "plans only (attention models stream through transform())"
+                )
             return self._aggregate_streamed(x, mode)
         plans = self.plans(mode)
-        dplans = self._device_plans(mode, plans)
+        if edge_coeff is not None:
+            edge_coeff = jnp.asarray(edge_coeff, jnp.float32)
+            if edge_coeff.shape != (self.graph.num_edges,):
+                raise ValueError(
+                    f"edge_coeff must be [{self.graph.num_edges}], got "
+                    f"{tuple(edge_coeff.shape)}"
+                )
+            self._require_edge_ids(mode, plans)
+        dplans = self._device_plans(mode, plans, edge_ids=edge_coeff is not None)
         if self.cfg.mixed_precision:
             qp = self._activation_qp(lambda: x, "agg") if "int8" in plans else None
             return aggregate_mixed_precision(
@@ -795,6 +907,7 @@ class AmpleEngine:
                 use_kernel=self.cfg.use_kernel,
                 qp=qp,
                 device_plans=dplans,
+                edge_coeff=edge_coeff,
             )
         p = plans["float"]
         return aggregate_edge_tiles(
@@ -803,7 +916,70 @@ class AmpleEngine:
             num_nodes=self.graph.num_nodes,
             segments_per_tile=p.segments_per_tile,
             use_kernel=self.cfg.use_kernel,
+            edge_coeff=edge_coeff,
         )
+
+    # ------------------------------------------------ runtime coefficients
+    def edge_endpoints(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(src, dst) node id per edge, int32[E] each — cached structural
+        arrays (dst follows from the CSR row layout)."""
+        if self._edge_endpoints is None:
+            g = self.graph
+            dst = np.repeat(np.arange(g.num_nodes, dtype=np.int64), g.degrees)
+            self._edge_endpoints = (
+                jnp.asarray(g.indices, jnp.int32),
+                jnp.asarray(dst, jnp.int32),
+            )
+        return self._edge_endpoints
+
+    def edge_softmax(
+        self, scores: jnp.ndarray, *, mode: str = "runtime"
+    ) -> jnp.ndarray:
+        """Destination-segment softmax of per-edge scores: f32[E].
+
+        Runs over the same event-driven tiles as aggregation (per precision
+        group, covering disjoint destination sets): a segment-max pass
+        scatter-maxes tile partials into per-node maxima (the numerically
+        stable shift), scores are exp-shifted in edge space, and a
+        segment-sum pass accumulates the denominators through the same
+        partial-response scatter-add. Nodes with no in-edges in the plan
+        (size-class padding nodes) get max 0 / denominator 1, so the result
+        is finite everywhere.
+        """
+        scores = jnp.asarray(scores, jnp.float32)
+        if scores.shape != (self.graph.num_edges,):
+            raise ValueError(
+                f"scores must be [{self.graph.num_edges}], got "
+                f"{tuple(scores.shape)}"
+            )
+        plans = self.plans(mode)
+        self._require_edge_ids(mode, plans)
+        dplans = self._device_plans(mode, plans, edge_ids=True)
+        n = self.graph.num_nodes
+        node_max = jnp.full((n,), -jnp.inf, jnp.float32)
+        for tag, p in plans.items():
+            node_max = jnp.maximum(
+                node_max,
+                segment_max_edge_tiles(
+                    scores,
+                    dplans[tag],
+                    num_nodes=n,
+                    segments_per_tile=p.segments_per_tile,
+                ),
+            )
+        node_max = jnp.where(jnp.isfinite(node_max), node_max, 0.0)
+        _, dst = self.edge_endpoints()
+        ex = jnp.exp(scores - node_max[dst])
+        denom = jnp.zeros((n,), jnp.float32)
+        for tag, p in plans.items():
+            denom = denom + edge_segment_sum_tiles(
+                ex,
+                dplans[tag],
+                num_nodes=n,
+                segments_per_tile=p.segments_per_tile,
+            )
+        denom = jnp.where(denom > 0, denom, 1.0)
+        return ex / denom[dst]
 
     # ----------------------------------------------------------------- FTE
     def _weight_q(self, w: jnp.ndarray):

@@ -198,6 +198,13 @@ class EdgeTilePlan:
                                sentinel ``num_nodes`` for unused segments.
       node_ids:   int32[M]     nodes covered by this plan (plan may cover a
                                precision subset of the graph).
+      edge_ids:   int32[T, E]  graph edge index (CSR position) per lane; -1 on
+                               padding lanes. The runtime-coefficient
+                               indirection: a per-edge vector computed at
+                               request time (GAT attention) is scattered into
+                               tile layout through this map, so plans stay
+                               structure-keyed while coefficients change every
+                               request.
     """
 
     gather_idx: np.ndarray
@@ -205,6 +212,7 @@ class EdgeTilePlan:
     seg_ids: np.ndarray
     out_node: np.ndarray
     node_ids: np.ndarray
+    edge_ids: np.ndarray
     num_nodes: int  # of the full graph (scatter target row count)
     edges_per_tile: int
     segments_per_tile: int
@@ -260,25 +268,29 @@ def build_edge_tile_plan(
     tiles_c: List[np.ndarray] = []
     tiles_s: List[np.ndarray] = []
     tiles_o: List[np.ndarray] = []
+    tiles_e: List[np.ndarray] = []  # per-tile edge ids (-1 padding)
 
     cur_g = np.zeros(E, np.int32)
     cur_c = np.zeros(E, np.float32)
     cur_s = np.full(E, S - 1, np.int32)
     cur_o = np.full(S, g.num_nodes, np.int32)
+    cur_e = np.full(E, -1, np.int32)
     lane = 0
     seg = 0
     total_edges = 0
 
     def flush():
-        nonlocal cur_g, cur_c, cur_s, cur_o, lane, seg
+        nonlocal cur_g, cur_c, cur_s, cur_o, cur_e, lane, seg
         tiles_g.append(cur_g)
         tiles_c.append(cur_c)
         tiles_s.append(cur_s)
         tiles_o.append(cur_o)
+        tiles_e.append(cur_e)
         cur_g = np.zeros(E, np.int32)
         cur_c = np.zeros(E, np.float32)
         cur_s = np.full(E, S - 1, np.int32)
         cur_o = np.full(S, g.num_nodes, np.int32)
+        cur_e = np.full(E, -1, np.int32)
         lane = 0
         seg = 0
 
@@ -298,6 +310,7 @@ def build_edge_tile_plan(
             cur_g[lane : lane + take] = nbrs[pos : pos + take]
             cur_c[lane : lane + take] = cfs[pos : pos + take]
             cur_s[lane : lane + take] = seg
+            cur_e[lane : lane + take] = np.arange(lo + pos, lo + pos + take)
             cur_o[seg] = v
             lane += take
             pos += take
@@ -313,6 +326,7 @@ def build_edge_tile_plan(
         seg_ids=np.stack(tiles_s),
         out_node=np.stack(tiles_o),
         node_ids=node_ids.astype(np.int32),
+        edge_ids=np.stack(tiles_e),
         num_nodes=g.num_nodes,
         edges_per_tile=E,
         segments_per_tile=S,
@@ -326,6 +340,7 @@ def concat_tile_plans(
     *,
     num_nodes: int,
     min_tiles: int = 0,
+    edge_offsets: Optional[Sequence[int]] = None,
 ) -> EdgeTilePlan:
     """Stack member tile plans into one union plan by offsetting node ids.
 
@@ -338,22 +353,32 @@ def concat_tile_plans(
     recomposes the batch. The cost is that each member's last, partially
     filled tile keeps its padding lanes (bounded by one tile per member).
 
+    ``edge_offsets`` relabels each member's ``edge_ids`` into the union's
+    edge index space (one offset per member: the cumulative edge count of
+    the member *graphs* before it — not of the plans, which may cover a
+    precision subset of their graph's edges). Valid lanes shift by the
+    offset; padding lanes stay -1. Omitted, the union plan's ``edge_ids``
+    are all -1: structurally complete but opted out of runtime
+    coefficients (the historical behaviour).
+
     ``min_tiles`` pads the stacked plan with all-invalid tiles (coeff 0,
-    sentinel segments) up to a tile-count bucket, giving recurring device
-    shapes across batches in the same size class.
+    sentinel segments, edge id -1) up to a tile-count bucket, giving
+    recurring device shapes across batches in the same size class.
     """
     if not plans:
         raise ValueError("concat_tile_plans of no plans")
     if len(plans) != len(node_offsets):
         raise ValueError("one node offset per member plan required")
+    if edge_offsets is not None and len(plans) != len(edge_offsets):
+        raise ValueError("one edge offset per member plan required")
     E = plans[0].edges_per_tile
     S = plans[0].segments_per_tile
     for p in plans:
         if p.edges_per_tile != E or p.segments_per_tile != S:
             raise ValueError("member plans disagree on tile geometry")
-    gather, coeff, segs, outs, node_ids = [], [], [], [], []
+    gather, coeff, segs, outs, node_ids, eids = [], [], [], [], [], []
     total_edges = 0
-    for p, off in zip(plans, node_offsets):
+    for k, (p, off) in enumerate(zip(plans, node_offsets)):
         off = int(off)
         if off + p.num_nodes > num_nodes:
             raise ValueError(
@@ -369,6 +394,13 @@ def concat_tile_plans(
             np.where(p.out_node == p.num_nodes, num_nodes, p.out_node + off)
         )
         node_ids.append(p.node_ids.astype(np.int64) + off)
+        if edge_offsets is None:
+            eids.append(np.full(p.edge_ids.shape, -1, np.int64))
+        else:
+            e_off = int(edge_offsets[k])
+            eids.append(
+                np.where(p.edge_ids < 0, -1, p.edge_ids.astype(np.int64) + e_off)
+            )
         total_edges += p.total_edges
     n_tiles = sum(p.num_tiles for p in plans)
     if min_tiles > n_tiles:
@@ -377,12 +409,14 @@ def concat_tile_plans(
         coeff.append(np.zeros((pad, E), np.float32))
         segs.append(np.full((pad, E), S - 1, np.int32))
         outs.append(np.full((pad, S), num_nodes, np.int64))
+        eids.append(np.full((pad, E), -1, np.int64))
     return EdgeTilePlan(
         gather_idx=np.concatenate(gather).astype(np.int32),
         coeff=np.concatenate(coeff),
         seg_ids=np.concatenate(segs).astype(np.int32),
         out_node=np.concatenate(outs).astype(np.int32),
         node_ids=np.concatenate(node_ids).astype(np.int32),
+        edge_ids=np.concatenate(eids).astype(np.int32),
         num_nodes=num_nodes,
         edges_per_tile=E,
         segments_per_tile=S,
@@ -596,6 +630,11 @@ class ChunkSchedule:
     order: np.ndarray  # int64[T] tile execution order (permutes whole runs)
     tile_chunks: Tuple[np.ndarray, ...]  # per plan-tile sorted unique chunk ids
     runs: np.ndarray  # int64[R+1] run boundaries over plan tile indices
+    # Precomputed per-lane (chunk, offset) split of every tile's gather
+    # indices — plan-static, so warm streamed requests skip the divmod the
+    # prefetcher used to redo per tile per request.
+    lane_chunk: np.ndarray  # int32[T, E] gather_idx // chunk_rows
+    lane_off: np.ndarray  # int32[T, E] gather_idx % chunk_rows
 
     @property
     def num_tiles(self) -> int:
@@ -659,9 +698,11 @@ def build_chunk_schedule(
     if chunk_rows <= 0:
         raise ValueError("chunk_rows must be positive")
     num_chunks = -(-max(plan.num_nodes, 1) // chunk_rows)
+    gi = plan.gather_idx.astype(np.int64)
+    lane_chunk = (gi // chunk_rows).astype(np.int32)
+    lane_off = (gi % chunk_rows).astype(np.int32)
     tile_chunks = tuple(
-        np.unique(plan.gather_idx[t].astype(np.int64) // chunk_rows)
-        for t in range(plan.num_tiles)
+        np.unique(lane_chunk[t]).astype(np.int64) for t in range(plan.num_tiles)
     )
     runs = tile_runs(plan)
     order = np.arange(plan.num_tiles, dtype=np.int64)
@@ -681,6 +722,8 @@ def build_chunk_schedule(
         order=order,
         tile_chunks=tile_chunks,
         runs=runs,
+        lane_chunk=lane_chunk,
+        lane_off=lane_off,
     )
 
 

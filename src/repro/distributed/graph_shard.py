@@ -54,6 +54,43 @@ __all__ = ["ShardedAmpleEngine", "sharded_aggregate", "build_mesh_state"]
 # ---------------------------------------------------------------------------
 
 
+def _shard_state_entry(state: Dict, sp, mode: str, *, with_edge_ids: bool):
+    """The per-shard device cache entry (local_ids, plans, dplans).
+
+    One fill/upgrade rule for every consumer of the ``("host", fingerprint,
+    mode)`` key: built on first use, and upgraded in place with the
+    ``edge_ids`` indirection map when a runtime-coefficient pass needs it
+    after static-coeff traffic populated the entry without one.
+    """
+    key = ("host", sp.fingerprint, mode)
+    entry = state.get(key)
+    if entry is None:
+        plans = sp.plan.mode_plans.get(mode)
+        if plans is None:
+            raise KeyError(
+                f"shard {sp.shard.index} was compiled for modes "
+                f"{sp.plan.modes}, not {mode!r}; recompile the sharded "
+                f"plan with this mode"
+            )
+        entry = (
+            jnp.asarray(sp.shard.local_ids, jnp.int32),
+            plans,
+            {
+                tag: to_device_plan(p, with_edge_ids=with_edge_ids)
+                for tag, p in plans.items()
+            },
+        )
+        state[key] = entry
+    elif with_edge_ids and any(d.edge_ids is None for d in entry[2].values()):
+        entry = (
+            entry[0],
+            entry[1],
+            {tag: to_device_plan(p) for tag, p in entry[1].items()},
+        )
+        state[key] = entry
+    return entry
+
+
 def sharded_aggregate(
     x: jnp.ndarray,
     splan: ShardedExecutionPlan,
@@ -62,6 +99,7 @@ def sharded_aggregate(
     qp: Optional[QuantParams] = None,
     use_kernel: bool = False,
     device_state: Optional[Dict] = None,
+    edge_coeff: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Aggregate ``x`` shard by shard; returns the full [N, D] result.
 
@@ -69,27 +107,24 @@ def sharded_aggregate(
     shard's event-driven plan, keep the owned output rows. ``qp`` must be the
     globally calibrated activation scale/zp when the plan is mixed-precision
     (pass None for float-only plans). ``device_state`` caches per-shard
-    uploaded artifacts across calls (the engine owns one).
+    uploaded artifacts across calls (the engine owns one). ``edge_coeff`` is
+    a *global* runtime per-edge coefficient vector (f32[E]); each shard
+    slices its contiguous ``edge_range`` — halo-sourced edges live in their
+    destination's shard, so the slice carries their runtime coefficients too
+    — and scatters the slice through its local ``edge_ids`` map.
     """
     parts = []
     state = device_state if device_state is not None else {}
+    with_eids = edge_coeff is not None
     for sp in splan.shards:
-        key = ("host", sp.fingerprint, mode)
-        if key not in state:
-            plans = sp.plan.mode_plans.get(mode)
-            if plans is None:
-                raise KeyError(
-                    f"shard {sp.shard.index} was compiled for modes "
-                    f"{sp.plan.modes}, not {mode!r}; recompile the sharded "
-                    f"plan with this mode"
-                )
-            state[key] = (
-                jnp.asarray(sp.shard.local_ids, jnp.int32),
-                plans,
-                {tag: to_device_plan(p) for tag, p in plans.items()},
-            )
-        local_ids, plans, dplans = state[key]
+        local_ids, plans, dplans = _shard_state_entry(
+            state, sp, mode, with_edge_ids=with_eids
+        )
         x_local = x[local_ids]
+        local_coeff = None
+        if edge_coeff is not None:
+            e_lo, e_hi = sp.shard.edge_range
+            local_coeff = jax.lax.slice_in_dim(edge_coeff, e_lo, e_hi)
         m = aggregate_mixed_precision(
             x_local,
             plans,
@@ -97,6 +132,7 @@ def sharded_aggregate(
             use_kernel=use_kernel,
             qp=qp,
             device_plans=dplans,
+            edge_coeff=local_coeff,
         )
         parts.append(m[: sp.num_owned])
     return jnp.concatenate(parts, axis=0) if parts else jnp.zeros_like(x)
@@ -260,8 +296,9 @@ class ShardedAmpleEngine(AmpleEngine):
     """AmpleEngine over a partitioned graph: sharded AGE, row-parallel FTE.
 
     Drop-in for ``AmpleEngine`` wherever the model apply functions use it
-    (``aggregate`` / ``transform``), so gcn/gin/sage run sharded without
-    change. Construct from a compiled ``ShardedExecutionPlan``:
+    (``aggregate`` / ``transform`` / ``edge_softmax``), so gcn/gin/sage/gat
+    run sharded without change. Construct from a compiled
+    ``ShardedExecutionPlan``:
 
         splan = compile_sharded_plans(g, cfg, num_shards=4, modes=("gcn",))
         eng = ShardedAmpleEngine(g, splan)              # host loop
@@ -306,8 +343,32 @@ class ShardedAmpleEngine(AmpleEngine):
         )
 
     # ----------------------------------------------------------------- AGE
-    def aggregate(self, x: jnp.ndarray, *, mode: str = "sum") -> jnp.ndarray:
+    def aggregate(
+        self,
+        x: jnp.ndarray,
+        *,
+        mode: str = "sum",
+        edge_coeff: Optional[jnp.ndarray] = None,
+    ) -> jnp.ndarray:
         splan = self.sharded_plan
+        if edge_coeff is not None:
+            edge_coeff = jnp.asarray(edge_coeff, jnp.float32)
+            if edge_coeff.shape != (self.graph.num_edges,):
+                raise ValueError(
+                    f"edge_coeff must be [{self.graph.num_edges}], got "
+                    f"{tuple(edge_coeff.shape)}"
+                )
+            if self.mesh is not None:
+                raise NotImplementedError(
+                    "runtime edge coefficients run on the host-loop sharded "
+                    "backend; the shard_map SPMD program does not yet carry "
+                    "a per-edge operand"
+                )
+        if edge_coeff is not None:
+            for sp in splan.shards:
+                self._require_edge_ids(
+                    (mode, sp.shard.index), sp.plan.mode_plans.get(mode, {})
+                )
         has_int8 = self.cfg.mixed_precision and any(
             "int8" in s.plan.mode_plans.get(mode, {}) for s in splan.shards
         )
@@ -321,7 +382,85 @@ class ShardedAmpleEngine(AmpleEngine):
             qp=qp,
             use_kernel=self.cfg.use_kernel,
             device_state=self._shard_state,
+            edge_coeff=edge_coeff,
         )
+
+    # ------------------------------------------------ runtime coefficients
+    def edge_softmax(
+        self, scores: jnp.ndarray, *, mode: str = "runtime"
+    ) -> jnp.ndarray:
+        """Destination-segment softmax of per-edge scores, sharded: f32[E].
+
+        Each destination node (and each edge) belongs to exactly one shard,
+        so the segment-max and denominator passes run per shard over its
+        local tiles and the owned rows concatenate back to the global node
+        order; the exp-shift and final normalisation happen in global edge
+        space. Matches the single-plan ``AmpleEngine.edge_softmax`` up to
+        float accumulation order.
+        """
+        from repro.core.aggregation import (
+            edge_segment_sum_tiles,
+            segment_max_edge_tiles,
+        )
+
+        scores = jnp.asarray(scores, jnp.float32)
+        if scores.shape != (self.graph.num_edges,):
+            raise ValueError(
+                f"scores must be [{self.graph.num_edges}], got "
+                f"{tuple(scores.shape)}"
+            )
+        splan = self.sharded_plan
+        for sp in splan.shards:
+            self._require_edge_ids(
+                (mode, sp.shard.index), sp.plan.mode_plans.get(mode, {})
+            )
+
+        def owned_pass(fn, vec, init):
+            parts = []
+            for sp in splan.shards:
+                e_lo, e_hi = sp.shard.edge_range
+                local = jax.lax.slice_in_dim(vec, e_lo, e_hi)
+                plans = sp.plan.mode_plans.get(mode)
+                if plans is None:
+                    raise KeyError(
+                        f"shard {sp.shard.index} was compiled for modes "
+                        f"{sp.plan.modes}, not {mode!r}"
+                    )
+                acc = jnp.full((sp.shard.num_local,), init, jnp.float32)
+                for tag, p in plans.items():
+                    dplan = self._softmax_dplan(sp, mode, tag, p)
+                    res = fn(
+                        local,
+                        dplan,
+                        num_nodes=sp.shard.num_local,
+                        segments_per_tile=p.segments_per_tile,
+                    )
+                    acc = (
+                        jnp.maximum(acc, res)
+                        if init == -jnp.inf
+                        else acc + res
+                    )
+                parts.append(acc[: sp.num_owned])
+            return jnp.concatenate(parts, axis=0)
+
+        node_max = owned_pass(segment_max_edge_tiles, scores, -jnp.inf)
+        node_max = jnp.where(jnp.isfinite(node_max), node_max, 0.0)
+        dst = self.edge_endpoints()[1]
+        ex = jnp.exp(scores - node_max[dst])
+        denom = owned_pass(edge_segment_sum_tiles, ex, 0.0)
+        denom = jnp.where(denom > 0, denom, 1.0)
+        return ex / denom[dst]
+
+    def _softmax_dplan(self, sp, mode: str, tag: str, plan):
+        """Per-shard device plan mirror, shared with sharded_aggregate.
+
+        The softmax passes scatter through ``edge_ids``, so an entry cached
+        by static-coeff traffic (uploaded without the map) is upgraded here.
+        """
+        entry = _shard_state_entry(
+            self._shard_state, sp, mode, with_edge_ids=True
+        )
+        return entry[2][tag]
 
     def _aggregate_shard_map(self, x: jnp.ndarray, mode: str, qp) -> jnp.ndarray:
         if mode not in self._mesh_exec:

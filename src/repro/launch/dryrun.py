@@ -298,8 +298,8 @@ def _lower_gnn(cfg: ModelConfig, rec: Dict, *, multi_pod: bool) -> Dict:
     specs, meta = gnn_input_specs(cfg)
     n, s = meta["num_nodes"], meta["segments_per_tile"]
 
-    def gnn_step(x, gather_idx, coeff, seg_ids, out_node, w1, w2):
-        dplan = DeviceTilePlan(gather_idx, coeff, seg_ids, out_node)
+    def gnn_step(x, gather_idx, coeff, seg_ids, out_node, edge_ids, w1, w2):
+        dplan = DeviceTilePlan(gather_idx, coeff, seg_ids, out_node, edge_ids)
         m = aggregate_edge_tiles(x, dplan, num_nodes=n, segments_per_tile=s)
         h = jax.nn.relu(m @ w1)
         m2 = aggregate_edge_tiles(h, dplan, num_nodes=n, segments_per_tile=s)
@@ -311,11 +311,13 @@ def _lower_gnn(cfg: ModelConfig, rec: Dict, *, multi_pod: bool) -> Dict:
         "coeff": NamedSharding(mesh, P(dp, None)),
         "seg_ids": NamedSharding(mesh, P(dp, None)),
         "out_node": NamedSharding(mesh, P(dp, None)),
+        "edge_ids": NamedSharding(mesh, P(dp, None)),
         "w1": NamedSharding(mesh, P(None, "model")),
         "w2": NamedSharding(mesh, P("model", None)),
     }
-    args = [specs[k] for k in ["x", "gather_idx", "coeff", "seg_ids", "out_node", "w1", "w2"]]
-    in_sh = tuple(sh[k] for k in ["x", "gather_idx", "coeff", "seg_ids", "out_node", "w1", "w2"])
+    ks = ["x", "gather_idx", "coeff", "seg_ids", "out_node", "edge_ids", "w1", "w2"]
+    args = [specs[k] for k in ks]
+    in_sh = tuple(sh[k] for k in ks)
     t0 = time.time()
     jitted = jax.jit(gnn_step, in_shardings=in_sh,
                      out_shardings=NamedSharding(mesh, P(None, None)))

@@ -141,6 +141,9 @@ def serve_gnn_continuous(cfg, args) -> None:
     async_eng = AsyncGNNEngine(
         cfg,
         window=args.window or None,
+        window_timeout_ms=(
+            args.window_timeout_ms if args.window_timeout_ms >= 0 else None
+        ),
         num_shards=args.num_shards,
         union_node_bucket=node_bucket,
         union_edge_bucket=edge_bucket,
@@ -173,6 +176,11 @@ def serve_gnn_continuous(cfg, args) -> None:
         f"(window={async_eng.window}, {mode})"
     )
     econ = f"planner_calls={info['planner_calls']}"
+    if async_eng.window_timeout_ms > 0:
+        econ += (
+            f", held_windows={info['held_windows']}, "
+            f"deadline_closes={info['deadline_closes']}"
+        )
     if async_eng.engine.padded_unions:
         econ = (
             f"member-plan hit rate {info['member_hits'] / max(lookups, 1):.2f}, "
@@ -203,6 +211,11 @@ def main():
     ap.add_argument("--window", type=int, default=0,
                     help="continuous-batching admission window "
                          "(0 = cfg.gnn_batch_window)")
+    ap.add_argument("--window-timeout-ms", type=float, default=-1,
+                    help="latency-aware window close: hold a partially "
+                         "filled admission window open until its oldest "
+                         "request has waited this long (-1 = cfg."
+                         "gnn_window_timeout_ms, 0 = admit immediately)")
     ap.add_argument("--node-bucket", type=int, default=-1,
                     help="pad union batches to this node size class "
                          "(-1 = cfg.gnn_union_node_bucket, 0 = exact shapes)")

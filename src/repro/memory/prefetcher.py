@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +48,8 @@ from repro.memory.feature_store import FeatureStore
 __all__ = [
     "StreamStats",
     "StreamedFeatures",
+    "DeviceTileStream",
+    "make_device_tile_stream",
     "ChunkPrefetcher",
     "aggregate_streamed",
     "transform_streamed",
@@ -55,6 +57,43 @@ __all__ = [
 ]
 
 _INF = np.iinfo(np.int64).max
+
+
+class DeviceTileStream(NamedTuple):
+    """Device-resident per-tile plan arrays for the streamed executor.
+
+    The instruction stream of one (plan, chunking) pair: coefficient /
+    segment / scatter arrays plus the within-chunk lane offsets, uploaded
+    once and indexed per tile on device. An engine caches one of these per
+    (mode, tag, chunk_rows, reorder), so warm streamed requests move feature
+    chunks only — zero plan bytes (regression-tested via
+    ``StreamStats.instr_bytes``).
+    """
+
+    coeff: jnp.ndarray  # f32[T, E]
+    seg_ids: jnp.ndarray  # int32[T, E]
+    out_node: jnp.ndarray  # int32[T, S]
+    lane_off: jnp.ndarray  # int32[T, E] row offset within the lane's chunk
+    nbytes: int  # host->device bytes the upload cost (charged once, by owner)
+
+
+def make_device_tile_stream(
+    plan: "sched.EdgeTilePlan", schedule: "sched.ChunkSchedule"
+) -> DeviceTileStream:
+    """Upload one plan's tile arrays (+ the schedule's lane offsets)."""
+    nbytes = (
+        plan.coeff.nbytes
+        + plan.seg_ids.nbytes
+        + plan.out_node.nbytes
+        + schedule.lane_off.nbytes
+    )
+    return DeviceTileStream(
+        coeff=jnp.asarray(plan.coeff, jnp.float32),
+        seg_ids=jnp.asarray(plan.seg_ids, jnp.int32),
+        out_node=jnp.asarray(plan.out_node, jnp.int32),
+        lane_off=jnp.asarray(schedule.lane_off, jnp.int32),
+        nbytes=int(nbytes),
+    )
 
 
 @dataclasses.dataclass
@@ -224,6 +263,7 @@ class ChunkPrefetcher:
         prefetch_depth: int = 1,
         stats: Optional[StreamStats] = None,
         quant_scale=None,
+        tiles: Optional[DeviceTileStream] = None,
     ):
         if schedule.chunk_rows != store.chunk_rows:
             raise ValueError(
@@ -246,6 +286,10 @@ class ChunkPrefetcher:
         )
         self.prefetch_depth = max(int(prefetch_depth), 0)
         self.stats = stats if stats is not None else StreamStats()
+        # Device-cached instruction stream (owner charged its upload once);
+        # None = upload per-tile plan slices per call (the uncached path,
+        # used by direct ChunkPrefetcher construction).
+        self.tiles = tiles
         self.chunk_bytes = (
             store.chunk_bytes_f32 if stream == "f32" else store.chunk_bytes_i8
         )
@@ -360,21 +404,26 @@ class ChunkPrefetcher:
         """
         if self.stream == "i8" and qp is None:
             raise ValueError("int8 stream needs the aggregation QuantParams")
-        R = self.store.chunk_rows
         S = plan.segments_per_tile
         n = plan.num_nodes
+        lanes = plan.gather_idx.shape[1]
         out = jnp.zeros((n + 1, self.store.dim), jnp.float32)
         lane_bytes = plan.gather_idx[0].nbytes + plan.coeff[0].nbytes + (
             plan.seg_ids[0].nbytes + plan.out_node[0].nbytes
         )
         for pos, t in enumerate(self.schedule.order):
             t = int(t)
-            gi = plan.gather_idx[t].astype(np.int64)
-            lane_chunk = gi // R
-            lane_off = jnp.asarray(gi % R, jnp.int32)
+            # (chunk, offset) lane splits are plan-static — precomputed on
+            # the schedule at plan time, not re-derived per request.
+            lane_chunk = self.schedule.lane_chunk[t]
+            lane_off = (
+                self.tiles.lane_off[t]
+                if self.tiles is not None
+                else jnp.asarray(self.schedule.lane_off[t], jnp.int32)
+            )
             todo = [int(c) for c in self.schedule.tile_chunks[t]]
             gathered = jnp.zeros(
-                (gi.size,) + (self.store.dim,),
+                (lanes,) + (self.store.dim,),
                 jnp.float32 if self.stream == "f32" else jnp.int8,
             )
             self.stats.tiles += 1
@@ -416,10 +465,18 @@ class ChunkPrefetcher:
                 )
                 self.stats.waves += 1
                 todo = rest
-            coeff = jnp.asarray(plan.coeff[t])
-            seg_ids = jnp.asarray(plan.seg_ids[t])
-            out_node = jnp.asarray(plan.out_node[t])
-            self.stats.instr_bytes += lane_bytes
+            if self.tiles is not None:
+                # Device-resident instruction stream: indexing a cached
+                # array is a device-side slice, not an upload — warm
+                # requests move zero plan bytes.
+                coeff = self.tiles.coeff[t]
+                seg_ids = self.tiles.seg_ids[t]
+                out_node = self.tiles.out_node[t]
+            else:
+                coeff = jnp.asarray(plan.coeff[t])
+                seg_ids = jnp.asarray(plan.seg_ids[t])
+                out_node = jnp.asarray(plan.out_node[t])
+                self.stats.instr_bytes += lane_bytes
             if self.stream == "f32":
                 out = _tile_step_f32(
                     out, gathered, coeff, seg_ids, out_node, segments_per_tile=S
@@ -442,12 +499,15 @@ def aggregate_streamed(
     num_nodes: int,
     mixed: bool,
     qp: Optional[QuantParams] = None,
+    tiles: Optional[Mapping[str, DeviceTileStream]] = None,
 ) -> jnp.ndarray:
     """Chunk-streamed mirror of the engine's aggregation dispatch.
 
     ``mixed`` replays ``aggregate_mixed_precision``'s combine order exactly
     (zeros + float stream + int8 stream); non-mixed returns the float stream
     alone, matching the engine's direct ``aggregate_edge_tiles`` call.
+    ``tiles`` carries the caller's device-cached instruction streams per tag
+    (warm requests then re-upload zero plan bytes).
     """
     for tag in plans:
         if tag not in ("float", "int8"):
@@ -464,6 +524,7 @@ def aggregate_streamed(
             quant_scale=(
                 np.float32(np.asarray(qp_.scale)) if qp_ is not None else None
             ),
+            tiles=tiles.get(tag) if tiles is not None else None,
         )
         return pf.aggregate(plans[tag], qp=qp_)
 

@@ -34,6 +34,7 @@ same admitted composition.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence
 
@@ -51,6 +52,7 @@ class GNNTicket:
     seq: int  # admission order, assigned by submit()
     request: GNNRequest
     response: Optional[GNNResponse] = None
+    arrival: float = 0.0  # time.monotonic() at submit; drives the SLO close
     _engine: Optional["AsyncGNNEngine"] = dataclasses.field(
         default=None, repr=False, compare=False
     )
@@ -60,13 +62,27 @@ class GNNTicket:
         return self.response is not None
 
     def result(self) -> GNNResponse:
-        """The response; drives the owning engine's loop until completion."""
+        """The response; drives the owning engine's loop until completion.
+
+        With a ``window_timeout_ms`` configured, a partially filled window is
+        held open for late arrivals — this call sleeps out the remaining
+        deadline (nothing else can admit meanwhile) and then steps again.
+        """
         while not self.done:
-            if self._engine is None or not self._engine.step():
+            if self._engine is None:
+                raise RuntimeError(
+                    f"ticket {self.seq} is pending but has no engine — was "
+                    "it detached?"
+                )
+            if self._engine.step():
+                continue
+            wait = self._engine._deadline_wait()
+            if wait is None:
                 raise RuntimeError(
                     f"ticket {self.seq} is pending but its engine has no "
                     "admissible work — was it detached?"
                 )
+            time.sleep(wait)
         return self.response
 
 
@@ -85,6 +101,13 @@ class AsyncGNNEngine:
         that would overflow the budget closes the window (it is served first
         next tick) — stragglers delay nobody behind them beyond their own
         batch, and nobody overtakes them.
+    window_timeout_ms: latency-aware window close. 0 (the historical
+        behaviour) admits whatever is queued on every tick; > 0 holds a
+        *partially* filled window open — ``step`` returns nothing — until
+        either the window fills (count or node budget closes it) or the
+        oldest queued request has waited this long, at which point the
+        partial window admits at the deadline. Defaults to
+        ``cfg.gnn_window_timeout_ms``. ``drain`` always flushes.
     """
 
     def __init__(
@@ -94,6 +117,7 @@ class AsyncGNNEngine:
         *,
         window: Optional[int] = None,
         max_batch_nodes: Optional[int] = None,
+        window_timeout_ms: Optional[float] = None,
         **engine_kwargs,
     ):
         if isinstance(engine, GNNServeEngine):
@@ -115,13 +139,24 @@ class AsyncGNNEngine:
             raise ValueError("window must be >= 1")
         self.window = int(w)
         self.max_batch_nodes = max_batch_nodes
+        wt = (
+            self.engine.cfg.gnn_window_timeout_ms
+            if window_timeout_ms is None
+            else window_timeout_ms
+        )
+        if wt < 0:
+            raise ValueError("window_timeout_ms must be >= 0")
+        self.window_timeout_ms = float(wt)
         self._queue: Deque[GNNTicket] = deque()
         self._seq = 0
+        self._held_head: Optional[int] = None  # seq of the last held window head
         self.stats: Dict[str, int] = {
             "submitted": 0,
             "completed": 0,
             "steps": 0,
             "max_queue_depth": 0,
+            "held_windows": 0,  # partial windows held open for late arrivals
+            "deadline_closes": 0,  # partial windows admitted at the deadline
         }
 
     # ------------------------------------------------------------ admission
@@ -137,6 +172,7 @@ class AsyncGNNEngine:
         ticket = GNNTicket(
             seq=self._seq,
             request=GNNRequest(graph=graph, features=features, arch=arch),
+            arrival=time.monotonic(),
             _engine=self,
         )
         self._seq += 1
@@ -155,8 +191,21 @@ class AsyncGNNEngine:
         return len(self._queue)
 
     # ------------------------------------------------------------ event loop
-    def _admit(self) -> List[GNNTicket]:
-        """Pop the next micro-batch off the queue head (FIFO, budgeted)."""
+    def _deadline_wait(self) -> Optional[float]:
+        """Seconds until the oldest queued request's deadline; None when no
+        timeout applies (idle queue, or no timeout configured)."""
+        if self.window_timeout_ms <= 0 or not self._queue:
+            return None
+        age = time.monotonic() - self._queue[0].arrival
+        return max(self.window_timeout_ms / 1e3 - age, 0.0)
+
+    def _admit(self, *, flush: bool = False) -> List[GNNTicket]:
+        """Pop the next micro-batch off the queue head (FIFO, budgeted).
+
+        With a window timeout, a *partial* window (queue drained before the
+        count/node budget closed it) is held back until the oldest member
+        has waited out the deadline; ``flush`` overrides (drain/shutdown).
+        """
         batch: List[GNNTicket] = []
         nodes = 0
         while self._queue and len(batch) < self.window:
@@ -170,18 +219,45 @@ class AsyncGNNEngine:
                 break  # close the window; nxt leads the next batch
             batch.append(self._queue.popleft())
             nodes += n
+        # A window is "closed" — never held — when the count or node budget
+        # can admit nothing more: full by count, a successor already waiting
+        # (the budget break fired), or the budget itself saturated (nothing
+        # that arrives later could ever join this window).
+        budget_full = (
+            self.max_batch_nodes is not None and nodes >= self.max_batch_nodes
+        )
+        partial = (
+            bool(batch)
+            and len(batch) < self.window
+            and not self._queue
+            and not budget_full
+        )
+        if partial and not flush and self.window_timeout_ms > 0:
+            age_ms = (time.monotonic() - batch[0].arrival) * 1e3
+            if age_ms < self.window_timeout_ms:
+                # Hold the window open for late arrivals; the admission
+                # order is untouched (back at the head, in order). Counted
+                # once per distinct window head, not per polling tick.
+                self._queue.extendleft(reversed(batch))
+                if self._held_head != batch[0].seq:
+                    self._held_head = batch[0].seq
+                    self.stats["held_windows"] += 1
+                return []
+            self.stats["deadline_closes"] += 1
         return batch
 
-    def step(self) -> List[GNNTicket]:
+    def step(self, *, flush: bool = False) -> List[GNNTicket]:
         """One event-loop tick: admit a window, run its union, complete it.
 
-        Returns the completed tickets (empty when the queue was idle). The
+        Returns the completed tickets (empty when the queue was idle, or a
+        partial window is being held for its ``window_timeout_ms`` deadline;
+        ``flush=True`` admits regardless — the drain/shutdown path). The
         union call is ``GNNServeEngine.infer_batch`` — plan assembly + one
         device call — so everything the synchronous engine guarantees
         (per-member Degree-Quant tags, plan/size-class caching, bitwise
         warm repeats) holds per micro-batch.
         """
-        batch = self._admit()
+        batch = self._admit(flush=flush)
         if not batch:
             return []
         try:
@@ -199,10 +275,12 @@ class AsyncGNNEngine:
         return batch
 
     def drain(self) -> List[GNNResponse]:
-        """Run the loop until the queue is empty; responses in admission order."""
+        """Run the loop until the queue is empty; responses in admission
+        order. Flushes held partial windows — drain is the shutdown path,
+        so nothing waits out a deadline here."""
         done: List[GNNTicket] = []
         while self._queue:
-            done.extend(self.step())
+            done.extend(self.step(flush=True))
         return [t.response for t in sorted(done, key=lambda t: t.seq)]
 
     def serve(self, requests: Sequence[GNNRequest]) -> List[GNNResponse]:

@@ -1,0 +1,176 @@
+"""GAT end-to-end: runtime attention coefficients on every serving path.
+
+Acceptance under test: GAT outputs match the dense JAX reference (per-arch
+tolerance; int8 flips accounted like sage) on sync serving, async
+padded-union serving and the sharded path (K ∈ {1, 2}); and warm GAT traffic
+has exactly GCN's plan-cache economics — plans are structure-keyed, so the
+per-request attention coefficients never touch the planner (``plan_ms == 0``,
+no planner calls after the cold request).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import AmpleEngine
+from repro.graphs import make_dataset
+from repro.models.gnn import api as gnn_api
+from repro.serve.async_gnn import AsyncGNNEngine
+from repro.serve.gnn_engine import GNNRequest, GNNServeEngine
+
+
+def _cfg(*, precision="mixed", heads=2):
+    return dataclasses.replace(
+        get_config("ample-gat", reduced=True),
+        d_model=24, d_ff=16, vocab_size=8, gnn_precision=precision,
+        gnn_edges_per_tile=64, gnn_heads=heads,
+    )
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return make_dataset("citeseer", max_nodes=150, max_feature_dim=24, seed=3)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return [
+        make_dataset("cora", max_nodes=n, max_feature_dim=24, seed=s)
+        for n, s in [(60, 1), (45, 2), (75, 3)]
+    ]
+
+
+def _rel(y, yref):
+    return np.abs(y - yref).max() / (np.abs(yref).max() + 1e-9)
+
+
+# ----------------------------------------------------------- model numerics
+@pytest.mark.parametrize("heads", [1, 2, 4])
+def test_gat_matches_reference_float(graph, heads):
+    cfg = _cfg(precision="float", heads=heads)
+    params = gnn_api.gnn_init(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(graph.features)
+    prepared = gnn_api.prepare_graph(cfg, graph)
+    eng = AmpleEngine(prepared, gnn_api.engine_config(cfg))
+    y = gnn_api.gnn_apply(cfg, params, eng, x)
+    yref = gnn_api.gnn_reference(cfg, params, graph, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), atol=5e-4, rtol=1e-3)
+
+
+def test_gat_mixed_precision_bounded_error(graph):
+    cfg = _cfg()
+    params = gnn_api.gnn_init(cfg, jax.random.PRNGKey(1))
+    x = jnp.asarray(graph.features)
+    prepared = gnn_api.prepare_graph(cfg, graph)
+    eng = AmpleEngine(prepared, gnn_api.engine_config(cfg))
+    y = np.asarray(gnn_api.gnn_apply(cfg, params, eng, x))
+    yref = np.asarray(gnn_api.gnn_reference(cfg, params, graph, x))
+    assert _rel(y, yref) < 0.08, f"int8 mixed-precision rel err {_rel(y, yref)}"
+    assert np.isfinite(y).all()
+
+
+def test_gat_heads_must_divide_hidden():
+    cfg = dataclasses.replace(_cfg(), gnn_heads=5)  # d_ff=16 not divisible
+    with pytest.raises(ValueError, match="divisible"):
+        gnn_api.gnn_init(cfg, jax.random.PRNGKey(0))
+
+
+def test_registry_has_gat():
+    assert "gat" in gnn_api.list_archs()
+    spec = gnn_api.get_arch("gat")
+    assert spec.default_agg == "runtime"
+    assert spec.needs_self_loops
+
+
+# ------------------------------------------------------------ sync serving
+def test_gat_served_sync_matches_reference_and_caches(graph):
+    cfg = _cfg()
+    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    cold = eng.infer(graph, graph.features)
+    yref = np.asarray(
+        gnn_api.gnn_reference(cfg, eng.params, graph, jnp.asarray(graph.features))
+    )
+    assert _rel(cold.outputs, yref) < 0.08
+    assert not cold.cache_hit and eng.stats["planner_calls"] == 1
+    # warm: structure-keyed — attention changes nothing about the plan
+    warm = eng.infer(graph, graph.features)
+    assert warm.cache_hit
+    assert warm.plan_ms == 0.0
+    assert eng.stats["planner_calls"] == 1  # no planner after the cold request
+    np.testing.assert_array_equal(warm.outputs, cold.outputs)
+
+
+# ------------------------------------------------- async padded-union path
+def test_gat_async_padded_union_matches_reference(pool):
+    cfg = _cfg()
+    eng = GNNServeEngine(
+        cfg, key=jax.random.PRNGKey(0),
+        union_node_bucket=128, union_edge_bucket=1024,
+    )
+    assert eng.padded_unions
+    async_eng = AsyncGNNEngine(eng, window=len(pool))
+    for g in pool:
+        async_eng.submit(g, g.features)
+    got = async_eng.drain()
+    for g, r in zip(pool, got):
+        yref = np.asarray(
+            gnn_api.gnn_reference(cfg, eng.params, g, jnp.asarray(g.features))
+        )
+        assert r.outputs.shape == yref.shape
+        assert _rel(r.outputs, yref) < 0.08
+    # same composition again: member pieces + assembled plan all warm
+    planner_before = eng.stats["planner_calls"]
+    for g in pool:
+        async_eng.submit(g, g.features)
+    again = async_eng.drain()
+    assert eng.stats["planner_calls"] == planner_before
+    for a, b in zip(got, again):
+        np.testing.assert_array_equal(a.outputs, b.outputs)
+
+
+# ---------------------------------------------------------- sharded path
+@pytest.mark.parametrize("num_shards", [1, 2])
+def test_gat_served_sharded_matches_reference(graph, num_shards):
+    cfg = _cfg()
+    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(0), num_shards=num_shards)
+    r = eng.infer(graph, graph.features)
+    yref = np.asarray(
+        gnn_api.gnn_reference(cfg, eng.params, graph, jnp.asarray(graph.features))
+    )
+    assert r.num_shards == num_shards
+    assert _rel(r.outputs, yref) < 0.08
+    warm = eng.infer(graph, graph.features)
+    assert warm.cache_hit and warm.plan_ms == 0.0
+    np.testing.assert_array_equal(warm.outputs, r.outputs)
+
+
+def test_gat_sharded_matches_unsharded(graph):
+    cfg = _cfg()
+    solo = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    y1 = solo.infer(graph, graph.features).outputs
+    sharded = GNNServeEngine(cfg, solo.params, num_shards=2)
+    y2 = sharded.infer(graph, graph.features).outputs
+    np.testing.assert_allclose(y1, y2, atol=5e-5, rtol=1e-4)
+
+
+# ------------------------------------------------------- out-of-core path
+def test_gat_served_outofcore_bitwise(graph):
+    """GAT streams through the FTE (attention needs dense projections, so
+    only transform sees the store); outputs stay bitwise-identical."""
+    cfg = _cfg()
+    ref_eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    ref = ref_eng.infer(graph, graph.features)
+    assert not ref.streamed
+    eng = GNNServeEngine(
+        cfg, ref_eng.params,
+        feature_budget_bytes=graph.features.nbytes // 4,
+        feature_chunk_rows=32,
+    )
+    r = eng.infer(graph, graph.features)
+    assert r.streamed
+    np.testing.assert_array_equal(r.outputs, ref.outputs)

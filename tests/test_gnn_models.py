@@ -1,4 +1,4 @@
-"""GCN / GIN / GraphSAGE through the arch registry vs dense references."""
+"""GCN / GIN / GraphSAGE / GAT through the arch registry vs dense references."""
 from __future__ import annotations
 
 import dataclasses
@@ -13,7 +13,7 @@ from repro.core import AmpleEngine, EngineConfig
 from repro.graphs import make_dataset
 from repro.models.gnn import api as gnn_api
 
-ARCHS = ["gcn", "gin", "sage"]
+ARCHS = ["gcn", "gin", "sage", "gat"]
 
 
 def _cfg(arch, *, precision="mixed"):
@@ -104,14 +104,15 @@ def test_gcn_permutation_equivariance(base_graph):
 
 
 def test_registry_lists_paper_archs():
-    assert set(gnn_api.list_archs()) >= {"gcn", "gin", "sage"}
+    assert set(gnn_api.list_archs()) >= {"gcn", "gin", "sage", "gat"}
     with pytest.raises(KeyError, match="unknown GNN arch"):
-        gnn_api.get_arch("gat")
+        gnn_api.get_arch("transformer")
 
 
 def test_agg_mode_defaults_and_override():
     assert gnn_api.agg_mode(_cfg("gcn")) == "gcn"
     assert gnn_api.agg_mode(_cfg("gin")) == "sum"
     assert gnn_api.agg_mode(_cfg("sage")) == "mean"
+    assert gnn_api.agg_mode(_cfg("gat")) == "runtime"
     cfg = dataclasses.replace(_cfg("gin"), gnn_agg="mean")
     assert gnn_api.agg_mode(cfg) == "mean"

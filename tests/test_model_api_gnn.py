@@ -21,7 +21,7 @@ from repro.models.gnn import api as gnn_api
 from repro.graphs import disjoint_union, make_dataset
 from repro.serve.gnn_engine import GNNRequest, GNNServeEngine
 
-ARCHS = ["gcn", "gin", "sage"]
+ARCHS = ["gcn", "gin", "sage", "gat"]
 
 
 def _cfg(arch, *, precision="float"):

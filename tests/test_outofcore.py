@@ -242,7 +242,7 @@ def test_engine_transform_streamed_bitwise():
 
 
 # -------------------------------------------------- serve-level end-to-end
-@pytest.mark.parametrize("arch", ["gcn", "gin", "sage"])
+@pytest.mark.parametrize("arch", ["gcn", "gin", "sage", "gat"])
 def test_served_outofcore_bitwise_identical(arch):
     """The acceptance guarantee: streamed serving == in-memory serving, bit
     for bit, for every arch with mixed precision on, across two budgets
@@ -264,11 +264,12 @@ def test_served_outofcore_bitwise_identical(arch):
         assert r.bytes_streamed > 0
         info = eng.cache_info()
         assert info["streamed_requests"] == 1
-        if arch != "sage":
+        if arch not in ("sage", "gat"):
             # gcn/gin aggregate the store through the chunk cache; the tiny
             # budget must have forced eviction (misses beyond one cold pass).
-            # sage's φ streams chunk-blocked through the FTE instead — no
-            # cache, so only bytes_streamed is meaningful there.
+            # sage's φ (and gat's attention projection) stream chunk-blocked
+            # through the FTE instead — no cache, so only bytes_streamed is
+            # meaningful there.
             assert info["chunk_misses"] > (700 // 64 + 1)
         # warm repeat stays bitwise too (static per-plan calibration)
         r2 = eng.infer(g, g.features)
@@ -428,3 +429,56 @@ def test_sim_prefetch_depth_zero_is_historical_timing():
     a = simulate(g, feature_dim=128, cfg=SimConfig())
     b = simulate(g, feature_dim=128, cfg=SimConfig(prefetch_depth=0))
     assert a.cycles == b.cycles
+
+
+# ------------------------------- warm streamed requests: plan bytes stay home
+def test_warm_streamed_aggregate_reuploads_zero_plan_bytes():
+    """The instruction stream (per-tile coeff/seg/scatter arrays + lane
+    offsets) is plan-static: the cold streamed call uploads it once into the
+    engine's device cache; warm calls move feature chunks only."""
+    g = _graph(n=500, deg=5.0, seed=2, dim=16)
+    eng = AmpleEngine(g, EngineConfig(edges_per_tile=64, mixed_precision=True))
+    store = FeatureStore.from_array(g.features, chunk_rows=64)
+    cold = StreamedFeatures(store, store.nbytes // 4)
+    y1 = np.asarray(eng.aggregate(cold, mode="sum"))
+    assert cold.stats.instr_bytes > 0
+    warm = StreamedFeatures(store, store.nbytes // 4)
+    y2 = np.asarray(eng.aggregate(warm, mode="sum"))
+    assert warm.stats.instr_bytes == 0  # zero plan bytes re-uploaded
+    assert warm.stats.bytes_streamed > 0  # features still stream
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_warm_streamed_serve_reuploads_zero_plan_bytes():
+    """Serve-level regression: a warm streamed request's telemetry shows
+    zero instruction-stream bytes (ROADMAP PR-4 follow-on)."""
+    cfg = get_config("ample-gcn", reduced=True)
+    g = make_dataset("cora", max_nodes=600, max_feature_dim=cfg.d_model, seed=0)
+    eng = GNNServeEngine(
+        cfg, feature_budget_bytes=g.features.nbytes // 4,
+        feature_chunk_rows=64, key=jax.random.PRNGKey(0),
+    )
+    r1 = eng.infer(g, g.features)
+    assert r1.streamed
+    assert eng._last_stream.instr_bytes > 0
+    r2 = eng.infer(g, g.features)
+    assert r2.streamed and r2.cache_hit
+    assert eng._last_stream.instr_bytes == 0
+    np.testing.assert_array_equal(r1.outputs, r2.outputs)
+
+
+def test_direct_prefetcher_still_accounts_instr_bytes():
+    """Without an engine-owned device tile cache (direct ChunkPrefetcher
+    use), per-call plan uploads keep being charged — the accounting only
+    moves when the cache actually exists."""
+    g = _graph(n=300, deg=4.0, seed=1, dim=8)
+    store = FeatureStore.from_array(g.features, chunk_rows=64)
+    plan = build_edge_tile_plan(g, edges_per_tile=64)
+    schedule = build_chunk_schedule(plan, store.chunk_rows)
+    stats = StreamStats()
+    pf = ChunkPrefetcher(
+        store, schedule, stream="f32",
+        budget_bytes=store.chunk_bytes_f32 * 2, stats=stats,
+    )
+    pf.aggregate(plan).block_until_ready()
+    assert stats.instr_bytes > 0

@@ -1,0 +1,315 @@
+"""Runtime edge coefficients: the edge_ids indirection and its invariants.
+
+The tentpole contract: per-edge coefficients are no longer baked into compiled
+plans — tile plans carry a structural ``edge_ids`` map (int32[T, E], -1 on
+padding lanes) and a runtime vector scatters through it at request time.
+Under test:
+
+  * ``edge_ids`` relabelling invariants — a solo plan's valid lanes are a
+    permutation of the graph's edge set; ``concat_tile_plans`` relabels member
+    edge ids into a permutation of the union's member edges; shard plans slice
+    a permutation of the global edge set; padding lanes are -1 everywhere.
+  * Scatter equivalence — a random coefficient vector scattered through a
+    union plan equals the member-sliced vectors scattered through each member
+    plan (bitwise, per member block).
+  * Losslessness — runtime-coeff GCN is **bitwise identical** to static-coeff
+    GCN when fed the precomputed ``aggregation_coefficients`` vector (the
+    acceptance criterion proving the indirection refactor changes nothing).
+  * ``edge_softmax`` — the tile-driven destination-segment softmax matches a
+    dense per-destination softmax, single-plan and sharded.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, st
+
+from repro.core.aggregation import tile_edge_coeff, to_device_plan
+from repro.core.message_passing import (
+    AmpleEngine,
+    EngineConfig,
+    aggregation_coefficients,
+    assemble_union_plan,
+    compile_plans,
+    compile_sharded_plans,
+)
+from repro.core.scheduler import build_edge_tile_plan, concat_tile_plans
+from repro.distributed.graph_shard import ShardedAmpleEngine
+from repro.graphs import disjoint_union
+from repro.graphs.csr import add_self_loops
+from repro.graphs.datasets import make_dataset, make_lognormal_graph
+
+
+def _valid_edge_ids(plan) -> np.ndarray:
+    """Edge ids on valid lanes (coeff != 0), flattened."""
+    return plan.edge_ids[plan.coeff != 0]
+
+
+# ----------------------------------------------------- edge_ids invariants
+@given(
+    n=st.integers(2, 80),
+    md=st.floats(1.0, 10.0),
+    ept=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 1000),
+)
+def test_edge_ids_are_edge_permutation(n, md, ept, seed):
+    g = make_lognormal_graph(n, md, seed=seed)
+    plan = build_edge_tile_plan(g, edges_per_tile=ept)
+    valid = _valid_edge_ids(plan)
+    assert sorted(valid.tolist()) == list(range(g.num_edges))
+    # padding lanes are exactly the coeff-0 lanes, and carry -1
+    assert (plan.edge_ids[plan.coeff == 0] == -1).all()
+    # each lane's edge id names the edge whose source the lane gathers
+    t, e = plan.gather_idx.shape
+    for ti in range(t):
+        sel = plan.edge_ids[ti] >= 0
+        np.testing.assert_array_equal(
+            g.indices[plan.edge_ids[ti][sel]], plan.gather_idx[ti][sel]
+        )
+
+
+@given(seed=st.integers(0, 200), min_tiles=st.sampled_from([0, 16]))
+def test_concat_edge_ids_permute_member_edges(seed, min_tiles):
+    """Union relabelling invariant: valid union lanes are a permutation of
+    the members' (offset) edge sets; padding lanes stay -1."""
+    a = make_lognormal_graph(30, 4.0, seed=seed)
+    b = make_lognormal_graph(20, 3.0, seed=seed + 1)
+    pa = build_edge_tile_plan(a, edges_per_tile=32)
+    pb = build_edge_tile_plan(b, edges_per_tile=32)
+    cat = concat_tile_plans(
+        [pa, pb],
+        [0, a.num_nodes],
+        num_nodes=a.num_nodes + b.num_nodes,
+        min_tiles=min_tiles,
+        edge_offsets=[0, a.num_edges],
+    )
+    valid = _valid_edge_ids(cat)
+    assert sorted(valid.tolist()) == list(range(a.num_edges + b.num_edges))
+    assert (cat.edge_ids[cat.coeff == 0] == -1).all()
+
+
+def test_concat_without_edge_offsets_opts_out():
+    a = make_lognormal_graph(20, 3.0, seed=0)
+    pa = build_edge_tile_plan(a, edges_per_tile=32)
+    cat = concat_tile_plans([pa], [0], num_nodes=a.num_nodes)
+    assert (cat.edge_ids == -1).all()
+
+
+@pytest.mark.parametrize("num_shards", [2, 3])
+def test_shard_plans_slice_edge_permutation(num_shards):
+    """Shard slicing invariant: each shard's local edge ids + its edge_range
+    offset tile the global edge set exactly once across shards."""
+    g = make_lognormal_graph(120, 5.0, seed=7)
+    splan = compile_sharded_plans(
+        g, EngineConfig(edges_per_tile=32), num_shards=num_shards,
+        modes=("runtime",),
+    )
+    global_ids = []
+    for sp in splan.shards:
+        e_lo, e_hi = sp.shard.edge_range
+        local = np.concatenate(
+            [
+                _valid_edge_ids(p)
+                for p in sp.plan.mode_plans["runtime"].values()
+            ]
+        )
+        assert sorted(local.tolist()) == list(range(e_hi - e_lo))
+        global_ids.append(local + e_lo)
+    got = np.sort(np.concatenate(global_ids))
+    np.testing.assert_array_equal(got, np.arange(g.num_edges))
+
+
+def test_union_scatter_equals_member_scatter():
+    """Scattering a random vector through the assembled union plan equals
+    scattering member slices through each member plan — bitwise, both at the
+    tile level and through the aggregation output blocks."""
+    members = [make_lognormal_graph(25 + 7 * s, 4.0, seed=s) for s in range(3)]
+    cfg = EngineConfig(edges_per_tile=32, mixed_precision=False)
+    plans = [compile_plans(m, cfg, modes=("runtime",)) for m in members]
+    union = disjoint_union(list(members), pad_num_nodes=96)
+    uplan = assemble_union_plan(plans, union, cfg=cfg, edge_bucket=256)
+
+    rng = np.random.default_rng(0)
+    c = rng.uniform(0.5, 2.0, union.num_edges).astype(np.float32)
+    # tile-level: every valid union lane reads c[edge id]; padding reads 0
+    up = uplan.mode_plans["runtime"]["float"]
+    scattered = np.asarray(tile_edge_coeff(to_device_plan(up), jnp.asarray(c)))
+    expect = np.where(up.edge_ids >= 0, c[np.clip(up.edge_ids, 0, None)], 0.0)
+    np.testing.assert_array_equal(scattered, expect)
+
+    # block-level: union aggregate == member aggregates, bitwise per block
+    dim = 8
+    xs = [
+        rng.standard_normal((m.num_nodes, dim)).astype(np.float32)
+        for m in members
+    ]
+    x_u = np.concatenate(
+        xs + [np.zeros((union.num_nodes - sum(m.num_nodes for m in members), dim),
+                       np.float32)]
+    )
+    u_eng = AmpleEngine(union, plan=uplan)
+    y_u = np.asarray(
+        u_eng.aggregate(jnp.asarray(x_u), mode="runtime", edge_coeff=jnp.asarray(c))
+    )
+    e_off = 0
+    n_off = 0
+    for m, p, x in zip(members, plans, xs):
+        eng = AmpleEngine(m, plan=p)
+        y = np.asarray(
+            eng.aggregate(
+                jnp.asarray(x), mode="runtime",
+                edge_coeff=jnp.asarray(c[e_off : e_off + m.num_edges]),
+            )
+        )
+        np.testing.assert_array_equal(y_u[n_off : n_off + m.num_nodes], y)
+        e_off += m.num_edges
+        n_off += m.num_nodes
+    # padding rows stay exactly zero
+    assert (y_u[n_off:] == 0).all()
+
+
+# ------------------------------------------------ losslessness (acceptance)
+@pytest.mark.parametrize("mixed", [False, True])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_runtime_gcn_bitwise_equals_static_gcn(mixed, use_kernel):
+    """Acceptance: feeding the precomputed GCN normalisation vector through
+    the runtime path reproduces the static-coeff plan bit for bit (plans in
+    both modes pack identically; 1.0 * c == c in f32)."""
+    g = add_self_loops(make_dataset("citeseer", max_nodes=150, max_feature_dim=16, seed=3))
+    eng = AmpleEngine(
+        g,
+        EngineConfig(
+            edges_per_tile=64, mixed_precision=mixed, use_kernel=use_kernel
+        ),
+    )
+    x = jnp.asarray(g.features)
+    c = jnp.asarray(aggregation_coefficients(g, "gcn"))
+    y_static = np.asarray(eng.aggregate(x, mode="gcn"))
+    y_runtime = np.asarray(eng.aggregate(x, mode="runtime", edge_coeff=c))
+    np.testing.assert_array_equal(y_static, y_runtime)
+
+
+def test_runtime_gcn_bitwise_sharded():
+    g = add_self_loops(make_dataset("citeseer", max_nodes=150, max_feature_dim=16, seed=3))
+    x = jnp.asarray(g.features)
+    c = jnp.asarray(aggregation_coefficients(g, "gcn"))
+    splan = compile_sharded_plans(
+        g, EngineConfig(edges_per_tile=64), num_shards=2,
+        modes=("gcn", "runtime"),
+    )
+    eng = ShardedAmpleEngine(g, splan)
+    y_static = np.asarray(eng.aggregate(x, mode="gcn"))
+    y_runtime = np.asarray(eng.aggregate(x, mode="runtime", edge_coeff=c))
+    np.testing.assert_array_equal(y_static, y_runtime)
+
+
+def test_edge_coeff_shape_validated():
+    g = make_lognormal_graph(40, 3.0, seed=1)
+    eng = AmpleEngine(g, EngineConfig(edges_per_tile=32))
+    x = jnp.zeros((g.num_nodes, 4), jnp.float32)
+    with pytest.raises(ValueError, match="edge_coeff must be"):
+        eng.aggregate(x, mode="runtime", edge_coeff=jnp.zeros(3))
+
+
+# ------------------------------------------------------------ edge_softmax
+def _dense_edge_softmax(g, scores):
+    """Per-destination softmax over the CSR edge list (oracle)."""
+    out = np.zeros_like(scores)
+    for i in range(g.num_nodes):
+        lo, hi = int(g.indptr[i]), int(g.indptr[i + 1])
+        if lo == hi:
+            continue
+        s = scores[lo:hi].astype(np.float64)
+        e = np.exp(s - s.max())
+        out[lo:hi] = (e / e.sum()).astype(np.float32)
+    return out
+
+
+@pytest.mark.parametrize("mixed", [False, True])
+def test_edge_softmax_matches_dense(mixed):
+    g = make_lognormal_graph(100, 5.0, seed=2)
+    eng = AmpleEngine(g, EngineConfig(edges_per_tile=32, mixed_precision=mixed))
+    rng = np.random.default_rng(0)
+    scores = rng.standard_normal(g.num_edges).astype(np.float32)
+    alpha = np.asarray(eng.edge_softmax(jnp.asarray(scores)))
+    ref = _dense_edge_softmax(g, scores)
+    np.testing.assert_allclose(alpha, ref, atol=1e-5, rtol=1e-5)
+    # softmax sums to 1 per destination with in-edges
+    deg = g.degrees
+    sums = np.add.reduceat(alpha, g.indptr[:-1][deg > 0])
+    np.testing.assert_allclose(sums, 1.0, atol=1e-5)
+
+
+def test_edge_softmax_sharded_matches_unsharded():
+    g = make_lognormal_graph(120, 5.0, seed=4)
+    rng = np.random.default_rng(1)
+    scores = jnp.asarray(rng.standard_normal(g.num_edges).astype(np.float32))
+    solo = AmpleEngine(g, EngineConfig(edges_per_tile=32))
+    splan = compile_sharded_plans(
+        g, EngineConfig(edges_per_tile=32), num_shards=3, modes=("runtime",)
+    )
+    sharded = ShardedAmpleEngine(g, splan)
+    np.testing.assert_allclose(
+        np.asarray(solo.edge_softmax(scores)),
+        np.asarray(sharded.edge_softmax(scores)),
+        atol=1e-6, rtol=1e-6,
+    )
+
+
+def test_runtime_coeff_rejects_plans_without_edge_ids():
+    """Plans persisted before the indirection load with all-(-1) edge_ids;
+    scattering through them would silently zero every coefficient — the
+    engine must refuse loudly instead."""
+    import dataclasses as dc
+
+    g = make_lognormal_graph(40, 3.0, seed=1)
+    plan = compile_plans(
+        g, EngineConfig(edges_per_tile=32, mixed_precision=False),
+        modes=("runtime",),
+    )
+    stripped = {
+        m: {
+            t: dc.replace(p, edge_ids=np.full_like(p.edge_ids, -1))
+            for t, p in tp.items()
+        }
+        for m, tp in plan.mode_plans.items()
+    }
+    old = dc.replace(plan, mode_plans=stripped)
+    eng = AmpleEngine(g, plan=old)
+    x = jnp.zeros((g.num_nodes, 4), jnp.float32)
+    with pytest.raises(ValueError, match="edge-id indirection"):
+        eng.aggregate(x, mode="runtime", edge_coeff=jnp.ones(g.num_edges))
+    with pytest.raises(ValueError, match="edge-id indirection"):
+        eng.edge_softmax(jnp.zeros(g.num_edges))
+    # static-coeff serving of the same plan keeps working
+    assert np.asarray(eng.aggregate(x, mode="runtime")).shape == x.shape
+
+
+def test_runtime_coeff_rejects_partially_legacy_union():
+    """A union assembled from one pre-indirection (all -1) member and one
+    fresh member must be refused too — the legacy member's lanes would be
+    silently zeroed while the check saw live ids on the fresh member."""
+    import dataclasses as dc
+
+    a = make_lognormal_graph(25, 3.0, seed=0)
+    b = make_lognormal_graph(20, 3.0, seed=1)
+    cfg = EngineConfig(edges_per_tile=32, mixed_precision=False)
+    pa = compile_plans(a, cfg, modes=("runtime",))
+    pb = compile_plans(b, cfg, modes=("runtime",))
+    stripped = dc.replace(
+        pa,
+        mode_plans={
+            m: {
+                t: dc.replace(p, edge_ids=np.full_like(p.edge_ids, -1))
+                for t, p in tp.items()
+            }
+            for m, tp in pa.mode_plans.items()
+        },
+    )
+    union = disjoint_union([a, b])
+    uplan = assemble_union_plan([stripped, pb], union, cfg=cfg)
+    eng = AmpleEngine(union, plan=uplan)
+    x = jnp.zeros((union.num_nodes, 4), jnp.float32)
+    with pytest.raises(ValueError, match="edge-id indirection"):
+        eng.aggregate(x, mode="runtime", edge_coeff=jnp.ones(union.num_edges))
