@@ -522,6 +522,173 @@ def bench_prefetch_calibration(quick: bool) -> None:
 
 
 # --------------------------------------------- MoE event-driven dispatch
+# --------------- multi-tenant serving front: priorities, SLOs, fair shares
+def bench_tenancy(quick: bool) -> None:
+    """Offered-load sweep through the multi-tenant router (serve/tenancy):
+    tenant mixes x SLO targets. The rows CI uploads as BENCH_tenancy.json:
+    (1) best-effort alone = the capacity baseline; (2) a high-priority gold
+    trickle against a saturating best-effort backlog, sweeping gold's SLO
+    target — gold's p50/p99 and SLO hit rate, best effort's throughput as a
+    fraction of its DWRR fair share (capacity x its unconsumed node
+    fraction; the acceptance bar is >= 0.9); (3) a 1:2:4-weighted
+    three-tenant backlog — measured node shares vs the weight vector; (4)
+    token-bucket admission control under 4x over-rate offered load."""
+    import jax
+
+    from repro.configs.base import get_config
+    from repro.graphs.datasets import make_dataset
+    from repro.serve.async_gnn import AsyncGNNEngine
+    from repro.serve.tenancy import RateLimitExceeded, TenantRouter
+    from repro.serve.gnn_engine import GNNServeEngine
+
+    cfg = get_config("ample-gcn", reduced=True)
+    base = 120 if quick else 400
+    pool = [
+        make_dataset("cora", max_nodes=base + 13 * s,
+                     max_feature_dim=cfg.d_model, seed=s)
+        for s in range(5)
+    ]
+    eng = GNNServeEngine(
+        cfg,
+        key=jax.random.PRNGKey(0),
+        union_node_bucket=256 if quick else 1024,
+        union_edge_bucket=2048 if quick else 8192,
+    )
+    for g in pool:  # warm member plans + jit
+        eng.infer(g, g.features)
+
+    window = 4
+    n_be = 24 if quick else 80
+    n_gold = 6 if quick else 16
+    be_reqs = [pool[i % len(pool)] for i in range(n_be)]
+    be_nodes = sum(g.num_nodes for g in be_reqs)
+
+    def fresh_router(**tenants):
+        r = TenantRouter(AsyncGNNEngine(eng, window=window))
+        for name, kw in tenants.items():
+            r.add_tenant(name, **kw)
+        return r
+
+    # (1) best-effort alone: the capacity baseline (warm run measured).
+    fresh_router(be={}).serve([("be", g, g.features) for g in be_reqs])
+    r_alone = fresh_router(be={})
+    t0 = time.perf_counter()
+    r_alone.serve([("be", g, g.features) for g in be_reqs])
+    alone_s = time.perf_counter() - t0
+    alone_node_tput = be_nodes / alone_s
+    emit(
+        "tenancy_be_alone", alone_s * 1e6 / n_be,
+        f"requests={n_be};throughput_rps={n_be / alone_s:.1f};"
+        f"node_throughput={alone_node_tput:.0f};windows={r_alone.stats['windows']};"
+        f"mode=baseline",
+    )
+
+    # (2) gold trickle vs saturating best-effort backlog, sweeping SLO.
+    stride = max(1, (n_be // window) // n_gold)  # gold cadence in windows
+
+    def run_mixed(slo_ms):
+        router = fresh_router(
+            gold={"priority": 1, "slo_ms": slo_ms},
+            be={},
+        )
+        for g in be_reqs:
+            router.submit("be", g, g.features)
+        gi = 0
+        t0 = time.perf_counter()
+        while router.pending or gi < n_gold:
+            if gi < n_gold and (
+                router.stats["windows"] >= gi * stride or not router.pending
+            ):
+                g = pool[gi % len(pool)]
+                router.submit("gold", g, g.features)
+                gi += 1
+                continue
+            router.step(flush=True)
+        return router, time.perf_counter() - t0
+
+    run_mixed(100.0)  # warm this scenario's window compositions (jit + plans)
+    for slo_ms in ((100.0,) if quick else (50.0, 100.0, 200.0)):
+        router, mixed_s = run_mixed(slo_ms)
+        snap = router.snapshot()["tenants"]
+        gold, be = snap["gold"], snap["be"]
+        gold_frac = gold["completed_nodes"] / (
+            gold["completed_nodes"] + be["completed_nodes"]
+        )
+        be_node_tput = be["completed_nodes"] / mixed_s
+        # DWRR fair share: gold is a trickle (never backlogged), so work
+        # conservation hands best effort everything gold didn't consume.
+        fair_share = alone_node_tput * (1.0 - gold_frac)
+        lat = gold["latency_ms"]
+        emit(
+            f"tenancy_mixed_slo{int(slo_ms)}", mixed_s * 1e6 / (n_be + n_gold),
+            f"gold_p50_ms={lat['p50']:.2f};gold_p99_ms={lat['p99']:.2f};"
+            f"slo_ms={slo_ms:.0f};slo_hit_rate={gold['slo_hit_rate']:.3f};"
+            f"gold_queue_p99_ms={gold['queue_wait_ms']['p99']:.2f};"
+            f"be_node_throughput={be_node_tput:.0f};"
+            f"be_fair_share_frac={be_node_tput / fair_share:.3f};"
+            f"gold_node_frac={gold_frac:.3f};windows={router.stats['windows']};"
+            f"mode=priority-slo",
+        )
+
+    # (3) weighted contention: three saturating tenants at weights 1:2:4.
+    weights = {"w1": 1.0, "w2": 2.0, "w4": 4.0}
+    per_tenant = 12 if quick else 32
+
+    def run_weighted():
+        router = fresh_router(**{t: {"weight": w} for t, w in weights.items()})
+        for t in weights:
+            for i in range(per_tenant):
+                g = pool[i % len(pool)]
+                router.submit(t, g, g.features)
+        t0 = time.perf_counter()
+        router.drain()
+        return router, time.perf_counter() - t0
+
+    run_weighted()  # warm
+    router, contended_s = run_weighted()
+    snap = router.snapshot()["tenants"]
+    # Share over the contended phase: every tenant backlogged from the
+    # start, so first-half windows are the weight-driven regime (the tail
+    # drains lighter tenants' leftovers work-conservingly).
+    first_half = list(router.window_log)[: len(router.window_log) // 2]
+    served = {t: 0 for t in weights}
+    for w in first_half:
+        for tenant, _seq in w:
+            served[tenant] += 1
+    total_served = max(sum(served.values()), 1)
+    wsum = sum(weights.values())
+    shares = ";".join(
+        f"{t}_share={served[t] / total_served:.3f}"
+        f"(want={weights[t] / wsum:.3f})"
+        for t in weights
+    )
+    max_err = max(
+        abs(served[t] / total_served - weights[t] / wsum) for t in weights
+    )
+    emit(
+        "tenancy_weighted_shares", contended_s * 1e6 / (3 * per_tenant),
+        f"{shares};max_share_error={max_err:.3f};"
+        f"windows={router.stats['windows']};mode=dwrr-weights",
+    )
+
+    # (4) admission control: 4x over-rate offered load hits the bucket.
+    router = fresh_router(limited={"rate_rps": 200.0, "burst": float(n_be // 4)})
+    admitted = rejected = 0
+    for g in be_reqs:  # burst-dominated: bucket drains mid-stream
+        try:
+            router.submit("limited", g, g.features)
+            admitted += 1
+        except RateLimitExceeded:
+            rejected += 1
+    router.drain()
+    emit(
+        "tenancy_rate_limit", 0.0,
+        f"offered={n_be};admitted={admitted};rejected={rejected};"
+        f"rejected_telemetry={router.snapshot()['tenants']['limited']['rejected']};"
+        f"mode=token-bucket",
+    )
+
+
 def bench_moe_dispatch(quick: bool) -> None:
     import jax
     import jax.numpy as jnp
@@ -586,6 +753,7 @@ BENCHES = [
     bench_sharded_serve,
     bench_outofcore,
     bench_prefetch_calibration,
+    bench_tenancy,
     bench_moe_dispatch,
     bench_kernels,
 ]

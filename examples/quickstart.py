@@ -136,6 +136,33 @@ def main():
           f"{gat.stats['planner_calls']}, bitwise warm repeat: "
           f"{bool((g_cold.outputs == g_warm.outputs).all())})")
 
+    # 9. Multi-tenant serving: the TenantRouter fronts the async engine with
+    #    per-tenant queues, token-bucket rate limits and deficit-weighted
+    #    round-robin admission — a high-priority "gold" tenant rides ahead
+    #    of a best-effort backlog (and may preempt held windows) while DWRR
+    #    weights keep best effort at its fair share of node volume. Every
+    #    completion streams into per-tenant telemetry (p50/p99 latency,
+    #    queue wait, SLO hit rate) with O(1) memory histograms.
+    from repro.serve.tenancy import TenantRouter
+
+    router = TenantRouter(async_eng)  # wrap the async engine from section 6
+    router.add_tenant("gold", weight=4.0, priority=1, slo_ms=2_000.0)
+    router.add_tenant("batch", weight=1.0)
+    small = [make_dataset("cora", max_nodes=n, max_feature_dim=cfg.d_model,
+                          seed=n) for n in (40, 60, 80)]
+    for s in small * 2:                       # saturating best-effort load
+        router.submit("batch", s, s.features)
+    vip = router.submit("gold", small[0], small[0].features)
+    vip.result()                              # drives the DWRR loop
+    router.drain()
+    snap = router.snapshot()["tenants"]
+    for name in ("gold", "batch"):
+        t = snap[name]
+        print(f"tenant {name}: done={t['completed']} "
+              f"p99={t['latency_ms']['p99']:.1f} ms "
+              f"queue_p99={t['queue_wait_ms']['p99']:.1f} ms "
+              f"slo_hit_rate={t['slo_hit_rate']:.2f}")
+
 
 if __name__ == "__main__":
     main()

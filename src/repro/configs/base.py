@@ -91,6 +91,10 @@ class ModelConfig:
     # open until the oldest queued request has waited this long, then admits
     # whatever arrived (0 = historical behaviour: admit immediately).
     gnn_window_timeout_ms: float = 0.0
+    # Bounded requeue-on-failure: a micro-batch window may fail execution
+    # this many times before its tickets are completed exceptionally (error
+    # attached) instead of being requeued at the head again.
+    gnn_window_retries: int = 3
     # Out-of-core serving (memory/feature_store.py + memory/prefetcher.py):
     # requests whose feature matrix exceeds the budget keep features host-
     # resident and stream them chunk-wise (bitwise-identical outputs);

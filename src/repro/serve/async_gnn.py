@@ -34,6 +34,7 @@ same admitted composition.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence
@@ -47,27 +48,52 @@ __all__ = ["GNNTicket", "AsyncGNNEngine"]
 
 @dataclasses.dataclass
 class GNNTicket:
-    """A submitted request's handle: pending until its micro-batch ran."""
+    """A submitted request's handle: pending until its micro-batch ran.
+
+    Completion is signalled through a ``threading.Event``: a caller blocked
+    in ``result()`` wakes the moment its window executes — whoever drives the
+    loop — instead of sleeping out a held window's full deadline remainder.
+    A ticket completes either with a ``response`` or, when its window
+    exhausted the engine's execution retries, with the ``error`` attached
+    (``result()`` re-raises it).
+    """
 
     seq: int  # admission order, assigned by submit()
     request: GNNRequest
     response: Optional[GNNResponse] = None
     arrival: float = 0.0  # time.monotonic() at submit; drives the SLO close
+    error: Optional[BaseException] = None  # terminal failure, attached after
+    # the window's execution retries were exhausted (see window_retries)
+    failures: int = 0  # executions of this ticket's window that raised
     _engine: Optional["AsyncGNNEngine"] = dataclasses.field(
         default=None, repr=False, compare=False
+    )
+    _event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False
     )
 
     @property
     def done(self) -> bool:
-        return self.response is not None
+        return self.response is not None or self.error is not None
 
-    def result(self) -> GNNResponse:
+    def _complete(self, response: Optional[GNNResponse] = None,
+                  error: Optional[BaseException] = None) -> None:
+        self.response = response
+        self.error = error
+        self._event.set()
+
+    def result(self, timeout: Optional[float] = None) -> GNNResponse:
         """The response; drives the owning engine's loop until completion.
 
-        With a ``window_timeout_ms`` configured, a partially filled window is
-        held open for late arrivals — this call sleeps out the remaining
-        deadline (nothing else can admit meanwhile) and then steps again.
+        With a ``window_timeout_ms`` configured, a partially filled window
+        is held open for late arrivals — this call waits out the remaining
+        deadline on the completion event (so a concurrent driver executing
+        the window wakes it immediately, it never oversleeps) and then steps
+        again. ``timeout`` bounds the total wait in seconds
+        (``TimeoutError`` when exceeded); a ticket whose window exhausted
+        its execution retries re-raises the attached error.
         """
+        deadline = None if timeout is None else time.monotonic() + timeout
         while not self.done:
             if self._engine is None:
                 raise RuntimeError(
@@ -76,13 +102,26 @@ class GNNTicket:
                 )
             if self._engine.step():
                 continue
+            if self.done:  # a concurrent driver completed us mid-step
+                break
             wait = self._engine._deadline_wait()
             if wait is None:
                 raise RuntimeError(
                     f"ticket {self.seq} is pending but its engine has no "
                     "admissible work — was it detached?"
                 )
-            time.sleep(wait)
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"ticket {self.seq} still pending after {timeout}s"
+                    )
+                wait = min(wait, remaining)
+            if wait > 0:
+                # Event, not sleep: wakes the instant the window executes.
+                self._event.wait(wait)
+        if self.error is not None:
+            raise self.error
         return self.response
 
 
@@ -108,6 +147,13 @@ class AsyncGNNEngine:
         oldest queued request has waited this long, at which point the
         partial window admits at the deadline. Defaults to
         ``cfg.gnn_window_timeout_ms``. ``drain`` always flushes.
+    window_retries: how many times one ticket's window may fail execution
+        before the ticket is **failed** — the error is attached and
+        ``result()`` re-raises it — instead of being requeued again.
+        Failures 1..N-1 requeue the window at the queue head (retryable,
+        the error propagates to the loop driver); failure N completes the
+        tickets exceptionally so a poisoned window can never wedge the
+        queue forever. Defaults to ``cfg.gnn_window_retries``.
     """
 
     def __init__(
@@ -118,6 +164,7 @@ class AsyncGNNEngine:
         window: Optional[int] = None,
         max_batch_nodes: Optional[int] = None,
         window_timeout_ms: Optional[float] = None,
+        window_retries: Optional[int] = None,
         **engine_kwargs,
     ):
         if isinstance(engine, GNNServeEngine):
@@ -147,9 +194,21 @@ class AsyncGNNEngine:
         if wt < 0:
             raise ValueError("window_timeout_ms must be >= 0")
         self.window_timeout_ms = float(wt)
+        wr = (
+            self.engine.cfg.gnn_window_retries
+            if window_retries is None
+            else window_retries
+        )
+        if wr < 1:
+            raise ValueError("window_retries must be >= 1")
+        self.window_retries = int(wr)
         self._queue: Deque[GNNTicket] = deque()
         self._seq = 0
         self._held_head: Optional[int] = None  # seq of the last held window head
+        # Serializes the event-loop tick: result() may be driven from several
+        # waiter threads at once; only one executes a window at a time, the
+        # rest wake on their ticket's completion event.
+        self._drive_lock = threading.RLock()
         self.stats: Dict[str, int] = {
             "submitted": 0,
             "completed": 0,
@@ -157,22 +216,33 @@ class AsyncGNNEngine:
             "max_queue_depth": 0,
             "held_windows": 0,  # partial windows held open for late arrivals
             "deadline_closes": 0,  # partial windows admitted at the deadline
+            "window_failures": 0,  # executions that raised (requeued or fatal)
+            "failed_tickets": 0,  # tickets completed exceptionally (retries out)
         }
 
     # ------------------------------------------------------------ admission
-    def submit(self, graph: Graph, features, *, arch: str = "") -> GNNTicket:
+    def submit(
+        self, graph: Graph, features, *, arch: str = "",
+        arrival: Optional[float] = None,
+    ) -> GNNTicket:
         """Admit one request into the queue; returns its ticket immediately.
 
         Validation happens here, at the admission boundary: a mismatched
         feature matrix or an empty graph raises now, before the request can
-        poison a union batch other members are riding in.
+        poison a union batch other members are riding in. ``arrival`` lets
+        an upstream front (the tenancy router) carry its own admission
+        timestamp through, so ``queue_ms`` covers the full wait from the
+        moment the caller handed the request over, not just this queue.
         """
         arch = self.engine._arch(arch)
         features = self.engine._validate_request(graph, features)
+        at = time.monotonic() if arrival is None else float(arrival)
         ticket = GNNTicket(
             seq=self._seq,
-            request=GNNRequest(graph=graph, features=features, arch=arch),
-            arrival=time.monotonic(),
+            request=GNNRequest(
+                graph=graph, features=features, arch=arch, admitted_at=at
+            ),
+            arrival=at,
             _engine=self,
         )
         self._seq += 1
@@ -256,28 +326,51 @@ class AsyncGNNEngine:
         device call — so everything the synchronous engine guarantees
         (per-member Degree-Quant tags, plan/size-class caching, bitwise
         warm repeats) holds per micro-batch.
+
+        Execution failure is **bounded** by ``window_retries``: the first
+        N-1 failures requeue the window at the queue head (in order) and
+        re-raise, so the driver observes a retryable fault; the Nth failure
+        completes every ticket exceptionally (error attached, events set)
+        and returns them — a poisoned window fails loudly instead of
+        re-raising to the loop driver forever.
         """
-        batch = self._admit(flush=flush)
-        if not batch:
-            return []
-        try:
-            responses = self.engine.infer_batch([t.request for t in batch])
-        except Exception:
-            # Never strand admitted tickets: put the window back at the queue
-            # head in order, so the failure propagates to whoever is driving
-            # the loop while every request stays observable and retryable.
-            self._queue.extendleft(reversed(batch))
-            raise
-        self.stats["steps"] += 1
-        for ticket, resp in zip(batch, responses):
-            ticket.response = resp
-        self.stats["completed"] += len(batch)
-        return batch
+        with self._drive_lock:
+            batch = self._admit(flush=flush)
+            if not batch:
+                return []
+            try:
+                responses = self.engine.infer_batch([t.request for t in batch])
+            except Exception as exc:
+                self.stats["window_failures"] += 1
+                for t in batch:
+                    t.failures += 1
+                if batch[0].failures >= self.window_retries:
+                    # Retries exhausted: fail the window's tickets instead of
+                    # wedging the queue. They complete (done == True) with
+                    # the error attached; result() re-raises it.
+                    for t in batch:
+                        t._complete(error=exc)
+                    self.stats["failed_tickets"] += len(batch)
+                    return batch
+                # Never strand admitted tickets: put the window back at the
+                # queue head in order, so the failure propagates to whoever
+                # is driving the loop while every request stays observable
+                # and retryable.
+                self._queue.extendleft(reversed(batch))
+                raise
+            self.stats["steps"] += 1
+            for ticket, resp in zip(batch, responses):
+                ticket._complete(response=resp)
+            self.stats["completed"] += len(batch)
+            return batch
 
     def drain(self) -> List[GNNResponse]:
         """Run the loop until the queue is empty; responses in admission
         order. Flushes held partial windows — drain is the shutdown path,
-        so nothing waits out a deadline here."""
+        so nothing waits out a deadline here. A ticket that exhausted its
+        execution retries contributes ``None`` (its error is attached to
+        the ticket itself); transient failures below the retry bound
+        propagate as exceptions exactly like ``step``."""
         done: List[GNNTicket] = []
         while self._queue:
             done.extend(self.step(flush=True))

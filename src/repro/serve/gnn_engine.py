@@ -61,6 +61,9 @@ class GNNRequest:
     graph: Graph
     features: np.ndarray  # f32[N, D]
     arch: str = ""  # "" -> the engine config's arch
+    admitted_at: float = 0.0  # time.monotonic() at admission; 0 = unqueued.
+    # Set by queueing fronts (AsyncGNNEngine.submit, the tenancy router) so
+    # the response's queue_ms attributes wait separately from compute.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +78,11 @@ class GNNResponse:
     # amortized per-request figure)
     num_shards: int = 1  # shards the plan executed over (1 = unsharded path)
     batch_size: int = 1  # members in the union device call that produced this
+    queue_ms: float = 0.0  # admission -> execution-start wait. 0.0 for
+    # requests that never queued (direct sync calls without admitted_at);
+    # on the async/tenancy paths this is the time the request spent waiting
+    # for its micro-batch window, so SLO attribution can separate queueing
+    # (scheduler's fault) from plan_ms + run_ms (compute's fault).
     # Out-of-core telemetry (all zero on the in-memory path). Like run_ms,
     # these describe the WHOLE device call: every member of one streamed
     # union batch reports the same bytes_streamed — read
@@ -678,12 +686,23 @@ class GNNServeEngine:
             "prefetch_overlap": s.prefetch_overlap,
         }
 
-    def infer(self, graph: Graph, features, *, arch: str = "") -> GNNResponse:
+    @staticmethod
+    def _queue_ms(admitted_at: float, exec_start: float) -> float:
+        """Admission→execution wait; 0.0 for requests that never queued."""
+        if admitted_at <= 0.0:
+            return 0.0
+        return max(exec_start - admitted_at, 0.0) * 1e3
+
+    def infer(
+        self, graph: Graph, features, *, arch: str = "", admitted_at: float = 0.0
+    ) -> GNNResponse:
         """Serve one request; plans come from the LRU cache when warm.
 
         With padded unions enabled the request is served as a batch of one —
         its member plan piece then pre-warms every future batch containing
-        this structure.
+        this structure. ``admitted_at`` (a ``time.monotonic()`` stamp) marks
+        when the request was admitted upstream; the response's ``queue_ms``
+        reports the wait between then and execution start.
         """
         arch = self._arch(arch)
         # The store-cache identity is the CALLER's object: validation may
@@ -691,6 +710,7 @@ class GNNServeEngine:
         # derived array would rebuild the store on every warm request.
         original = features
         features = self._validate_request(graph, features)
+        queue_ms = self._queue_ms(admitted_at, time.monotonic())
         if self.padded_unions:
             prepared, plan, engine, hit, plan_ms = self._plan_for_padded([graph], arch)
             features = self._pad_features(features, prepared.num_nodes)
@@ -709,6 +729,7 @@ class GNNServeEngine:
             plan_ms=plan_ms,
             run_ms=run_ms,
             num_shards=getattr(plan, "num_shards", 1),
+            queue_ms=queue_ms,
             **self._stream_fields(),
         )
 
@@ -737,6 +758,8 @@ class GNNServeEngine:
         for r in requests[1:]:
             self._arch(r.arch)  # every request must match this engine's arch
         feats = [self._validate_request(r.graph, r.features) for r in requests]
+        exec_start = time.monotonic()
+        queue_waits = [self._queue_ms(r.admitted_at, exec_start) for r in requests]
         members = [r.graph for r in requests]
         prepared, plan, engine, hit, plan_ms = self._plan_for_batch(members, arch)
         features = self._pad_features(np.concatenate(feats, axis=0), prepared.num_nodes)
@@ -752,7 +775,7 @@ class GNNServeEngine:
         out: List[GNNResponse] = []
         start = 0
         stream_fields = self._stream_fields()
-        for r in requests:
+        for r, q_ms in zip(requests, queue_waits):
             stop = start + r.graph.num_nodes
             out.append(
                 GNNResponse(
@@ -763,6 +786,7 @@ class GNNServeEngine:
                     run_ms=run_ms,
                     num_shards=getattr(plan, "num_shards", 1),
                     batch_size=len(requests),
+                    queue_ms=q_ms,
                     **stream_fields,
                 )
             )

@@ -415,3 +415,141 @@ def test_timeout_budget_saturated_window_admits_immediately(pool):
     done = async_eng.step()  # no minute-long hold
     assert len(done) == 1
     assert async_eng.stats["held_windows"] == 0
+
+
+# ------------------------------------- event-based completion + timeouts
+def test_result_timeout_raises_on_held_window(pool):
+    """result(timeout=...) bounds the total wait instead of sleeping out a
+    long window deadline, and the ticket stays pending (not lost)."""
+    eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(0))
+    async_eng = AsyncGNNEngine(eng, window=4, window_timeout_ms=60_000.0)
+    t = async_eng.submit(pool[0], pool[0].features)
+    with pytest.raises(TimeoutError, match="still pending"):
+        t.result(timeout=0.05)
+    assert not t.done and async_eng.pending == 1
+    assert async_eng.drain()[0] is not None  # shutdown path still completes it
+
+
+def test_result_wakes_on_event_from_concurrent_driver(pool):
+    """A waiter blocked in result() on a held window wakes the moment some
+    OTHER thread executes the window — via the completion event, not by
+    sleeping out the full deadline remainder."""
+    import threading
+    import time
+
+    eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(0))
+    async_eng = AsyncGNNEngine(eng, window=4, window_timeout_ms=30_000.0)
+    async_eng.step()  # warm nothing; just ensure engine constructed
+    t = async_eng.submit(pool[0], pool[0].features)
+    got = {}
+
+    def waiter():
+        t0 = time.monotonic()
+        got["resp"] = t.result(timeout=20.0)
+        got["waited_s"] = time.monotonic() - t0
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    time.sleep(0.15)  # the waiter is now event-waiting on the held window
+    async_eng.step(flush=True)  # a concurrent driver executes the window
+    th.join(timeout=10.0)
+    assert not th.is_alive()
+    assert got["resp"] is not None and t.done
+    # woke promptly on the event: nowhere near the 30s window deadline
+    assert got["waited_s"] < 5.0
+
+
+def test_window_retries_exhaust_into_failed_tickets(pool, monkeypatch):
+    """A window that keeps failing is failed LOUDLY after window_retries
+    executions: tickets complete with the error attached (result re-raises)
+    instead of wedging the queue forever."""
+    eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(0))
+    async_eng = AsyncGNNEngine(eng, window=2, window_retries=3)
+    t1 = async_eng.submit(pool[0], pool[0].features)
+    t2 = async_eng.submit(pool[1], pool[1].features)
+
+    def always_fails(requests):
+        raise RuntimeError("poisoned window")
+
+    monkeypatch.setattr(eng, "infer_batch", always_fails)
+    for _ in range(2):  # failures 1..N-1: transient, requeued + raised
+        with pytest.raises(RuntimeError, match="poisoned"):
+            async_eng.step()
+    assert async_eng.pending == 2 and not t1.done
+    done = async_eng.step()  # failure N: tickets failed, no raise
+    assert [x.seq for x in done] == [t1.seq, t2.seq]
+    assert t1.done and t2.done and t1.response is None
+    assert isinstance(t1.error, RuntimeError)
+    with pytest.raises(RuntimeError, match="poisoned"):
+        t1.result()
+    assert async_eng.stats["window_failures"] == 3
+    assert async_eng.stats["failed_tickets"] == 2
+    assert async_eng.stats["completed"] == 0  # failures never count as served
+    assert async_eng.pending == 0  # nothing wedged in the queue
+
+
+def test_window_retries_default_from_config(pool):
+    cfg = dataclasses.replace(_cfg("gcn"), gnn_window_retries=5)
+    async_eng = AsyncGNNEngine(cfg, key=jax.random.PRNGKey(0))
+    assert async_eng.window_retries == 5
+    with pytest.raises(ValueError, match="window_retries"):
+        AsyncGNNEngine(cfg, window_retries=0, key=jax.random.PRNGKey(0))
+
+
+def test_failed_tickets_contribute_none_to_drain(pool, monkeypatch):
+    eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(0))
+    async_eng = AsyncGNNEngine(eng, window=1, window_retries=1)
+    t = async_eng.submit(pool[0], pool[0].features)
+    monkeypatch.setattr(
+        eng, "infer_batch",
+        lambda reqs: (_ for _ in ()).throw(RuntimeError("dead")),
+    )
+    resps = async_eng.drain()  # retries=1: fails immediately, no raise
+    assert resps == [None] and t.error is not None
+
+
+# ----------------------------------------------------- queue_ms accounting
+def test_queue_ms_reported_on_async_path(pool):
+    """GNNResponse.queue_ms covers admission -> execution start: a request
+    that waited in the queue reports a wait of at least that long."""
+    import time
+
+    eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(0))
+    async_eng = AsyncGNNEngine(eng, window=2)
+    t1 = async_eng.submit(pool[0], pool[0].features)
+    time.sleep(0.03)
+    t2 = async_eng.submit(pool[1], pool[1].features)
+    r1, r2 = (t.result() for t in (t1, t2))
+    assert r1.queue_ms >= 25.0  # t1 sat in the queue while t2 arrived
+    assert r1.queue_ms > r2.queue_ms >= 0.0
+    # queue wait is wait, not compute: execution time is reported separately
+    assert r1.run_ms > 0.0
+
+
+def test_queue_ms_zero_on_direct_sync_calls(pool):
+    """Direct infer/infer_batch calls never queued: queue_ms is 0 unless the
+    caller stamps an admission time explicitly."""
+    eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(0))
+    assert eng.infer(pool[0], pool[0].features).queue_ms == 0.0
+    rs = eng.infer_batch(
+        [GNNRequest(graph=g, features=g.features) for g in pool[:2]]
+    )
+    assert all(r.queue_ms == 0.0 for r in rs)
+
+
+def test_queue_ms_honors_explicit_admission_stamp(pool):
+    """A queueing front (the tenancy router) can carry its own admission
+    timestamp through the sync path and get an honest end-to-end wait."""
+    import time
+
+    eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(0))
+    admitted_at = time.monotonic() - 0.2  # admitted 200ms ago upstream
+    r = eng.infer(pool[0], pool[0].features, admitted_at=admitted_at)
+    assert r.queue_ms >= 190.0
+    rs = eng.infer_batch([
+        GNNRequest(graph=pool[0], features=pool[0].features,
+                   admitted_at=admitted_at),
+        GNNRequest(graph=pool[1], features=pool[1].features),
+    ])
+    assert rs[0].queue_ms >= 190.0
+    assert rs[1].queue_ms == 0.0  # unstamped member stays at zero

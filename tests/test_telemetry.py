@@ -1,0 +1,168 @@
+"""Streaming telemetry: histogram quantiles vs the numpy oracle.
+
+The contract under test: ``StreamingHistogram`` holds O(1) memory yet reads
+back any percentile within its configured relative error of the exact sample
+quantile (numpy is the oracle), with exact min/max/mean/count riding along;
+``TenantTelemetry`` rolls per-tenant counters, SLO accounting and throughput
+deterministically (time is injectable).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.serve.telemetry import StreamingHistogram, TenantTelemetry
+
+
+def _oracle_tolerance(hist, true_value):
+    """|estimate - oracle| bound: one bucket width at the oracle's scale."""
+    return 2.0 * hist.rel_error * abs(true_value) + 1e-9
+
+
+# ---------------------------------------------------- histogram vs numpy
+@pytest.mark.parametrize(
+    "name,samples",
+    [
+        ("uniform", np.linspace(0.5, 500.0, 2_000)),
+        ("lognormal", np.exp(np.random.default_rng(0).normal(2.0, 1.0, 5_000))),
+        ("exponential", np.random.default_rng(1).exponential(30.0, 3_000)),
+        ("bimodal", np.concatenate([
+            np.random.default_rng(2).normal(5.0, 0.5, 1_500).clip(0.1),
+            np.random.default_rng(3).normal(800.0, 40.0, 1_500),
+        ])),
+        ("constant", np.full(100, 42.0)),
+        ("tiny", np.array([7.0, 3.0, 11.0])),
+    ],
+)
+@pytest.mark.parametrize("q", [0, 25, 50, 90, 99, 100])
+def test_percentile_matches_numpy_oracle(name, samples, q):
+    """Every quantile of every shape of distribution reads back within the
+    histogram's relative-error budget of the exact rank statistic."""
+    hist = StreamingHistogram()
+    for v in samples:
+        hist.record(v)
+    want = float(np.percentile(samples, q, method="lower"))
+    got = hist.percentile(q)
+    assert abs(got - want) <= _oracle_tolerance(hist, want)
+
+
+def test_exact_stats_ride_along():
+    samples = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0]
+    hist = StreamingHistogram()
+    for v in samples:
+        hist.record(v)
+    assert hist.count == len(samples)
+    assert hist.min == 1.0 and hist.max == 9.0
+    assert hist.mean == pytest.approx(np.mean(samples))
+    # extremes are exact, not bucket-approximate
+    assert hist.percentile(0) == 1.0
+    assert hist.percentile(100) == 9.0
+
+
+def test_out_of_range_values_clamp_into_end_buckets():
+    hist = StreamingHistogram(low=1.0, high=100.0)
+    for v in (1e-6, 0.5, 50.0, 1e6):
+        hist.record(v)
+    assert hist.count == 4
+    assert hist.min == 1e-6 and hist.max == 1e6  # exact despite clamping
+    assert hist.percentile(0) == 1e-6
+    assert hist.percentile(100) == 1e6
+    # interior quantiles stay inside the observed range
+    for q in (25, 50, 75):
+        assert hist.min <= hist.percentile(q) <= hist.max
+
+
+def test_empty_and_invalid_inputs():
+    hist = StreamingHistogram()
+    assert hist.percentile(50) == 0.0
+    assert hist.mean == 0.0
+    snap = hist.snapshot()
+    assert snap["count"] == 0 and snap["min"] == 0.0 and snap["max"] == 0.0
+    with pytest.raises(ValueError):
+        hist.record(math.nan)
+    with pytest.raises(ValueError):
+        hist.percentile(101)
+    with pytest.raises(ValueError):
+        StreamingHistogram(low=10.0, high=1.0)
+    with pytest.raises(ValueError):
+        StreamingHistogram(rel_error=0.0)
+
+
+def test_snapshot_keys():
+    hist = StreamingHistogram()
+    hist.record(10.0)
+    snap = hist.snapshot()
+    assert set(snap) == {"count", "mean", "min", "max", "p50", "p90", "p99"}
+    assert snap["count"] == 1 and snap["p50"] == pytest.approx(10.0, rel=0.06)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(
+        st.floats(min_value=1e-3, max_value=1e6, allow_nan=False,
+                  allow_infinity=False),
+        min_size=1, max_size=300,
+    ),
+    st.integers(min_value=0, max_value=100),
+)
+def test_percentile_error_is_bounded_property(samples, q):
+    """Property: for ANY sample list in range, the histogram quantile is
+    within one bucket width of numpy's rank statistic."""
+    hist = StreamingHistogram()
+    for v in samples:
+        hist.record(v)
+    want = float(np.percentile(samples, q, method="lower"))
+    got = hist.percentile(q)
+    assert abs(got - want) <= _oracle_tolerance(hist, want)
+    assert hist.min <= got <= hist.max
+
+
+# -------------------------------------------------------- tenant rollups
+def test_slo_accounting_and_counters():
+    tel = TenantTelemetry()
+    assert tel.record_completion("t", latency_ms=40.0, slo_ms=50.0) is True
+    assert tel.record_completion("t", latency_ms=60.0, slo_ms=50.0) is False
+    assert tel.record_completion("t", latency_ms=999.0) is True  # no SLO set
+    tel.record_rejected("t")
+    tel.record_preempted("t")
+    tel.record_failure("t")
+    snap = tel.tenant_snapshot("t")
+    assert snap["completed"] == 3
+    assert snap["slo_hits"] == 1 and snap["slo_violations"] == 1
+    assert snap["slo_hit_rate"] == pytest.approx(0.5)
+    assert snap["rejected"] == 1 and snap["preempted"] == 1
+    assert snap["failed"] == 1
+
+
+def test_throughput_is_deterministic_with_injected_time():
+    tel = TenantTelemetry()
+    tel.record_submitted("t", now=100.0)
+    for i in range(8):
+        tel.record_completion(
+            "t", latency_ms=10.0, nodes=50, now=100.0 + (i + 1)
+        )
+    snap = tel.tenant_snapshot("t")
+    assert snap["throughput_rps"] == pytest.approx(1.0)  # 8 done over 8s
+    assert snap["node_throughput"] == pytest.approx(50.0)
+    assert snap["completed_nodes"] == 400
+
+
+def test_snapshot_includes_idle_tenants_from_queue_depths():
+    tel = TenantTelemetry()
+    tel.record_completion("busy", latency_ms=5.0)
+    snap = tel.snapshot({"idle": 3, "busy": 1})
+    assert set(snap) == {"busy", "idle"}
+    assert snap["idle"]["completed"] == 0 and snap["idle"]["queue_depth"] == 3
+    assert snap["busy"]["queue_depth"] == 1
+    assert "idle" in tel and "never-seen" not in tel
+
+
+def test_queue_wait_histogram_is_separate_from_latency():
+    tel = TenantTelemetry()
+    tel.record_completion("t", latency_ms=100.0, queue_ms=30.0)
+    snap = tel.tenant_snapshot("t")
+    assert snap["latency_ms"]["p50"] == pytest.approx(100.0, rel=0.06)
+    assert snap["queue_wait_ms"]["p50"] == pytest.approx(30.0, rel=0.06)

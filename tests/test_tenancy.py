@@ -1,0 +1,375 @@
+"""Multi-tenant serving front: DWRR fairness, priority, preemption, parity.
+
+The contracts under test:
+
+* scheduling — DWRR grants each backlogged tenant its weight share of
+  admitted node-volume; priority classes fill first and may preempt strictly
+  lower classes out of a *staged* window; no tenant starves under
+  adversarial offered load (property test);
+* admission control — token-bucket rate limits reject at the door (counted,
+  never queued); unknown tenants raise;
+* parity — routing changes window composition only: routed outputs are
+  **bitwise** identical to driving ``AsyncGNNEngine`` directly (single
+  tenant) and to replaying the logged window compositions through a fresh
+  synchronous ``infer_batch`` (multi tenant).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs.base import get_config
+from repro.graphs import make_dataset
+from repro.serve.async_gnn import AsyncGNNEngine
+from repro.serve.gnn_engine import GNNRequest, GNNServeEngine
+from repro.serve.tenancy import (
+    RateLimitExceeded,
+    TenantRegistry,
+    TenantRouter,
+    TenantSpec,
+    TokenBucket,
+    UnknownTenant,
+)
+
+
+def _cfg():
+    return dataclasses.replace(
+        get_config("ample-gcn", reduced=True),
+        d_model=20, d_ff=12, vocab_size=6, gnn_edges_per_tile=64,
+    )
+
+
+@pytest.fixture(scope="module")
+def serve_engine():
+    return GNNServeEngine(_cfg(), key=jax.random.PRNGKey(7))
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return {
+        n: make_dataset("cora", max_nodes=n, max_feature_dim=20, seed=n)
+        for n in (20, 30, 45, 60, 75)
+    }
+
+
+def _router(serve_engine, *, window=4, max_batch_nodes=None, hold_ms=0.0,
+            **router_kwargs):
+    return TenantRouter(
+        AsyncGNNEngine(serve_engine, window=window,
+                       max_batch_nodes=max_batch_nodes),
+        hold_ms=hold_ms, **router_kwargs,
+    )
+
+
+def _schedule_only(router):
+    """Drive the DWRR fill without executing: pop staged windows until the
+    queues drain. Pure scheduling — no engine work, so property tests and
+    fairness counts run in microseconds."""
+    windows = []
+    guard = 0
+    while any(router._queues.values()) or router._staged:
+        router._fill_staged()
+        staged, router._staged, router._staged_nodes = router._staged, [], 0
+        assert staged, "fill made no progress with backlog present"
+        windows.append(staged)
+        guard += 1
+        assert guard <= router.stats["submitted"] + 1, "scheduler looping"
+    return windows
+
+
+# ----------------------------------------------------------- registry/bucket
+def test_registry_validation():
+    reg = TenantRegistry(TenantSpec("a"))
+    with pytest.raises(ValueError):
+        reg.add("a")  # duplicate
+    with pytest.raises(UnknownTenant):
+        reg.get("ghost")
+    with pytest.raises(ValueError):
+        TenantSpec("bad", weight=0.0)
+    with pytest.raises(ValueError):
+        TenantSpec("")
+    reg.add("b", weight=2.0, priority=1, rate_rps=5.0, slo_ms=50.0)
+    assert set(reg.names) == {"a", "b"} and len(reg) == 2 and "b" in reg
+
+
+def test_token_bucket_is_deterministic():
+    b = TokenBucket(rate=2.0, burst=2.0)
+    assert b.try_acquire(now=1000.0)
+    assert b.try_acquire(now=1000.0)
+    assert not b.try_acquire(now=1000.0)  # burst exhausted
+    assert not b.try_acquire(now=1000.4)  # 0.8 tokens: still short
+    assert b.try_acquire(now=1000.6)  # 1.2 tokens accrued
+    unlimited = TokenBucket(rate=0.0, burst=0.0)
+    assert all(unlimited.try_acquire(now=0.0) for _ in range(100))
+
+
+def test_rate_limit_rejects_at_the_door(serve_engine, pool):
+    router = _router(serve_engine)
+    router.add_tenant("limited", rate_rps=0.001, burst=2.0)
+    g = pool[20]
+    admitted, rejected = 0, 0
+    for _ in range(5):
+        try:
+            router.submit("limited", g, g.features)
+            admitted += 1
+        except RateLimitExceeded:
+            rejected += 1
+    assert (admitted, rejected) == (2, 3)
+    assert router.stats["rejected"] == 3
+    assert router.pending == 2  # rejected requests consume no queue space
+    snap = router.snapshot()
+    assert snap["tenants"]["limited"]["rejected"] == 3
+    router.drain()
+
+
+def test_unknown_tenant_raises(serve_engine, pool):
+    router = _router(serve_engine)
+    with pytest.raises(UnknownTenant):
+        router.submit("ghost", pool[20], pool[20].features)
+
+
+# ------------------------------------------------------------------ DWRR
+def test_dwrr_weight_share(serve_engine, pool):
+    """Two equally-sized backlogged tenants at weight 3:1 split each full
+    window 3:1 — the textbook DWRR allocation."""
+    router = _router(serve_engine, window=4)
+    router.add_tenant("heavy", weight=3.0)
+    router.add_tenant("light", weight=1.0)
+    g = pool[30]
+    for _ in range(12):
+        router.submit("heavy", g, g.features)
+    for _ in range(12):
+        router.submit("light", g, g.features)
+    windows = _schedule_only(router)
+    # While both are backlogged every window is heavy x3 + light x1.
+    for w in windows[:4]:
+        counts = {t: sum(1 for rt in w if rt.tenant == t)
+                  for t in ("heavy", "light")}
+        assert counts == {"heavy": 3, "light": 1}
+    # Work conservation: once heavy drains, light gets whole windows.
+    assert sum(1 for rt in windows[-2][0:] if rt.tenant == "light") == 4
+
+
+def test_dwrr_fairness_is_node_volume_not_request_count(serve_engine, pool):
+    """A tenant of big graphs and a tenant of small ones at equal weight get
+    equal *node* volume — the small-graph tenant admits more requests."""
+    router = _router(serve_engine, window=8)
+    router.add_tenant("big")
+    router.add_tenant("small")
+    for _ in range(8):
+        router.submit("big", pool[60], pool[60].features)
+    for _ in range(24):
+        router.submit("small", pool[20], pool[20].features)
+    windows = _schedule_only(router)
+    both_backlogged = windows[0]
+    nodes = {t: sum(rt.graph.num_nodes for rt in both_backlogged
+                    if rt.tenant == t) for t in ("big", "small")}
+    assert nodes["big"] > 0 and nodes["small"] > 0
+    ratio = nodes["big"] / nodes["small"]
+    assert 0.5 <= ratio <= 2.0  # equal share within one-request granularity
+
+
+def test_priority_class_fills_first(serve_engine, pool):
+    """While a higher class is backlogged, it leads every window; the lower
+    class still rides (same weight => same volume: no starvation)."""
+    router = _router(serve_engine, window=4)
+    router.add_tenant("gold", priority=1)
+    router.add_tenant("be", priority=0)
+    g = pool[30]
+    for _ in range(8):
+        router.submit("be", g, g.features)
+    for _ in range(8):
+        router.submit("gold", g, g.features)
+    windows = _schedule_only(router)
+    while_both = [w for w in windows
+                  if {rt.tenant for rt in w} == {"gold", "be"}]
+    assert while_both, "classes never shared a window"
+    for w in while_both:
+        # Each DWRR round serves gold before best effort, so gold leads the
+        # window and leads every round's slot pair; equal weights still give
+        # both classes equal volume (priority is ordering, not capacity).
+        assert w[0].tenant == "gold"
+        gold_slots = [i for i, rt in enumerate(w) if rt.tenant == "gold"]
+        be_slots = [i for i, rt in enumerate(w) if rt.tenant == "be"]
+        assert min(gold_slots) < min(be_slots)
+        assert len(gold_slots) == len(be_slots)
+    # equal weights: best effort completed everything, in its own FIFO order
+    be_seqs = [rt.seq for w in windows for rt in w if rt.tenant == "be"]
+    assert be_seqs == sorted(be_seqs) and len(be_seqs) == 8
+
+
+# ------------------------------------------------------------- preemption
+def test_preemption_evicts_lower_class_from_held_window(serve_engine, pool):
+    """A gold arrival that cannot fit a held staged window bumps the
+    largest best-effort member back to its queue head; the victim is not
+    lost, not reordered within its tenant, and counted as preempted."""
+    router = _router(serve_engine, window=4, max_batch_nodes=120,
+                     hold_ms=60_000.0)
+    router.add_tenant("gold", priority=1)
+    router.add_tenant("be", priority=0)
+    t60 = router.submit("be", pool[60], pool[60].features)
+    t45 = router.submit("be", pool[45], pool[45].features)
+    assert router.step() == []  # partial window held for late arrivals
+    assert [rt.tenant for rt in router._staged] == ["be", "be"]
+    tg = router.submit("gold", pool[75], pool[75].features)  # 105+75 > 120
+    assert [(rt.tenant, rt.graph.num_nodes) for rt in router._staged] == [
+        ("be", 45), ("gold", 75)
+    ]
+    assert t60.preemptions == 1 and t45.preemptions == 0
+    assert router.stats["preempted"] == 1
+    done = router.drain()
+    assert [rt.seq for rt in done] == [t60.seq, t45.seq, tg.seq]
+    assert all(rt.response is not None for rt in done)
+    assert list(router.window_log) == [
+        (("be", t45.seq), ("gold", tg.seq)), (("be", t60.seq),)
+    ]
+    assert router.snapshot()["tenants"]["be"]["preempted"] == 1
+
+
+def test_no_preemption_within_a_class(serve_engine, pool):
+    """Equal-priority tenants never evict each other: fairness between them
+    is DWRR's job, not preemption's."""
+    router = _router(serve_engine, window=4, max_batch_nodes=120,
+                     hold_ms=60_000.0)
+    router.add_tenant("a", priority=1)
+    router.add_tenant("b", priority=1)
+    router.submit("a", pool[60], pool[60].features)
+    router.submit("a", pool[45], pool[45].features)
+    assert router.step() == []
+    router.submit("b", pool[75], pool[75].features)
+    assert [rt.tenant for rt in router._staged] == ["a", "a"]
+    assert router.stats["preempted"] == 0
+    router.drain()
+
+
+# ------------------------------------------------------------------ parity
+def test_single_tenant_routing_is_bitwise_direct_serving(pool):
+    """One tenant reduces DWRR to FIFO: the router composes exactly the
+    windows the bare engine would, and outputs are bitwise identical."""
+    graphs = [pool[60], pool[45], pool[75], pool[30]]
+    routed_eng = GNNServeEngine(_cfg(), key=jax.random.PRNGKey(7))
+    router = TenantRouter(AsyncGNNEngine(routed_eng, window=2))
+    router.add_tenant("solo")
+    for g in graphs:
+        router.submit("solo", g, g.features)
+    routed = router.drain()
+
+    direct_eng = GNNServeEngine(_cfg(), key=jax.random.PRNGKey(7))
+    direct = AsyncGNNEngine(direct_eng, window=2)
+    for g in graphs:
+        direct.submit(g, g.features)
+    want = direct.drain()
+
+    assert len(routed) == len(want) == len(graphs)
+    for rt, w in zip(routed, want):
+        np.testing.assert_array_equal(rt.response.outputs, w.outputs)
+        assert rt.response.fingerprint == w.fingerprint
+    assert [len(w) for w in router.window_log] == [2, 2]
+
+
+def test_multi_tenant_windows_replay_bitwise(pool):
+    """Every routed window is bitwise the synchronous ``infer_batch`` of
+    its logged composition — routing moved requests between windows but
+    never changed a number."""
+    routed_eng = GNNServeEngine(_cfg(), key=jax.random.PRNGKey(7))
+    router = TenantRouter(AsyncGNNEngine(routed_eng, window=3))
+    router.add_tenant("gold", weight=2.0, priority=1)
+    router.add_tenant("be")
+    tickets = {}
+    for g in (pool[60], pool[45], pool[30], pool[20]):
+        rt = router.submit("be", g, g.features)
+        tickets[rt.seq] = rt
+    for g in (pool[75], pool[30]):
+        rt = router.submit("gold", g, g.features)
+        tickets[rt.seq] = rt
+    router.drain()
+
+    replay_eng = GNNServeEngine(_cfg(), key=jax.random.PRNGKey(7))
+    assert router.window_log
+    for window in router.window_log:
+        members = [tickets[seq] for _, seq in window]
+        want = replay_eng.infer_batch([
+            GNNRequest(graph=rt.graph, features=rt.features, arch=rt.arch)
+            for rt in members
+        ])
+        for rt, w in zip(members, want):
+            np.testing.assert_array_equal(rt.response.outputs, w.outputs)
+            assert rt.response.fingerprint == w.fingerprint
+
+
+# ------------------------------------------------------- failure + timeout
+def test_routed_result_timeout_on_held_window(serve_engine, pool):
+    router = _router(serve_engine, hold_ms=60_000.0)
+    router.add_tenant("t")
+    rt = router.submit("t", pool[20], pool[20].features)
+    with pytest.raises(TimeoutError):
+        rt.result(timeout=0.05)
+    assert not rt.done  # timed out, not lost: still staged in the held window
+    router.drain()  # shutdown path flushes the hold
+    assert rt.done and rt.response is not None
+
+
+def test_failed_window_completes_routed_tickets_exceptionally(pool):
+    eng = GNNServeEngine(_cfg(), key=jax.random.PRNGKey(7))
+    boom = RuntimeError("device on fire")
+
+    def _explode(requests):
+        raise boom
+
+    eng.infer_batch = _explode
+    router = TenantRouter(AsyncGNNEngine(eng, window=2, window_retries=2))
+    router.add_tenant("t", slo_ms=10.0)
+    rt = router.submit("t", pool[20], pool[20].features)
+    with pytest.raises(RuntimeError):
+        router.step(flush=True)  # failure 1: transient, requeued + raised
+    assert not rt.done and router.pending == 1
+    done = router.step(flush=True)  # failure 2: retries out, ticket failed
+    assert done == [rt] and rt.done and rt.error is boom
+    with pytest.raises(RuntimeError, match="device on fire"):
+        rt.result()
+    assert router.stats["failed"] == 1
+    assert router.snapshot()["tenants"]["t"]["failed"] == 1
+    assert router.pending == 0
+
+
+# --------------------------------------------------- no-starvation property
+@settings(max_examples=40, deadline=None)
+@given(
+    stream=st.lists(st.integers(min_value=0, max_value=2),
+                    min_size=1, max_size=60),
+    weights=st.tuples(*[st.sampled_from([0.5, 1.0, 2.0, 4.0])] * 3),
+    priorities=st.tuples(*[st.integers(0, 2)] * 3),
+    sizes=st.tuples(*[st.sampled_from([20, 30, 45, 60, 75])] * 3),
+    window=st.integers(1, 6),
+    budget=st.sampled_from([None, 64, 128, 256]),
+)
+def test_no_tenant_starves_under_adversarial_load(
+    serve_engine, pool, stream, weights, priorities, sizes, window, budget
+):
+    """Property: for ANY tenant mix (weights, priorities, graph sizes), ANY
+    submission stream and ANY window/budget, the scheduler (1) terminates,
+    (2) admits every request exactly once, (3) preserves FIFO order within
+    each tenant, and (4) respects the window's slot and node budgets (an
+    oversized request may ride alone). Starvation would fail (1) or (2)."""
+    router = _router(serve_engine, window=window, max_batch_nodes=budget)
+    for i in range(3):
+        router.add_tenant(f"t{i}", weight=weights[i], priority=priorities[i])
+    submitted = []
+    for tenant_idx in stream:
+        g = pool[sizes[tenant_idx]]
+        submitted.append(router.submit(f"t{tenant_idx}", g, g.features))
+    windows = _schedule_only(router)
+
+    admitted = [rt.seq for w in windows for rt in w]
+    assert sorted(admitted) == [rt.seq for rt in submitted]  # (1) + (2)
+    for i in range(3):
+        seqs = [rt.seq for w in windows for rt in w if rt.tenant == f"t{i}"]
+        assert seqs == sorted(seqs)  # (3)
+    for w in windows:
+        assert 1 <= len(w) <= window  # (4a)
+        if budget is not None and len(w) > 1:
+            assert sum(rt.graph.num_nodes for rt in w) <= budget  # (4b)
