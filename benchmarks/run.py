@@ -280,6 +280,117 @@ def bench_runtime_coeff(quick: bool) -> None:
     )
 
 
+def bench_attention(quick: bool) -> None:
+    """Per-GAT-layer attention cost at fixed total width (H·dh = 64):
+    the retired looped-head baseline (H× softmax/aggregate passes) vs the
+    [E, H] head-vectorized jnp path vs the fused-kernel decomposition
+    (per-tile (m, l, a) + log-sum-exp combine; jnp oracle timed — the
+    Pallas launch itself targets TPU, interpret mode is not a timing).
+    Acceptance: vectorized ≥ 2x the looped baseline at H=4. Also times the
+    int8 FTE matmul on the load-time repacked weight layout vs unpacked."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.message_passing import AmpleEngine, EngineConfig
+    from repro.graphs.csr import add_self_loops
+    from repro.graphs.datasets import make_dataset
+    from repro.kernels.segment_agg.ref import attend_tiles_ref
+
+    n = 2_000 if quick else 10_000
+    g = add_self_loops(
+        make_dataset("pubmed", max_nodes=n, max_feature_dim=64, seed=0)
+    )
+    eng = AmpleEngine(g, EngineConfig(mixed_precision=False))
+    rng = np.random.default_rng(0)
+    slope = 0.2
+
+    def looped(scores, z):
+        # the pre-PR per-head loop: H separate softmax + aggregate passes
+        outs = []
+        for h in range(scores.shape[1]):
+            sc = jax.nn.leaky_relu(scores[:, h], slope)
+            alpha = eng.edge_softmax(sc)
+            outs.append(
+                eng.aggregate(z[:, h], mode="runtime", edge_coeff=alpha)
+            )
+        return jnp.stack(outs, axis=1)
+
+    for heads in (2, 4, 8):
+        dh = 64 // heads
+        z = jnp.asarray(
+            rng.standard_normal((g.num_nodes, heads, dh)).astype(np.float32)
+        )
+        scores = jnp.asarray(
+            rng.standard_normal((g.num_edges, heads)).astype(np.float32)
+        )
+        looped(scores, z).block_until_ready()
+        eng.attention_aggregate(scores, z, leaky_slope=slope).block_until_ready()
+        us_loop = _time(
+            lambda: looped(scores, z).block_until_ready(), reps=5
+        )
+        us_vec = _time(
+            lambda: eng.attention_aggregate(
+                scores, z, leaky_slope=slope
+            ).block_until_ready(),
+            reps=5,
+        )
+        emit(
+            f"gat_attention_h{heads}", us_vec,
+            f"looped_us={us_loop:.1f};vectorized_us={us_vec:.1f};"
+            f"speedup_vs_looped={us_loop / us_vec:.2f}x;"
+            f"edges={g.num_edges};dh={dh}",
+        )
+        if heads == 4:
+            from repro.core.aggregation import tile_edge_coeff
+
+            plans = eng.plans("runtime")
+            p = plans["float"]
+            dp = eng._device_plans("runtime", plans, edge_ids=True)["float"]
+            sc_t = tile_edge_coeff(dp, scores, fill=-jnp.inf)
+            fused = jax.jit(
+                lambda z, sc_t: attend_tiles_ref(
+                    z, dp.gather_idx, sc_t, dp.coeff, dp.seg_ids,
+                    dp.out_node, num_nodes=g.num_nodes,
+                    segments_per_tile=p.segments_per_tile,
+                    leaky_slope=slope,
+                )
+            )
+            fused(z, sc_t).block_until_ready()
+            us_fused = _time(
+                lambda: fused(z, sc_t).block_until_ready(), reps=5
+            )
+            emit(
+                "gat_attention_fused_oracle_h4", us_fused,
+                f"looped_us={us_loop:.1f};"
+                f"speedup_vs_looped={us_loop / us_fused:.2f}x;"
+                f"tiles={p.num_tiles};one_launch_per_layer=true",
+            )
+
+    # int8 FTE: per-call pad/stride vs the load-time repacked tiling
+    # (bitwise-identical int32; interpret mode on CPU, layout cost only)
+    from repro.kernels.quant_matmul import ops as qm_ops
+
+    m, k, nn = (256, 128, 128) if quick else (1024, 256, 256)
+    a_q = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    w_q = jnp.asarray(rng.integers(-127, 128, (k, nn)), jnp.int8)
+    packed = qm_ops.repack_weight(w_q)
+    qm_ops.quant_matmul(a_q, w_q).block_until_ready()
+    qm_ops.quant_matmul_repacked(a_q, packed).block_until_ready()
+    us_unpacked = _time(
+        lambda: qm_ops.quant_matmul(a_q, w_q).block_until_ready(), reps=3
+    )
+    us_packed = _time(
+        lambda: qm_ops.quant_matmul_repacked(a_q, packed).block_until_ready(),
+        reps=3,
+    )
+    emit(
+        "fte_int8_repacked_matmul", us_packed,
+        f"unpacked_us={us_unpacked:.1f};"
+        f"speedup_vs_unpacked={us_unpacked / us_packed:.2f}x;"
+        f"m={m};k={k};n={nn};bitwise=true",
+    )
+
+
 # -------------------- gnn-serve continuous: event-driven offered load
 def bench_continuous_serve(quick: bool) -> None:
     """Offered-load serving: per-request ``infer`` vs one-shot ``infer_batch``
@@ -740,6 +851,28 @@ def bench_kernels(quick: bool) -> None:
     emit("kernel_segment_agg_oracle", us,
          f"tiles={plan.num_tiles};occupancy={plan.lane_occupancy:.3f}")
 
+    # fused segment-softmax (attention) kernel oracle: one tile scan does
+    # LeakyReLU → segment-max → exp → segment-sum → weighted aggregate
+    from repro.core.aggregation import tile_edge_coeff, to_device_plan
+    from repro.kernels.segment_agg.ref import attend_tiles_ref
+
+    h, dh = 4, 32
+    z = jnp.asarray(rng.standard_normal((1_000, h, dh)).astype(np.float32))
+    scores = jnp.asarray(
+        rng.standard_normal((g.num_edges, h)).astype(np.float32)
+    )
+    dp = to_device_plan(plan, with_edge_ids=True)
+    sc_t = tile_edge_coeff(dp, scores, fill=-jnp.inf)
+    us = _time(
+        lambda: attend_tiles_ref(
+            z, dp.gather_idx, sc_t, dp.coeff, dp.seg_ids, dp.out_node,
+            num_nodes=1_000, segments_per_tile=plan.segments_per_tile,
+            leaky_slope=0.2,
+        ).block_until_ready()
+    )
+    emit("kernel_segment_softmax_oracle", us,
+         f"tiles={plan.num_tiles};heads={h};dh={dh};fused=true")
+
 
 BENCHES = [
     table4_dq_ratios,
@@ -749,6 +882,7 @@ BENCHES = [
     bench_mixed_precision,
     bench_gnn_serve,
     bench_runtime_coeff,
+    bench_attention,
     bench_continuous_serve,
     bench_sharded_serve,
     bench_outofcore,

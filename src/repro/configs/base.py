@@ -82,6 +82,7 @@ class ModelConfig:
     gnn_precision: str = "mixed"  # mixed (Degree-Quant int8/float) | float
     gnn_edges_per_tile: int = 256  # event-driven tile width (AGE lanes)
     gnn_heads: int = 1  # attention heads (gat); hidden dims must divide by it
+    gnn_use_kernel: bool = False  # route AGE/FTE through the Pallas kernels
     gnn_num_shards: int = 1  # >1: partition-aware execution (edge-balanced shards)
     # Continuous-batching serve knobs (serve/async_gnn.py + GNNServeEngine):
     gnn_batch_window: int = 8  # max requests admitted per micro-batch union

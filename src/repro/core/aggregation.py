@@ -76,12 +76,17 @@ def to_device_plan(
 def tile_edge_coeff(
     dplan: DeviceTilePlan, edge_coeff: jnp.ndarray, *, fill: float = 0.0
 ) -> jnp.ndarray:
-    """Scatter a per-edge runtime vector into tile layout: f32/…[T, E].
+    """Scatter a per-edge runtime matrix into tile layout: f32/…[T, E(, H)].
 
     ``edge_coeff`` is indexed by graph edge position (the space
     ``EdgeTilePlan.edge_ids`` maps lanes into); padding lanes (edge id -1)
     read ``fill``. This is the runtime half of the coefficient indirection:
     the tile arrays stay structure-keyed while the values change per request.
+
+    ``edge_coeff`` may carry trailing dims — ``[E, H]`` for per-head
+    attention coefficients scatters every head in one gather, yielding the
+    ``[T, lanes, H]`` tile layout the vectorized softmax/aggregate passes
+    consume (the 1-D case is bitwise-unchanged).
     """
     if dplan.edge_ids is None:
         raise ValueError(
@@ -91,7 +96,7 @@ def tile_edge_coeff(
         )
     e = edge_coeff.shape[0]
     padded = jnp.concatenate(
-        [edge_coeff, jnp.full((1,), fill, edge_coeff.dtype)]
+        [edge_coeff, jnp.full((1,) + edge_coeff.shape[1:], fill, edge_coeff.dtype)]
     )
     idx = jnp.where(dplan.edge_ids < 0, e, dplan.edge_ids)
     return padded[idx]
@@ -119,13 +124,44 @@ def aggregate_edge_tiles(
     ``"runtime"`` mode carry static coeff 1 on every real lane, so the
     runtime vector takes effect verbatim there (``1.0 * c == c`` bitwise);
     padding lanes are 0 in both factors.
+
+    Multi-head layout: ``edge_coeff`` f32[E, H] with ``x`` f32[N, H, dh]
+    aggregates every head in ONE tile scan — per-head coefficients broadcast
+    over the head's feature slice, and each head's lane/segment reduction
+    order is identical to its solo 1-D run (bitwise per head on this path).
     """
     coeff = dplan.coeff
     if edge_coeff is not None:
-        coeff = coeff * tile_edge_coeff(dplan, edge_coeff)
+        tc = tile_edge_coeff(dplan, edge_coeff)  # [T, E] or [T, E, H]
+        coeff = coeff[..., None] * tc if tc.ndim == 3 else coeff * tc
     if use_kernel:
+        if coeff.ndim == 3:
+            from repro.kernels.segment_agg import attn_ops
+
+            return attn_ops.aggregate_tiles_mh(
+                x,
+                dplan.gather_idx,
+                coeff,
+                dplan.seg_ids,
+                dplan.out_node,
+                num_nodes=num_nodes,
+                segments_per_tile=segments_per_tile,
+            )
         from repro.kernels.segment_agg import ops as seg_ops
 
+        if x.ndim == 3:
+            # head-uniform coefficients: heads are just feature columns
+            n, h, dh = x.shape
+            flat = seg_ops.aggregate_tiles(
+                x.reshape(n, h * dh),
+                dplan.gather_idx,
+                coeff,
+                dplan.seg_ids,
+                dplan.out_node,
+                num_nodes=num_nodes,
+                segments_per_tile=segments_per_tile,
+            )
+            return flat.reshape(num_nodes, h, dh)
         return seg_ops.aggregate_tiles(
             x,
             dplan.gather_idx,
@@ -136,15 +172,15 @@ def aggregate_edge_tiles(
             segments_per_tile=segments_per_tile,
         )
 
-    d = x.shape[1]
-    out = jnp.zeros((num_nodes + 1, d), x.dtype)
+    out = jnp.zeros((num_nodes + 1,) + x.shape[1:], x.dtype)
 
     def body(out, tile):
         gather_idx, coeff, seg_ids, out_node = tile
-        gathered = x[gather_idx] * coeff[:, None]  # [E, D]
+        gathered = x[gather_idx]  # [E, D] or [E, H, dh]
+        cf = coeff.reshape(coeff.shape + (1,) * (gathered.ndim - coeff.ndim))
         partial_sums = jax.ops.segment_sum(
-            gathered, seg_ids, num_segments=segments_per_tile
-        )  # [S, D]
+            gathered * cf, seg_ids, num_segments=segments_per_tile
+        )  # [S, …]
         out = out.at[out_node].add(partial_sums)
         return out, None
 
@@ -224,9 +260,12 @@ def segment_max_edge_tiles(
     are scattered into tile layout through ``edge_ids`` (padding lanes read
     −inf), reduced per segment, and combined across split tiles by
     scatter-max — the partial-response mechanism with max in place of add.
+
+    ``scores`` may be f32[E, H]: all heads reduce in the same scan
+    (→ f32[N, H]), each head's column bitwise-equal to its solo 1-D pass.
     """
     sc = tile_edge_coeff(dplan, scores, fill=-jnp.inf)
-    out = jnp.full((num_nodes + 1,), -jnp.inf, scores.dtype)
+    out = jnp.full((num_nodes + 1,) + scores.shape[1:], -jnp.inf, scores.dtype)
 
     def body(out, tile):
         sc_t, seg_ids, out_node = tile
@@ -254,9 +293,11 @@ def edge_segment_sum_tiles(
     through ``edge_ids`` (padding lanes read 0) and accumulate exactly like
     the aggregation scan, so split nodes combine by the same partial-response
     scatter-add.
+
+    ``values`` may be f32[E, H] (→ f32[N, H], one scan for all heads).
     """
     v = tile_edge_coeff(dplan, values, fill=0.0)
-    out = jnp.zeros((num_nodes + 1,), values.dtype)
+    out = jnp.zeros((num_nodes + 1,) + values.shape[1:], values.dtype)
 
     def body(out, tile):
         v_t, seg_ids, out_node = tile
@@ -295,14 +336,15 @@ def aggregate_mixed_precision(
     per-plan-static and cacheable). ``edge_coeff`` is the runtime per-edge
     coefficient vector (graph edge space) both precision streams scatter
     through their ``edge_ids`` maps — each plan covers a disjoint destination
-    subset, so one vector feeds both.
+    subset, so one vector feeds both. A 2-D ``edge_coeff`` (f32[E, H]) with
+    ``x`` f32[N, H, dh] runs the multi-head layout through both streams.
     """
     device_plans = device_plans or {}
 
     def dplan(tag):
         return device_plans.get(tag) or to_device_plan(plans[tag])
 
-    out = jnp.zeros((num_nodes, x.shape[1]), jnp.float32)
+    out = jnp.zeros((num_nodes,) + x.shape[1:], jnp.float32)
     if "float" in plans:
         p = plans["float"]
         out = out + aggregate_edge_tiles(

@@ -28,10 +28,17 @@ from repro.core.aggregation import (
     aggregate_mixed_precision,
     edge_segment_sum_tiles,
     segment_max_edge_tiles,
+    tile_edge_coeff,
     to_device_plan,
 )
 from repro.core.degree_quant import DegreeQuantConfig, inference_precision_tags
-from repro.core.quantization import QuantParams, compute_scale_zp, quantize_per_channel
+from repro.core.quantization import (
+    QuantParams,
+    compute_scale_zp,
+    dequantize,
+    quantize,
+    quantize_per_channel,
+)
 from repro.core.transformation import (
     transform_dense,
     transform_int8,
@@ -848,7 +855,7 @@ class AmpleEngine:
             sf.stats.fallbacks += 1
             sf.stats.fallback_bytes += sf.nbytes
             return transform_dense(jnp.asarray(sf.store.dense()), w, b, activation)
-        w_q, w_qp = self._weight_q(w)
+        w_q, w_qp, _ = self._weight_q(w)
         a_qp = None
         ids = self.node_groups.get("int8")
         if self._forward_active and ids is not None and ids.size:
@@ -879,6 +886,10 @@ class AmpleEngine:
         plan's ``edge_ids`` map and multiplied with the static coefficients
         — the GAT attention path. The plan itself stays structure-keyed, so
         serving caches are untouched by per-request coefficient changes.
+
+        Multi-head: ``edge_coeff`` f32[E, H] with ``x`` f32[N, H, dh]
+        aggregates all heads in one tile scan (each head's column bitwise-
+        equal to its solo 1-D run on the jnp path).
         """
         if isinstance(x, _streamed_features_type()):
             if edge_coeff is not None:
@@ -891,10 +902,22 @@ class AmpleEngine:
         plans = self.plans(mode)
         if edge_coeff is not None:
             edge_coeff = jnp.asarray(edge_coeff, jnp.float32)
-            if edge_coeff.shape != (self.graph.num_edges,):
+            e = self.graph.num_edges
+            if not (
+                edge_coeff.shape == (e,)
+                or (edge_coeff.ndim == 2 and edge_coeff.shape[0] == e)
+            ):
                 raise ValueError(
-                    f"edge_coeff must be [{self.graph.num_edges}], got "
+                    f"edge_coeff must be [{e}] or [{e}, H], got "
                     f"{tuple(edge_coeff.shape)}"
+                )
+            if edge_coeff.ndim == 2 and (
+                x.ndim != 3 or x.shape[1] != edge_coeff.shape[1]
+            ):
+                raise ValueError(
+                    f"multi-head edge_coeff {tuple(edge_coeff.shape)} needs "
+                    f"x shaped [N, {edge_coeff.shape[1]}, dh], got "
+                    f"{tuple(x.shape)}"
                 )
             self._require_edge_ids(mode, plans)
         dplans = self._device_plans(mode, plans, edge_ids=edge_coeff is not None)
@@ -935,7 +958,7 @@ class AmpleEngine:
     def edge_softmax(
         self, scores: jnp.ndarray, *, mode: str = "runtime"
     ) -> jnp.ndarray:
-        """Destination-segment softmax of per-edge scores: f32[E].
+        """Destination-segment softmax of per-edge scores: f32[E(, H)].
 
         Runs over the same event-driven tiles as aggregation (per precision
         group, covering disjoint destination sets): a segment-max pass
@@ -945,18 +968,28 @@ class AmpleEngine:
         partial-response scatter-add. Nodes with no in-edges in the plan
         (size-class padding nodes) get max 0 / denominator 1, so the result
         is finite everywhere.
+
+        ``scores`` may be f32[E, H]: every head shares one pair of tile
+        scans and ONE destination-endpoint gather (``node_max[dst]`` /
+        ``denom[dst]`` broadcast over the head axis), where the per-head
+        loop paid both H times. Each head's column is bitwise-equal to its
+        solo 1-D call.
         """
         scores = jnp.asarray(scores, jnp.float32)
-        if scores.shape != (self.graph.num_edges,):
+        e = self.graph.num_edges
+        if not (
+            scores.shape == (e,)
+            or (scores.ndim == 2 and scores.shape[0] == e)
+        ):
             raise ValueError(
-                f"scores must be [{self.graph.num_edges}], got "
+                f"scores must be [{e}] or [{e}, H], got "
                 f"{tuple(scores.shape)}"
             )
         plans = self.plans(mode)
         self._require_edge_ids(mode, plans)
         dplans = self._device_plans(mode, plans, edge_ids=True)
         n = self.graph.num_nodes
-        node_max = jnp.full((n,), -jnp.inf, jnp.float32)
+        node_max = jnp.full((n,) + scores.shape[1:], -jnp.inf, jnp.float32)
         for tag, p in plans.items():
             node_max = jnp.maximum(
                 node_max,
@@ -969,8 +1002,9 @@ class AmpleEngine:
             )
         node_max = jnp.where(jnp.isfinite(node_max), node_max, 0.0)
         _, dst = self.edge_endpoints()
+        # One structural gather per pass, shared by all heads.
         ex = jnp.exp(scores - node_max[dst])
-        denom = jnp.zeros((n,), jnp.float32)
+        denom = jnp.zeros((n,) + scores.shape[1:], jnp.float32)
         for tag, p in plans.items():
             denom = denom + edge_segment_sum_tiles(
                 ex,
@@ -981,18 +1015,108 @@ class AmpleEngine:
         denom = jnp.where(denom > 0, denom, 1.0)
         return ex / denom[dst]
 
+    def attention_aggregate(
+        self,
+        scores: jnp.ndarray,
+        z: jnp.ndarray,
+        *,
+        mode: str = "runtime",
+        leaky_slope: float = 0.2,
+    ) -> jnp.ndarray:
+        """One GAT layer's attention: softmax(LeakyReLU(scores)) aggregate.
+
+        ``scores`` are the RAW per-edge logits f32[E, H] (pre-activation);
+        ``z`` the head-stacked projected embeddings f32[N, H, dh]. Returns
+        f32[N, H, dh].
+
+        With ``use_kernel`` off this decomposes into the vectorized jnp
+        passes (``edge_softmax`` + ``aggregate`` on the [E, H] layout — the
+        always-on oracle). With ``use_kernel`` on, each precision group runs
+        the fused Pallas kernel: LeakyReLU → tile-local segment-max → exp →
+        segment-sum → weighted aggregate in ONE tile scan, combined across
+        tiles by a flash-attention-style log-sum-exp rescale at the
+        partial-response scatter. Precision groups cover disjoint
+        destination nodes, so per-group softmax is exact; the fused path
+        matches the oracle to float tolerance (tile-grouped summation
+        re-associates), not bitwise.
+        """
+        if isinstance(z, _streamed_features_type()):
+            raise ValueError(
+                "attention requires dense embeddings; streamed features "
+                "cannot carry the per-edge softmax (compute z densely or "
+                "lift the feature budget)"
+            )
+        scores = jnp.asarray(scores, jnp.float32)
+        z = jnp.asarray(z, jnp.float32)
+        e, n = self.graph.num_edges, self.graph.num_nodes
+        if scores.ndim != 2 or scores.shape[0] != e:
+            raise ValueError(
+                f"scores must be [{e}, H], got {tuple(scores.shape)}"
+            )
+        h = scores.shape[1]
+        if z.ndim != 3 or z.shape[0] != n or z.shape[1] != h:
+            raise ValueError(
+                f"z must be [{n}, {h}, dh], got {tuple(z.shape)}"
+            )
+        if not self.cfg.use_kernel:
+            act = jax.nn.leaky_relu(scores, leaky_slope)
+            alpha = self.edge_softmax(act, mode=mode)
+            return self.aggregate(z, mode=mode, edge_coeff=alpha)
+
+        from repro.kernels.segment_agg import attn_ops
+
+        plans = self.plans(mode)
+        self._require_edge_ids(mode, plans)
+        dplans = self._device_plans(mode, plans, edge_ids=True)
+        qp = None
+        if self.cfg.mixed_precision and "int8" in plans:
+            qp = self._activation_qp(lambda: z, "agg")
+        out = jnp.zeros_like(z)
+        for tag, p in plans.items():
+            x = z
+            if tag == "int8" and self.cfg.mixed_precision:
+                x = dequantize(quantize(z, qp), qp)
+            dp = dplans[tag]
+            sc_t = tile_edge_coeff(dp, scores, fill=-jnp.inf)
+            out = out + attn_ops.attend_tiles(
+                x,
+                dp.gather_idx,
+                sc_t,
+                dp.coeff,
+                dp.seg_ids,
+                dp.out_node,
+                num_nodes=n,
+                segments_per_tile=p.segments_per_tile,
+                leaky_slope=leaky_slope,
+            )
+        return out
+
     # ----------------------------------------------------------------- FTE
     def _weight_q(self, w: jnp.ndarray):
+        """Per-weight quantization cache → (w_q, w_qp, w_packed).
+
+        ``w_packed`` is the load-time Marlin-style repack of ``w_q`` into the
+        Pallas matmul's native tile order — built once per weight, only when
+        the engine routes the FTE through the kernel (the jnp oracle never
+        reads it), so every warm transform hands the kernel its preferred
+        layout with zero per-call transpose.
+        """
         key = id(w)
         entry = self._wq_cache.get(key)
         if entry is None or entry[0] is not w:
-            entry = (w, *quantize_per_channel(w, axis=-1))
+            w_q, w_qp = quantize_per_channel(w, axis=-1)
+            packed = None
+            if self.cfg.use_kernel:
+                from repro.kernels.quant_matmul import ops as qm_ops
+
+                packed = qm_ops.repack_weight(w_q)
+            entry = (w, w_q, w_qp, packed)
             self._wq_cache[key] = entry
             while len(self._wq_cache) > self._WQ_CACHE_CAP:
                 self._wq_cache.popitem(last=False)
         else:
             self._wq_cache.move_to_end(key)
-        return entry[1], entry[2]
+        return entry[1], entry[2], entry[3]
 
     def transform(
         self,
@@ -1012,7 +1136,7 @@ class AmpleEngine:
             return self._transform_streamed(h, w, b, activation)
         if not self.cfg.mixed_precision:
             return transform_dense(h, w, b, activation)
-        w_q, w_qp = self._weight_q(w)
+        w_q, w_qp, w_packed = self._weight_q(w)
         a_qp = None
         ids = self.node_groups.get("int8")
         if self._forward_active and ids is not None and ids.size:
@@ -1029,6 +1153,7 @@ class AmpleEngine:
             w_qp=w_qp,
             a_qp=a_qp,
             use_kernel=self.cfg.use_kernel,
+            w_packed=w_packed,
         )
 
     # ------------------------------------------------------------- metrics

@@ -59,11 +59,16 @@ def transform_int8(
     activation: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
     a_qp: Optional[QuantParams] = None,
     use_kernel: bool = False,
+    w_packed=None,
 ) -> jnp.ndarray:
     """int8 FTE stream: symmetric-quantized activations × per-channel int8
     weights, int32 accumulate, float de-quant — the MXU int8 path.
 
     y ≈ (s_a s_w) · (h_q @ W_q), since both quantizations are symmetric (z=0).
+
+    ``w_packed`` is an optional ``kernels.quant_matmul.RepackedWeight`` (the
+    load-time Marlin-style tiling of ``w_q``); when given with ``use_kernel``
+    the matmul skips the per-call weight pad/stride — bitwise-identical int32.
     """
     if a_qp is None:
         a_qp = compute_scale_zp(h, symmetric=True)
@@ -71,7 +76,10 @@ def transform_int8(
     if use_kernel:
         from repro.kernels.quant_matmul import ops as qm_ops
 
-        acc = qm_ops.quant_matmul(h_q, w_q)
+        if w_packed is not None:
+            acc = qm_ops.quant_matmul_repacked(h_q, w_packed)
+        else:
+            acc = qm_ops.quant_matmul(h_q, w_q)
     else:
         acc = jnp.dot(
             h_q.astype(jnp.int32),
@@ -97,6 +105,7 @@ def transform_mixed_precision(
     w_qp: Optional[QuantParams] = None,
     a_qp: Optional[QuantParams] = None,
     use_kernel: bool = False,
+    w_packed=None,
 ) -> jnp.ndarray:
     """Route each precision group's rows through its FTE stream.
 
@@ -118,7 +127,14 @@ def transform_mixed_precision(
             if w_q is None or w_qp is None:
                 w_q, w_qp = quantize_per_channel(w, axis=-1)
             y = transform_int8(
-                rows, w_q, w_qp, b, activation, a_qp=a_qp, use_kernel=use_kernel
+                rows,
+                w_q,
+                w_qp,
+                b,
+                activation,
+                a_qp=a_qp,
+                use_kernel=use_kernel,
+                w_packed=w_packed,
             )
         else:
             raise ValueError(f"unknown precision tag {tag!r}")

@@ -108,7 +108,8 @@ def sharded_aggregate(
     globally calibrated activation scale/zp when the plan is mixed-precision
     (pass None for float-only plans). ``device_state`` caches per-shard
     uploaded artifacts across calls (the engine owns one). ``edge_coeff`` is
-    a *global* runtime per-edge coefficient vector (f32[E]); each shard
+    a *global* runtime per-edge coefficient vector (f32[E] — or f32[E, H]
+    with ``x`` f32[N, H, dh] for head-vectorized attention); each shard
     slices its contiguous ``edge_range`` — halo-sourced edges live in their
     destination's shard, so the slice carries their runtime coefficients too
     — and scatters the slice through its local ``edge_ids`` map.
@@ -353,10 +354,22 @@ class ShardedAmpleEngine(AmpleEngine):
         splan = self.sharded_plan
         if edge_coeff is not None:
             edge_coeff = jnp.asarray(edge_coeff, jnp.float32)
-            if edge_coeff.shape != (self.graph.num_edges,):
+            e = self.graph.num_edges
+            if not (
+                edge_coeff.shape == (e,)
+                or (edge_coeff.ndim == 2 and edge_coeff.shape[0] == e)
+            ):
                 raise ValueError(
-                    f"edge_coeff must be [{self.graph.num_edges}], got "
+                    f"edge_coeff must be [{e}] or [{e}, H], got "
                     f"{tuple(edge_coeff.shape)}"
+                )
+            if edge_coeff.ndim == 2 and (
+                x.ndim != 3 or x.shape[1] != edge_coeff.shape[1]
+            ):
+                raise ValueError(
+                    f"multi-head edge_coeff {tuple(edge_coeff.shape)} needs "
+                    f"x shaped [N, {edge_coeff.shape[1]}, dh], got "
+                    f"{tuple(x.shape)}"
                 )
             if self.mesh is not None:
                 raise NotImplementedError(
@@ -389,14 +402,15 @@ class ShardedAmpleEngine(AmpleEngine):
     def edge_softmax(
         self, scores: jnp.ndarray, *, mode: str = "runtime"
     ) -> jnp.ndarray:
-        """Destination-segment softmax of per-edge scores, sharded: f32[E].
+        """Destination-segment softmax of per-edge scores, sharded: f32[E(, H)].
 
         Each destination node (and each edge) belongs to exactly one shard,
         so the segment-max and denominator passes run per shard over its
         local tiles and the owned rows concatenate back to the global node
         order; the exp-shift and final normalisation happen in global edge
         space. Matches the single-plan ``AmpleEngine.edge_softmax`` up to
-        float accumulation order.
+        float accumulation order. ``scores`` f32[E, H] runs all heads in the
+        same per-shard passes.
         """
         from repro.core.aggregation import (
             edge_segment_sum_tiles,
@@ -404,9 +418,13 @@ class ShardedAmpleEngine(AmpleEngine):
         )
 
         scores = jnp.asarray(scores, jnp.float32)
-        if scores.shape != (self.graph.num_edges,):
+        e = self.graph.num_edges
+        if not (
+            scores.shape == (e,)
+            or (scores.ndim == 2 and scores.shape[0] == e)
+        ):
             raise ValueError(
-                f"scores must be [{self.graph.num_edges}], got "
+                f"scores must be [{e}] or [{e}, H], got "
                 f"{tuple(scores.shape)}"
             )
         splan = self.sharded_plan
@@ -426,7 +444,9 @@ class ShardedAmpleEngine(AmpleEngine):
                         f"shard {sp.shard.index} was compiled for modes "
                         f"{sp.plan.modes}, not {mode!r}"
                     )
-                acc = jnp.full((sp.shard.num_local,), init, jnp.float32)
+                acc = jnp.full(
+                    (sp.shard.num_local,) + vec.shape[1:], init, jnp.float32
+                )
                 for tag, p in plans.items():
                     dplan = self._softmax_dplan(sp, mode, tag, p)
                     res = fn(
@@ -450,6 +470,39 @@ class ShardedAmpleEngine(AmpleEngine):
         denom = owned_pass(edge_segment_sum_tiles, ex, 0.0)
         denom = jnp.where(denom > 0, denom, 1.0)
         return ex / denom[dst]
+
+    def attention_aggregate(
+        self,
+        scores: jnp.ndarray,
+        z: jnp.ndarray,
+        *,
+        mode: str = "runtime",
+        leaky_slope: float = 0.2,
+    ) -> jnp.ndarray:
+        """Sharded GAT attention on raw scores f32[E, H] / z f32[N, H, dh].
+
+        Always the oracle decomposition (head-vectorized softmax, then the
+        [E, H] weighted aggregate) — a shard's softmax partials are complete
+        because every in-edge lives in its destination's shard, but the
+        per-shard tile plans index local node space, so the single-launch
+        fused kernel stays a single-plan fast path. Under ``use_kernel`` the
+        weighted aggregate still runs the multi-head Pallas kernel per shard.
+        """
+        scores = jnp.asarray(scores, jnp.float32)
+        z = jnp.asarray(z, jnp.float32)
+        e, n = self.graph.num_edges, self.graph.num_nodes
+        if scores.ndim != 2 or scores.shape[0] != e:
+            raise ValueError(
+                f"scores must be [{e}, H], got {tuple(scores.shape)}"
+            )
+        if z.ndim != 3 or z.shape[0] != n or z.shape[1] != scores.shape[1]:
+            raise ValueError(
+                f"z must be [{n}, {scores.shape[1]}, dh], got "
+                f"{tuple(z.shape)}"
+            )
+        act = jax.nn.leaky_relu(scores, leaky_slope)
+        alpha = self.edge_softmax(act, mode=mode)
+        return self.aggregate(z, mode=mode, edge_coeff=alpha)
 
     def _softmax_dplan(self, sp, mode: str, tag: str, plan):
         """Per-shard device plan mirror, shared with sharded_aggregate.

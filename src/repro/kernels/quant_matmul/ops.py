@@ -7,8 +7,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.quant_matmul.quant_matmul import quant_matmul_kernel_call
+from repro.kernels.quant_matmul.repack import (
+    RepackedWeight,
+    quant_matmul_repacked_call,
+    repack_weight,
+)
 
-__all__ = ["quant_matmul"]
+__all__ = [
+    "quant_matmul",
+    "quant_matmul_repacked",
+    "repack_weight",
+    "RepackedWeight",
+]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -19,3 +29,17 @@ def quant_matmul(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return quant_matmul_kernel_call(a_q, b_q, interpret=interpret)
+
+
+def quant_matmul_repacked(
+    a_q: jnp.ndarray,
+    packed: RepackedWeight,
+    *,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """int32 = int8 @ repacked int8 weight — bitwise == ``quant_matmul``
+    on the unpacked layout (same blocks, integer accumulation), minus the
+    per-call weight pad/transpose."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return quant_matmul_repacked_call(a_q, packed, interpret=interpret)

@@ -1,0 +1,245 @@
+"""Pallas TPU kernels: fused multi-head graph attention over edge tiles.
+
+One tile scan replaces GAT's four (LeakyReLU → segment-max → exp →
+segment-sum → weighted aggregate): each grid step gathers the tile's
+neighbour embeddings for **all heads at once** (rows packed ``[N, H·dhp]``),
+applies LeakyReLU to the pre-scattered raw scores, reduces a tile-local
+softmax triple on-chip, and emits per-tile partials
+
+    m[t, s, h]        — tile-local segment max of the activated scores
+    l[t, s, h]        — Σ exp(score − m) over the segment's lanes
+    a[t, s, h·dhp]    — Σ coeff·exp(score − m)·x[idx] (numerator partials)
+
+The cross-tile combine (flash-attention-style log-sum-exp rescale at the
+partial-response scatter) runs in XLA — see ``attn_ops.attend_tiles``. The
+decomposition is exact: rescaling by ``exp(m − M_global)`` makes the combined
+(l, a) equal to the globally max-shifted sums, so the fused path computes the
+same stable softmax as the four-pass oracle (up to float re-association
+across tiles, which is why parity tests use the dense-reference tolerance
+rather than bitwise equality).
+
+Gather scaffolding (scalar-prefetched indices driving double-buffered
+per-row DMAs) is identical to ``segment_agg.py`` — the AGE mechanisms carry
+over; only the on-chip reduction changes. The head axis rides the lane
+(last) dimension of the score/accumulator blocks; tile shapes stay static so
+heads add zero launches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_attention_tiles", "gather_weighted_tiles_mh"]
+
+
+def _gather(idx_ref, x_hbm, xbuf, sems, *, t, num_tiles, e):
+    """Double-buffered row gather; returns the slot holding tile ``t``."""
+
+    def row_copy(tile, lane, slot):
+        row = idx_ref[tile, lane]
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(row, 1), :],
+            xbuf.at[slot, pl.ds(lane, 1), :],
+            sems.at[slot],
+        )
+
+    def start_gather(tile, slot):
+        def body(i, _):
+            row_copy(tile, i, slot).start()
+            return 0
+
+        jax.lax.fori_loop(0, e, body, 0)
+
+    def wait_gather(tile, slot):
+        def body(i, _):
+            row_copy(tile, i, slot).wait()
+            return 0
+
+        jax.lax.fori_loop(0, e, body, 0)
+
+    slot = jax.lax.rem(t, 2)
+
+    @pl.when(t == 0)
+    def _():
+        start_gather(0, 0)
+
+    @pl.when(t + 1 < num_tiles)
+    def _():
+        start_gather(t + 1, 1 - slot)
+
+    wait_gather(t, slot)
+    return slot
+
+
+def _fused_kernel(
+    idx_ref,
+    x_hbm,
+    scores_ref,
+    coeff_ref,
+    segs_ref,
+    m_ref,
+    l_ref,
+    a_ref,
+    xbuf,
+    sems,
+    *,
+    h: int,
+    dhp: int,
+    slope: float,
+):
+    t = pl.program_id(0)
+    num_tiles = pl.num_programs(0)
+    e = coeff_ref.shape[-1]
+    s = m_ref.shape[1]
+
+    slot = _gather(idx_ref, x_hbm, xbuf, sems, t=t, num_tiles=num_tiles, e=e)
+
+    # LeakyReLU on raw scores; padding lanes arrive as −inf and stay −inf
+    # (slope > 0), so they contribute exp(−inf − finite) = 0 downstream.
+    sc = scores_ref[0]  # [E, H]
+    sc = jnp.where(sc >= 0.0, sc, slope * sc)
+
+    seg = segs_ref[0, :]
+    onehot = jax.lax.broadcasted_iota(jnp.int32, (s, e), 0) == seg[None, :]
+    oh = onehot.astype(jnp.float32)
+
+    # Tile-local segment max per head, then broadcast back to lanes via the
+    # MXU (onehotᵀ @ m) — where(isfinite) keeps empty segments from leaking
+    # 0·(−inf) NaNs through the matmul.
+    masked = jnp.where(onehot[:, :, None], sc[None, :, :], -jnp.inf)
+    m = jnp.max(masked, axis=1)  # [S, H]
+    m_fin = jnp.where(jnp.isfinite(m), m, 0.0)
+    m_lane = jnp.dot(oh.transpose(), m_fin, preferred_element_type=jnp.float32)
+
+    p = jnp.exp(sc - m_lane)  # [E, H]
+    l_ref[0] = jnp.dot(oh, p, preferred_element_type=jnp.float32)
+
+    # Numerator partials: static lane coeff multiplies post-softmax (the
+    # oracle's aggregate semantics — the denominator stays Σ exp, unscaled).
+    w = p * coeff_ref[0][:, None]  # [E, H]
+    xb = xbuf[slot].reshape(e, h, dhp)
+    wa = (w[:, :, None] * xb).reshape(e, h * dhp)
+    a_ref[0] = jnp.dot(oh, wa, preferred_element_type=jnp.float32)
+    m_ref[0] = m
+
+
+def _mh_kernel(
+    idx_ref, x_hbm, coeff_ref, segs_ref, parts_ref, xbuf, sems, *, h: int, dhp: int
+):
+    t = pl.program_id(0)
+    num_tiles = pl.num_programs(0)
+    e = segs_ref.shape[-1]
+    s = parts_ref.shape[1]
+
+    slot = _gather(idx_ref, x_hbm, xbuf, sems, t=t, num_tiles=num_tiles, e=e)
+
+    seg = segs_ref[0, :]
+    oh = (
+        jax.lax.broadcasted_iota(jnp.int32, (s, e), 0) == seg[None, :]
+    ).astype(jnp.float32)
+    w = coeff_ref[0]  # [E, H]
+    xb = xbuf[slot].reshape(e, h, dhp)
+    wa = (w[:, :, None] * xb).reshape(e, h * dhp)
+    parts_ref[0] = jnp.dot(oh, wa, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("segments_per_tile", "leaky_slope", "interpret"),
+)
+def fused_attention_tiles(
+    x: jnp.ndarray,  # f32[N, H·dhp] (head-packed, dh padded to dhp)
+    gather_idx: jnp.ndarray,  # int32[T, E]
+    scores_t: jnp.ndarray,  # f32[T, E, H] raw scores, −inf padding lanes
+    coeff: jnp.ndarray,  # f32[T, E] static lane coeff
+    seg_ids: jnp.ndarray,  # int32[T, E]
+    *,
+    segments_per_tile: int,
+    leaky_slope: float,
+    interpret: bool = True,
+):
+    """One fused pass → per-tile softmax partials (m, l, a).
+
+    Returns ``(m f32[T, S, H], l f32[T, S, H], a f32[T, S, H·dhp])``; the
+    caller owns the cross-tile log-sum-exp combine and the dhp→dh unpad.
+    """
+    t, e, h = scores_t.shape
+    s = segments_per_tile
+    d = x.shape[1]
+    dhp = d // h
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # x stays in HBM
+            pl.BlockSpec((1, e, h), lambda tt, idx: (tt, 0, 0)),  # scores
+            pl.BlockSpec((1, e), lambda tt, idx: (tt, 0)),  # coeff
+            pl.BlockSpec((1, e), lambda tt, idx: (tt, 0)),  # seg_ids
+        ],
+        out_specs=(
+            pl.BlockSpec((1, s, h), lambda tt, idx: (tt, 0, 0)),  # m
+            pl.BlockSpec((1, s, h), lambda tt, idx: (tt, 0, 0)),  # l
+            pl.BlockSpec((1, s, d), lambda tt, idx: (tt, 0, 0)),  # a
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((2, e, d), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, h=h, dhp=dhp, slope=leaky_slope),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((t, s, h), jnp.float32),
+            jax.ShapeDtypeStruct((t, s, h), jnp.float32),
+            jax.ShapeDtypeStruct((t, s, d), jnp.float32),
+        ),
+        interpret=interpret,
+        name="ample_fused_attention",
+    )(gather_idx, x, scores_t, coeff, seg_ids)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("segments_per_tile", "interpret")
+)
+def gather_weighted_tiles_mh(
+    x: jnp.ndarray,  # f32[N, H·dhp]
+    gather_idx: jnp.ndarray,  # int32[T, E]
+    coeff: jnp.ndarray,  # f32[T, E, H] per-head lane coefficients
+    seg_ids: jnp.ndarray,  # int32[T, E]
+    *,
+    segments_per_tile: int,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Multi-head weighted segment reduce: f32[T, S, H·dhp] partials."""
+    t, e, h = coeff.shape
+    s = segments_per_tile
+    d = x.shape[1]
+    dhp = d // h
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, e, h), lambda tt, idx: (tt, 0, 0)),  # coeff
+            pl.BlockSpec((1, e), lambda tt, idx: (tt, 0)),  # seg_ids
+        ],
+        out_specs=pl.BlockSpec((1, s, d), lambda tt, idx: (tt, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, e, d), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_mh_kernel, h=h, dhp=dhp),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, s, d), jnp.float32),
+        interpret=interpret,
+        name="ample_gather_segment_agg_mh",
+    )(gather_idx, x, coeff, seg_ids)

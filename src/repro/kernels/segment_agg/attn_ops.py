@@ -1,0 +1,160 @@
+"""Public wrappers for the fused multi-head attention kernel.
+
+``attend_tiles`` is the one-launch GAT layer: raw (pre-LeakyReLU) scores in
+tile layout, head-stacked embeddings in, softmax-normalized aggregates out.
+The Pallas kernel emits per-tile softmax partials (tile-local max ``m``,
+exp-sum ``l``, weighted numerator ``a``); the cross-tile combine here is the
+flash-attention identity at the partial-response scatter:
+
+    M[n]     = max over tiles of m                      (scatter-max)
+    L[n]     = Σ l · exp(m − M[n])                      (rescaled scatter-add)
+    A[n]     = Σ a · exp(m − M[n])
+    out[n]   = A[n] / L[n]
+
+which equals the globally max-shifted softmax aggregate exactly (up to the
+float re-association of summing tiles in a different grouping than the
+oracle's two global passes).
+
+``aggregate_tiles_mh`` is the multi-head analogue of ``ops.aggregate_tiles``
+for already-normalized per-head coefficients. Both fall back to interpret
+mode automatically off-TPU. Head packing pads dh up to a 128-lane multiple
+so each DMA'd row is MXU/VPU aligned; the pad is sliced off after combine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_agg.attn_kernel import (
+    fused_attention_tiles,
+    gather_weighted_tiles_mh,
+)
+
+__all__ = ["attend_tiles", "aggregate_tiles_mh", "combine_attention", "pack_heads"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _dhp(dh: int) -> int:
+    return max(128, ((dh + 127) // 128) * 128)
+
+
+def pack_heads(z: jnp.ndarray) -> jnp.ndarray:
+    """f32[N, H, dh] → f32[N, H·dhp] with dh zero-padded to a 128 multiple."""
+    n, h, dh = z.shape
+    dhp = _dhp(dh)
+    if dhp != dh:
+        z = jnp.pad(z, ((0, 0), (0, 0), (0, dhp - dh)))
+    return z.reshape(n, h * dhp)
+
+
+def combine_attention(
+    m: jnp.ndarray,  # f32[T, S, H]
+    l: jnp.ndarray,  # f32[T, S, H]
+    a: jnp.ndarray,  # f32[T, S, H, dhp]
+    out_node: jnp.ndarray,  # int32[T, S]
+    *,
+    num_nodes: int,
+    dh: int,
+) -> jnp.ndarray:
+    """Cross-tile log-sum-exp combine → f32[num_nodes, H, dh]."""
+    t, s, h = m.shape
+    flat = out_node.reshape(t * s)
+    mf = m.reshape(t * s, h)
+    big_m = jnp.full((num_nodes + 1, h), -jnp.inf).at[flat].max(mf)
+    big_m = jnp.where(jnp.isfinite(big_m), big_m, 0.0)
+    # Empty-segment partials carry m = −inf → scale 0, so they vanish here.
+    scale = jnp.exp(mf - big_m[flat])
+    big_l = (
+        jnp.zeros((num_nodes + 1, h)).at[flat].add(l.reshape(t * s, h) * scale)
+    )
+    big_a = (
+        jnp.zeros((num_nodes + 1, h, a.shape[-1]))
+        .at[flat]
+        .add(a.reshape(t * s, h, -1) * scale[:, :, None])
+    )
+    denom = jnp.where(big_l > 0, big_l, 1.0)
+    return (big_a / denom[:, :, None])[:num_nodes, :, :dh]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_nodes", "segments_per_tile", "leaky_slope", "interpret"),
+)
+def attend_tiles(
+    z: jnp.ndarray,  # f32[N, H, dh]
+    gather_idx: jnp.ndarray,  # int32[T, E]
+    scores_t: jnp.ndarray,  # f32[T, E, H] raw scores, −inf on padding lanes
+    coeff: jnp.ndarray,  # f32[T, E] static lane coeff
+    seg_ids: jnp.ndarray,  # int32[T, E]
+    out_node: jnp.ndarray,  # int32[T, S]
+    *,
+    num_nodes: int,
+    segments_per_tile: int,
+    leaky_slope: float,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused GAT layer: softmax(LeakyReLU(scores)) aggregate, one launch.
+
+    Returns f32[num_nodes, H, dh].
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, h, dh = z.shape
+    xp = pack_heads(z)
+    m, l, a = fused_attention_tiles(
+        xp,
+        gather_idx,
+        scores_t,
+        coeff,
+        seg_ids,
+        segments_per_tile=segments_per_tile,
+        leaky_slope=leaky_slope,
+        interpret=interpret,
+    )
+    t, s, _ = m.shape
+    return combine_attention(
+        m,
+        l,
+        a.reshape(t, s, h, -1),
+        out_node,
+        num_nodes=num_nodes,
+        dh=dh,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_nodes", "segments_per_tile", "interpret")
+)
+def aggregate_tiles_mh(
+    x: jnp.ndarray,  # f32[N, H, dh]
+    gather_idx: jnp.ndarray,  # int32[T, E]
+    coeff: jnp.ndarray,  # f32[T, E, H] per-head lane coefficients
+    seg_ids: jnp.ndarray,  # int32[T, E]
+    out_node: jnp.ndarray,  # int32[T, S]
+    *,
+    num_nodes: int,
+    segments_per_tile: int,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Multi-head event-driven aggregation → f32[num_nodes, H, dh]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, h, dh = x.shape
+    xp = pack_heads(x)
+    parts = gather_weighted_tiles_mh(
+        xp,
+        gather_idx,
+        coeff,
+        seg_ids,
+        segments_per_tile=segments_per_tile,
+        interpret=interpret,
+    )
+    t, s, d = parts.shape
+    out = jnp.zeros((num_nodes + 1, d), x.dtype)
+    out = out.at[out_node.reshape(t * s)].add(parts.reshape(t * s, d))
+    return out[:num_nodes].reshape(num_nodes, h, -1)[:, :, :dh]

@@ -6,7 +6,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gather_segment_tiles_ref", "aggregate_tiles_ref"]
+__all__ = [
+    "gather_segment_tiles_ref",
+    "aggregate_tiles_ref",
+    "attend_tiles_ref",
+    "aggregate_tiles_mh_ref",
+]
 
 
 @functools.partial(jax.jit, static_argnames=("segments_per_tile",))
@@ -47,4 +52,72 @@ def aggregate_tiles_ref(
     t, s, d = parts.shape
     out = jnp.zeros((num_nodes + 1, d), x.dtype)
     out = out.at[out_node.reshape(t * s)].add(parts.reshape(t * s, d))
+    return out[:num_nodes]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_nodes", "segments_per_tile", "leaky_slope"),
+)
+def attend_tiles_ref(
+    z: jnp.ndarray,  # f32[N, H, dh]
+    gather_idx: jnp.ndarray,  # int32[T, E]
+    scores_t: jnp.ndarray,  # f32[T, E, H] raw scores, −inf padding lanes
+    coeff: jnp.ndarray,  # f32[T, E]
+    seg_ids: jnp.ndarray,  # int32[T, E]
+    out_node: jnp.ndarray,  # int32[T, S]
+    *,
+    num_nodes: int,
+    segments_per_tile: int,
+    leaky_slope: float,
+) -> jnp.ndarray:
+    """Pure-jnp mirror of the fused attention kernel: same per-tile
+    (m, l, a) decomposition, same cross-tile log-sum-exp combine."""
+    from repro.kernels.segment_agg.attn_ops import combine_attention
+
+    s = segments_per_tile
+
+    def per_tile(idx_t, sc_t, cf_t, seg_t):
+        sc = jnp.where(sc_t >= 0.0, sc_t, leaky_slope * sc_t)
+        m = jax.ops.segment_max(sc, seg_t, num_segments=s)  # [S, H]
+        m_fin = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(sc - m_fin[seg_t])
+        l = jax.ops.segment_sum(p, seg_t, num_segments=s)
+        wa = (p * cf_t[:, None])[:, :, None] * z[idx_t]  # [E, H, dh]
+        a = jax.ops.segment_sum(wa, seg_t, num_segments=s)
+        return m, l, a
+
+    m, l, a = jax.vmap(per_tile)(gather_idx, scores_t, coeff, seg_ids)
+    return combine_attention(
+        m, l, a, out_node, num_nodes=num_nodes, dh=z.shape[-1]
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_nodes", "segments_per_tile")
+)
+def aggregate_tiles_mh_ref(
+    x: jnp.ndarray,  # f32[N, H, dh]
+    gather_idx: jnp.ndarray,  # int32[T, E]
+    coeff: jnp.ndarray,  # f32[T, E, H]
+    seg_ids: jnp.ndarray,  # int32[T, E]
+    out_node: jnp.ndarray,  # int32[T, S]
+    *,
+    num_nodes: int,
+    segments_per_tile: int,
+) -> jnp.ndarray:
+    """Oracle for the multi-head weighted aggregate: f32[num_nodes, H, dh]."""
+
+    def per_tile(idx_t, cf_t, seg_t):
+        wa = cf_t[:, :, None] * x[idx_t]  # [E, H, dh]
+        return jax.ops.segment_sum(
+            wa, seg_t, num_segments=segments_per_tile
+        )
+
+    parts = jax.vmap(per_tile)(gather_idx, coeff, seg_ids)  # [T, S, H, dh]
+    t, s = parts.shape[:2]
+    out = jnp.zeros((num_nodes + 1,) + parts.shape[2:], x.dtype)
+    out = out.at[out_node.reshape(t * s)].add(
+        parts.reshape((t * s,) + parts.shape[2:])
+    )
     return out[:num_nodes]

@@ -109,6 +109,7 @@ def engine_config(cfg: ModelConfig) -> EngineConfig:
     return EngineConfig(
         edges_per_tile=cfg.gnn_edges_per_tile,
         mixed_precision=cfg.gnn_precision == "mixed",
+        use_kernel=cfg.gnn_use_kernel,
     )
 
 

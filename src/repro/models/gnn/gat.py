@@ -97,19 +97,17 @@ def apply(cfg: ModelConfig, params: Dict, engine: AmpleEngine, x: jnp.ndarray) -
         zh = z.reshape(num_nodes, h, dh)
         src_sc = jnp.einsum("nhd,hd->nh", zh, lyr["a_src"])  # [N, H]
         dst_sc = jnp.einsum("nhd,hd->nh", zh, lyr["a_dst"])  # [N, H]
-        scores = jax.nn.leaky_relu(
-            src_sc[src] + dst_sc[dst], LEAKY_SLOPE
-        )  # [E, H] — one edge-endpoint gather per layer, not per head
-        outs = []
-        for head in range(h):
-            alpha = engine.edge_softmax(scores[:, head], mode=mode)
-            outs.append(
-                engine.aggregate(zh[:, head, :], mode=mode, edge_coeff=alpha)
-            )
+        # RAW scores [E, H] — one edge-endpoint gather per layer; LeakyReLU,
+        # softmax and the weighted aggregate all run head-vectorized inside
+        # the engine (one fused Pallas launch per layer under use_kernel).
+        scores = src_sc[src] + dst_sc[dst]
+        out = engine.attention_aggregate(
+            scores, zh, mode=mode, leaky_slope=LEAKY_SLOPE
+        )  # [N, H, dh]
         x = (
-            jnp.concatenate(outs, axis=-1)
+            out.reshape(num_nodes, h * dh)
             if concat
-            else sum(outs) / float(h)
+            else out.sum(axis=1) / float(h)
         )
         if i < n_layers - 1:
             x = jax.nn.elu(x)

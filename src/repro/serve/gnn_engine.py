@@ -183,18 +183,27 @@ class GNNServeEngine:
             if feature_chunk_rows is None
             else feature_chunk_rows
         )
-        if self.feature_budget_bytes > 0 and (
-            self.sharded or self.engine_cfg.use_kernel
-        ):
+        if self.feature_budget_bytes > 0 and self.engine_cfg.use_kernel:
+            # The streamed executors are jnp-only (chunk-blocked passes are
+            # bitwise-equal to the dense jnp path; the Pallas kernels
+            # re-associate) — refuse the combination outright rather than
+            # silently serving every request fully in-memory.
+            raise ValueError(
+                "feature_budget_bytes and use_kernel are mutually exclusive: "
+                "the out-of-core streamed executors serve the jnp path only "
+                "(Pallas kernel rounding differs from the streamed oracle). "
+                "Drop EngineConfig.use_kernel / ModelConfig.gnn_use_kernel, "
+                "or set feature_budget_bytes=0 to serve in-memory."
+            )
+        if self.feature_budget_bytes > 0 and self.sharded:
             # Better a loud no-op than a user believing the cap is active
             # and meeting an OOM on a genuinely large graph.
             import warnings
 
-            reason = "sharded engines" if self.sharded else "use_kernel engines"
             warnings.warn(
-                f"feature_budget_bytes is ignored on {reason}: the streamed "
-                "executors serve the plain single-device jnp path only; "
-                "requests will run fully in-memory",
+                "feature_budget_bytes is ignored on sharded engines: the "
+                "streamed executors serve the plain single-device jnp path "
+                "only; requests will run fully in-memory",
                 stacklevel=2,
             )
         # fingerprint -> (prepared graph, plan, engine); OrderedDict as LRU.

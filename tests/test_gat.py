@@ -74,6 +74,54 @@ def test_gat_mixed_precision_bounded_error(graph):
     assert np.isfinite(y).all()
 
 
+# ----------------------------------------------------- fused kernel parity
+@pytest.mark.parametrize("heads", [1, 2, 4])
+@pytest.mark.parametrize("precision", ["float", "mixed"])
+def test_gat_fused_kernel_matches_reference(graph, heads, precision):
+    """One fused Pallas launch per layer (gnn_use_kernel=True) vs both the
+    dense reference (per-arch tolerance) and the always-on [E, H] jnp oracle
+    (tight — same softmax decomposition, different association)."""
+    cfg = dataclasses.replace(
+        _cfg(precision=precision, heads=heads), gnn_use_kernel=True
+    )
+    params = gnn_api.gnn_init(cfg, jax.random.PRNGKey(0))
+    x = jnp.asarray(graph.features)
+    prepared = gnn_api.prepare_graph(cfg, graph)
+    eng = AmpleEngine(prepared, gnn_api.engine_config(cfg))
+    y = np.asarray(gnn_api.gnn_apply(cfg, params, eng, x))
+    yref = np.asarray(gnn_api.gnn_reference(cfg, params, graph, x))
+    assert np.isfinite(y).all()
+    if precision == "float":
+        np.testing.assert_allclose(y, yref, atol=5e-4, rtol=1e-3)
+    else:
+        assert _rel(y, yref) < 0.08, f"fused int8 rel err {_rel(y, yref)}"
+    jcfg = dataclasses.replace(cfg, gnn_use_kernel=False)
+    jeng = AmpleEngine(prepared, gnn_api.engine_config(jcfg))
+    yj = np.asarray(gnn_api.gnn_apply(jcfg, params, jeng, x))
+    np.testing.assert_allclose(y, yj, atol=5e-5, rtol=1e-4)
+
+
+def test_gat_use_kernel_refuses_streaming(graph):
+    """Satellite: use_kernel + out-of-core streaming must fail loudly with
+    both flags named, not silently fall back to the jnp path."""
+    cfg = dataclasses.replace(_cfg(), gnn_use_kernel=True)
+    with pytest.raises(
+        ValueError, match="feature_budget_bytes and use_kernel"
+    ):
+        GNNServeEngine(
+            cfg, key=jax.random.PRNGKey(0), feature_budget_bytes=1024
+        )
+
+
+def test_gat_sharded_multihead_matches_unsharded(graph):
+    cfg = _cfg(heads=4)
+    solo = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    y1 = solo.infer(graph, graph.features).outputs
+    sharded = GNNServeEngine(cfg, solo.params, num_shards=2)
+    y2 = sharded.infer(graph, graph.features).outputs
+    np.testing.assert_allclose(y1, y2, atol=5e-5, rtol=1e-4)
+
+
 def test_gat_heads_must_divide_hidden():
     cfg = dataclasses.replace(_cfg(), gnn_heads=5)  # d_ff=16 not divisible
     with pytest.raises(ValueError, match="divisible"):

@@ -224,20 +224,20 @@ def test_weight_q_cache_survives_id_reuse(graph):
     quantized weights for a new array that happens to alias the id."""
     eng = AmpleEngine(graph, EngineConfig(edges_per_tile=64, mixed_precision=True))
     w = jnp.asarray(np.random.default_rng(0).standard_normal((20, 6)), jnp.float32)
-    w_q, w_qp = eng._weight_q(w)
+    w_q, w_qp, _ = eng._weight_q(w)
     entry = eng._wq_cache[id(w)]
     assert entry[0] is w  # strong ref pins the id for the cache's lifetime
     # simulate CPython id reuse: a stale entry left under this array's id
     w2 = jnp.asarray(np.random.default_rng(1).standard_normal((20, 6)), jnp.float32)
-    eng._wq_cache[id(w2)] = (object(), "stale_q", "stale_qp")
-    w2_q, w2_qp = eng._weight_q(w2)
+    eng._wq_cache[id(w2)] = (object(), "stale_q", "stale_qp", None)
+    w2_q, w2_qp, _ = eng._weight_q(w2)
     assert not isinstance(w2_q, str), "stale entry served for a recycled id"
     np.testing.assert_array_equal(
         np.asarray(w2_q),
         np.asarray(__import__("repro.core.quantization", fromlist=["x"]).quantize_per_channel(w2, axis=-1)[0]),
     )
     # repeated lookups of the live weight stay cached (same objects)
-    again_q, again_qp = eng._weight_q(w)
+    again_q, again_qp, _ = eng._weight_q(w)
     assert again_q is w_q and again_qp is w_qp
 
 
