@@ -507,12 +507,76 @@ def bench_sharded_serve(quick: bool) -> None:
 
 
 # ----------------- out-of-core serving: budget vs latency/bytes/hit rate
+def _outofcore_row(eng, r, us, in_mem_us):
+    s = eng._last_stream
+    return (
+        f"budget_mb={eng.feature_budget_bytes / (1 << 20):.1f};"
+        f"bytes_streamed={r.bytes_streamed};"
+        f"chunk_hit_rate={r.chunk_hit_rate:.3f};"
+        f"prefetch_overlap={r.prefetch_overlap:.3f};"
+        f"stall_ms={r.stall_ms:.1f};copy_ms={r.copy_ms:.1f};"
+        f"sparse_rows={s.sparse_rows};evictions={s.evictions};"
+        f"vs_inmem={us / max(in_mem_us, 1e-9):.2f}x;streamed={r.streamed}"
+    )
+
+
+def _outofcore_gate(rows) -> None:
+    """--quick regression gate: measured overlap must clear 0.3 and the
+    chunk hit rate must not regress >5 % (absolute) against the committed
+    same-scale baseline (the ``quick_rows`` section of BENCH_prefetch.json).
+    ``REPRO_BENCH_NO_GATE=1`` skips — e.g. when refreshing the baseline."""
+    import json
+
+    if os.environ.get("REPRO_BENCH_NO_GATE"):
+        print("outofcore gate: skipped (REPRO_BENCH_NO_GATE)", flush=True)
+        return
+    failures = []
+    for rec in rows:
+        ov = float(rec.get("prefetch_overlap", 0.0))
+        if ov < 0.3:
+            failures.append(f"{rec['name']}: prefetch_overlap {ov:.3f} < 0.3")
+    baseline_path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_prefetch.json",
+    )
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            payload = json.load(f)
+        base = {
+            r["name"]: r
+            for r in payload.get(
+                "quick_rows", payload["rows"] if payload.get("quick") else []
+            )
+        }
+        for rec in rows:
+            ref = base.get(rec["name"])
+            if ref is None or "chunk_hit_rate" not in ref:
+                continue
+            got, want = float(rec["chunk_hit_rate"]), float(ref["chunk_hit_rate"])
+            if got < want - 0.05:
+                failures.append(
+                    f"{rec['name']}: chunk_hit_rate {got:.3f} regressed >5% "
+                    f"vs baseline {want:.3f}"
+                )
+    else:
+        print("outofcore gate: no committed baseline, overlap check only",
+              flush=True)
+    if failures:
+        raise SystemExit(
+            "outofcore --quick gate FAILED:\n  " + "\n  ".join(failures)
+        )
+    print(f"outofcore gate: PASS ({len(rows)} rows)", flush=True)
+
+
 def bench_outofcore(quick: bool) -> None:
     """Full-scale reddit + yelp inference under feature budgets smaller than
     the feature matrix: the out-of-core path keeps features host-resident and
-    streams chunks through the plan-driven prefetcher. Sweeps budget vs
-    latency, bytes streamed and chunk-cache hit rate (the artifact rows CI
-    uploads as BENCH_prefetch.json)."""
+    streams chunks through the plan-driven prefetcher (async staging worker +
+    Belady slot cache + sparse residue). Sweeps budget vs latency, bytes
+    streamed, chunk-cache hit rate and the wall-clock stall/copy split, plus
+    reorder/pack control arms at the 1/4 point (the artifact rows CI uploads
+    as BENCH_prefetch.json). Under --quick the sweep doubles as a regression
+    gate against the committed baseline."""
     import dataclasses as dc
 
     import jax
@@ -525,6 +589,7 @@ def bench_outofcore(quick: bool) -> None:
     cap = 8_000 if quick else None
     fdim = 128 if quick else None
     tile = 1_024 if quick else 4_096
+    gate_rows = []
     for name in ("reddit", "yelp"):
         spec = PAPER_DATASETS[name]
         g = make_dataset(name, max_nodes=cap, max_feature_dim=fdim, seed=0)
@@ -537,7 +602,8 @@ def bench_outofcore(quick: bool) -> None:
             gnn_edges_per_tile=tile,
         )
         # One engine for the whole sweep: the plan compiles once, and only
-        # ``feature_budget_bytes`` moves between points (the sweep knob).
+        # ``feature_budget_bytes`` (plus the locality knobs for the control
+        # arms) moves between points.
         chunk_rows = 1_024 if quick else 8_192
         eng = GNNServeEngine(
             cfg,
@@ -572,15 +638,33 @@ def bench_outofcore(quick: bool) -> None:
                     f"streamed={r.streamed}",
                 )
                 continue
+            row_name = f"outofcore_{name}_budget_1_{frac}"
+            emit(row_name, us, _outofcore_row(eng, r, us, in_mem_us))
+            gate_rows.append({
+                "name": row_name,
+                "prefetch_overlap": f"{r.prefetch_overlap:.3f}",
+                "chunk_hit_rate": f"{r.chunk_hit_rate:.3f}",
+            })
+        # Locality control arms at the 1/4 point: reorder-only is the sweep
+        # default above; A/B the plan-order control and the chunk-packed
+        # mode through the engine knobs (no hand-built prefetchers).
+        eng.feature_budget_bytes = max(feat_bytes // 4, floor)
+        for arm, reorder, packing in (
+            ("noreorder", False, False),
+            ("packed", False, True),
+        ):
+            eng.stream_reorder, eng.stream_packing = reorder, packing
+            eng.infer(g, g.features)  # untimed: packed-plan build + jit warm
+            t0 = time.perf_counter()
+            r = eng.infer(g, g.features)
+            us = (time.perf_counter() - t0) * 1e6
             emit(
-                f"outofcore_{name}_budget_1_{frac}", us,
-                f"budget_mb={eng.feature_budget_bytes / (1 << 20):.1f};"
-                f"feat_mb={feat_bytes / (1 << 20):.1f};"
-                f"bytes_streamed={r.bytes_streamed};"
-                f"chunk_hit_rate={r.chunk_hit_rate:.3f};"
-                f"prefetch_overlap={r.prefetch_overlap:.3f};"
-                f"vs_inmem={us / max(in_mem_us, 1e-9):.2f}x;streamed={r.streamed}",
+                f"outofcore_{name}_arm_{arm}_1_4", us,
+                _outofcore_row(eng, r, us, in_mem_us),
             )
+        eng.stream_reorder, eng.stream_packing = True, False
+    if quick:
+        _outofcore_gate(gate_rows)
 
 
 # ------------- prefetcher calibration: simulated depth vs measured budget

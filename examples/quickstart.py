@@ -111,6 +111,10 @@ def main():
     #    chunks through a budget-bound device cache with reuse-distance
     #    eviction. Outputs are bitwise-identical to the in-memory path —
     #    the budget only moves bytes, never numerics.
+    #    An async staging worker builds upcoming chunk/row copies ahead of
+    #    the consuming tile step; stall_ms / copy_ms are fenced wall-clock
+    #    measurements, so prefetch_overlap reports how much copy time the
+    #    lookahead actually hid (not an inferred number).
     budget = g.features.nbytes // 4
     ooc = GNNServeEngine(cfg, params, feature_budget_bytes=budget)
     r = ooc.infer(g, g.features)
@@ -119,6 +123,8 @@ def main():
           f"{g.features.nbytes >> 10}KB): streamed={r.streamed}, "
           f"{r.bytes_streamed >> 10}KB moved, chunk hit rate "
           f"{r.chunk_hit_rate:.2f}, bitwise == in-memory: {exact}")
+    print(f"  async staging: prefetch_overlap={r.prefetch_overlap:.2f} "
+          f"(stall {r.stall_ms:.1f}ms of {r.copy_ms:.1f}ms copies)")
 
     # 8. Runtime edge coefficients: GAT through the same serving stack. The
     #    attention coefficients are computed from node features per layer per

@@ -209,70 +209,137 @@ def save_plan(
     return path
 
 
-def load_plan(path: str) -> PlanRecord:
-    """Load a plan written by ``save_plan``; fingerprints round-trip exactly."""
+def _mmap_npz(path: str) -> Dict[str, np.ndarray]:
+    """Read-only memmap views of every member of an uncompressed ``.npz``.
+
+    ``np.load(..., mmap_mode=...)`` silently ignores the mode inside zip
+    archives (each member would need its own offset), so the member data
+    offsets are resolved by hand: ``np.savez`` stores members uncompressed
+    (ZIP_STORED), meaning each ``.npy`` payload sits verbatim in the file at
+    ``local header + magic/header`` and maps directly. Returns a plain dict
+    — the ``z[key]`` / ``key in z`` surface ``_unpack_plan`` reads.
+    """
+    import zipfile
+
+    out: Dict[str, np.ndarray] = {}
+    with zipfile.ZipFile(path) as zf, open(path, "rb") as f:
+        for info in zf.infolist():
+            if info.compress_type != zipfile.ZIP_STORED:
+                raise ValueError(
+                    f"{path}: member {info.filename!r} is compressed; "
+                    "mmap_mode needs an uncompressed archive (np.savez)"
+                )
+            # Local file header: 30 fixed bytes, then filename + extra field
+            # (their lengths live at offsets 26/28); the .npy stream follows.
+            f.seek(info.header_offset)
+            hdr = f.read(30)
+            fn_len = int.from_bytes(hdr[26:28], "little")
+            extra_len = int.from_bytes(hdr[28:30], "little")
+            f.seek(info.header_offset + 30 + fn_len + extra_len)
+            version = np.lib.format.read_magic(f)
+            if version == (1, 0):
+                shape, fortran, dtype = np.lib.format.read_array_header_1_0(f)
+            elif version == (2, 0):
+                shape, fortran, dtype = np.lib.format.read_array_header_2_0(f)
+            else:
+                raise ValueError(f"unsupported npy version {version} in {path}")
+            if dtype.hasobject:
+                raise ValueError(f"{path}: object arrays cannot be memmapped")
+            name = info.filename
+            if name.endswith(".npy"):
+                name = name[: -len(".npy")]
+            out[name] = np.memmap(
+                path,
+                dtype=dtype,
+                shape=shape,
+                order="F" if fortran else "C",
+                mode="r",
+                offset=f.tell(),
+            )
+    return out
+
+
+def load_plan(path: str, *, mmap_mode: Optional[str] = None) -> PlanRecord:
+    """Load a plan written by ``save_plan``; fingerprints round-trip exactly.
+
+    ``mmap_mode="r"`` maps every tile array read-only straight out of the
+    file instead of materialising it: large ``EdgeTilePlan`` arrays then
+    cost address space and page cache, not private resident memory, which
+    bounds warm-start RSS (plan files on big graphs rival the feature
+    matrix). The returned arrays are views onto the file — read-only, so
+    accidental mutation raises instead of silently corrupting the plan;
+    copy before writing.
+    """
+    if mmap_mode is not None:
+        if mmap_mode != "r":
+            raise ValueError(f"mmap_mode must be 'r' or None, got {mmap_mode!r}")
+        return _decode_record(path, _mmap_npz(path))
     with np.load(path, allow_pickle=False) as z:
-        header = json.loads(bytes(np.asarray(z["header"]).tobytes()).decode("utf-8"))
-        cfg = _cfg_from_header(header["cfg"])
-        graph = None
-        if "graph" in header:
-            graph = Graph(
-                indptr=np.asarray(z["graph/indptr"], np.int64),
-                indices=np.asarray(z["graph/indices"], np.int32),
-                num_nodes=int(header["graph"]["num_nodes"]),
-                name=header["graph"]["name"],
+        return _decode_record(path, z)
+
+
+def _decode_record(path: str, z) -> PlanRecord:
+    header = json.loads(bytes(np.asarray(z["header"]).tobytes()).decode("utf-8"))
+    cfg = _cfg_from_header(header["cfg"])
+    graph = None
+    if "graph" in header:
+        graph = Graph(
+            indptr=np.asarray(z["graph/indptr"], np.int64),
+            indices=np.asarray(z["graph/indices"], np.int32),
+            num_nodes=int(header["graph"]["num_nodes"]),
+            name=header["graph"]["name"],
+        )
+    if header["kind"] == "plan":
+        plan: Union[ExecutionPlan, ShardedExecutionPlan] = _unpack_plan(
+            header["plan"], cfg, "", z
+        )
+    elif header["kind"] == "sharded_plan":
+        starts = np.asarray(z["partition_starts"], np.int64)
+        part = Partition(starts=starts)
+        tags = np.asarray(z["tags"]).astype(str)
+        groups = {t: np.nonzero(tags == t)[0] for t in np.unique(tags)}
+        shards = []
+        for k, sh in enumerate(header["shards"]):
+            prefix = f"s{k}/"
+            halo = np.asarray(z[f"{prefix}halo"], np.int64)
+            lo, hi = int(sh["lo"]), int(sh["hi"])
+            local_g = Graph(
+                indptr=np.asarray(z[f"{prefix}indptr"], np.int64),
+                indices=np.asarray(z[f"{prefix}indices"], np.int32),
+                num_nodes=(hi - lo) + int(halo.size),
+                name=sh["graph_name"],
             )
-        if header["kind"] == "plan":
-            plan: Union[ExecutionPlan, ShardedExecutionPlan] = _unpack_plan(
-                header["plan"], cfg, "", z
+            sub = ShardSubgraph(
+                index=k,
+                lo=lo,
+                hi=hi,
+                halo=halo,
+                local_ids=np.concatenate(
+                    [np.arange(lo, hi, dtype=np.int64), halo]
+                ),
+                graph=local_g,
+                edge_range=tuple(sh["edge_range"]),
             )
-        elif header["kind"] == "sharded_plan":
-            starts = np.asarray(z["partition_starts"], np.int64)
-            part = Partition(starts=starts)
-            tags = np.asarray(z["tags"]).astype(str)
-            groups = {t: np.nonzero(tags == t)[0] for t in np.unique(tags)}
-            shards = []
-            for k, sh in enumerate(header["shards"]):
-                prefix = f"s{k}/"
-                halo = np.asarray(z[f"{prefix}halo"], np.int64)
-                lo, hi = int(sh["lo"]), int(sh["hi"])
-                local_g = Graph(
-                    indptr=np.asarray(z[f"{prefix}indptr"], np.int64),
-                    indices=np.asarray(z[f"{prefix}indices"], np.int32),
-                    num_nodes=(hi - lo) + int(halo.size),
-                    name=sh["graph_name"],
+            shards.append(
+                ShardPlan(
+                    fingerprint=sh["fingerprint"],
+                    shard=sub,
+                    plan=_unpack_plan(sh["plan"], cfg, prefix, z),
                 )
-                sub = ShardSubgraph(
-                    index=k,
-                    lo=lo,
-                    hi=hi,
-                    halo=halo,
-                    local_ids=np.concatenate(
-                        [np.arange(lo, hi, dtype=np.int64), halo]
-                    ),
-                    graph=local_g,
-                    edge_range=tuple(sh["edge_range"]),
-                )
-                shards.append(
-                    ShardPlan(
-                        fingerprint=sh["fingerprint"],
-                        shard=sub,
-                        plan=_unpack_plan(sh["plan"], cfg, prefix, z),
-                    )
-                )
-            meta = header["sharded"]
-            plan = ShardedExecutionPlan(
-                fingerprint=meta["fingerprint"],
-                graph_fp=meta["graph_fp"],
-                partition_fp=meta["partition_fp"],
-                partition=part,
-                num_nodes=int(meta["num_nodes"]),
-                num_edges=int(meta["num_edges"]),
-                cfg=cfg,
-                precision_tags=tags,
-                node_groups=groups,
-                shards=tuple(shards),
             )
-        else:
-            raise ValueError(f"unknown plan kind {header['kind']!r} in {path}")
+        meta = header["sharded"]
+        plan = ShardedExecutionPlan(
+            fingerprint=meta["fingerprint"],
+            graph_fp=meta["graph_fp"],
+            partition_fp=meta["partition_fp"],
+            partition=part,
+            num_nodes=int(meta["num_nodes"]),
+            num_edges=int(meta["num_edges"]),
+            cfg=cfg,
+            precision_tags=tags,
+            node_groups=groups,
+            shards=tuple(shards),
+        )
+    else:
+        raise ValueError(f"unknown plan kind {header['kind']!r} in {path}")
     return PlanRecord(plan=plan, graph=graph, extra=header.get("extra", {}))

@@ -102,6 +102,12 @@ class ModelConfig:
     # 0 disables streaming (everything uploads, the historical path).
     gnn_feature_budget_bytes: int = 0  # device bytes granted to feature chunks
     gnn_feature_chunk_rows: int = 0  # rows per chunk (0 = derive from budget)
+    # Locality controls for the streamed path (A/B-able from serving):
+    # packing rebuilds tile membership around source chunks
+    # (scheduler.pack_tiles_by_chunk); reorder=False keeps plan order as the
+    # control arm for the run-reordering pass.
+    gnn_stream_packing: bool = False  # pack tiles by source chunk
+    gnn_stream_reorder: bool = True  # locality-reorder tile runs
 
     # --- frontend stubs (vlm/audio): inputs arrive as embeddings ---
     embeds_input: bool = False

@@ -647,9 +647,11 @@ class AmpleEngine:
         self._forward_active = False
         self._agg_slot = 0
         self._fte_slot = 0
-        # Chunk-access schedules for the out-of-core path, keyed on
-        # (mode, tag, chunk_rows, reorder) — per-plan-static like dplans.
-        self._chunk_schedules: Dict[tuple, object] = {}
+        # (plan, schedule) pairs for the out-of-core path, keyed on
+        # (mode, tag, chunk_rows, reorder, packing) — per-plan-static like
+        # dplans. The plan entry is the one the stream executes: the packed
+        # variant when packing is on, the compiled plan otherwise.
+        self._chunk_schedules: Dict[tuple, tuple] = {}
         # Device copies of per-tile plan arrays for the streamed executor,
         # keyed like _chunk_schedules: a warm streamed request re-uploads
         # zero plan bytes (the instruction stream is plan-static).
@@ -783,14 +785,33 @@ class AmpleEngine:
         return self._plans[mode]
 
     # ------------------------------------------------- out-of-core streaming
+    def _stream_plan_schedule(self, mode: str, tag: str, sf):
+        """(plan, schedule) the streamed path executes (per-plan-static).
+
+        ``sf.packing`` swaps in the chunk-packed variant of the compiled
+        plan (``scheduler.pack_tiles_by_chunk``, bitwise-equal outputs) with
+        plan-order execution — packing already emitted tiles in chunk order,
+        so the run-reordering pass has nothing left to sort. Unpacked plans
+        keep the ``sf.reorder`` run permutation.
+        """
+        key = (mode, tag, sf.store.chunk_rows, sf.reorder, sf.packing)
+        if key not in self._chunk_schedules:
+            plan = self.plans(mode)[tag]
+            if sf.packing:
+                plan = sched.pack_tiles_by_chunk(plan, sf.store.chunk_rows)
+                schedule = sched.build_chunk_schedule(
+                    plan, sf.store.chunk_rows, reorder=False
+                )
+            else:
+                schedule = sched.build_chunk_schedule(
+                    plan, sf.store.chunk_rows, reorder=sf.reorder
+                )
+            self._chunk_schedules[key] = (plan, schedule)
+        return self._chunk_schedules[key]
+
     def _chunk_schedule(self, mode: str, tag: str, sf):
         """Schedule cache for the streamed path (per-plan-static artifact)."""
-        key = (mode, tag, sf.store.chunk_rows, sf.reorder)
-        if key not in self._chunk_schedules:
-            self._chunk_schedules[key] = sched.build_chunk_schedule(
-                self.plans(mode)[tag], sf.store.chunk_rows, reorder=sf.reorder
-            )
-        return self._chunk_schedules[key]
+        return self._stream_plan_schedule(mode, tag, sf)[1]
 
     def _stream_tiles_for(self, mode: str, tag: str, sf):
         """Device copies of one plan's per-tile arrays (plan-static).
@@ -801,11 +822,10 @@ class AmpleEngine:
         """
         from repro.memory.prefetcher import make_device_tile_stream
 
-        key = (mode, tag, sf.store.chunk_rows, sf.reorder)
+        key = (mode, tag, sf.store.chunk_rows, sf.reorder, sf.packing)
         if key not in self._stream_tiles:
-            ts = make_device_tile_stream(
-                self.plans(mode)[tag], self._chunk_schedule(mode, tag, sf)
-            )
+            plan, schedule = self._stream_plan_schedule(mode, tag, sf)
+            ts = make_device_tile_stream(plan, schedule)
             self._stream_tiles[key] = ts
             sf.stats.instr_bytes += ts.nbytes  # the cold upload, charged once
         return self._stream_tiles[key]
@@ -818,8 +838,12 @@ class AmpleEngine:
                 f"feature store has {sf.store.num_rows} rows but graph has "
                 f"{self.graph.num_nodes} nodes"
             )
-        plans = self.plans(mode)
-        schedules = {tag: self._chunk_schedule(mode, tag, sf) for tag in plans}
+        pairs = {
+            tag: self._stream_plan_schedule(mode, tag, sf)
+            for tag in self.plans(mode)
+        }
+        plans = {tag: p for tag, (p, _) in pairs.items()}
+        schedules = {tag: s for tag, (_, s) in pairs.items()}
         tiles = {tag: self._stream_tiles_for(mode, tag, sf) for tag in plans}
         qp = None
         if self.cfg.mixed_precision and "int8" in plans:

@@ -47,6 +47,7 @@ __all__ = [
     "build_padded_plan",
     "build_mixed_precision_plans",
     "build_chunk_schedule",
+    "pack_tiles_by_chunk",
     "tile_runs",
     "pack_segments",
     "concat_tile_plans",
@@ -760,3 +761,193 @@ def pack_segments(
             lane -= capacity
     num_tiles = tile + (1 if lane > 0 else 0)
     return tile_of, offset_of, max(num_tiles, 1)
+
+
+# ---------------------------------------------------------------------------
+# Locality-aware tile packing — rebuild tile membership around feature chunks
+# ---------------------------------------------------------------------------
+
+
+def pack_tiles_by_chunk(plan: EdgeTilePlan, chunk_rows: int) -> EdgeTilePlan:
+    """Repack a tile plan so co-tiled edges share source feature chunks.
+
+    ``build_chunk_schedule(reorder=True)`` only permutes whole runs, so a hit
+    rate ceiling remains: tile membership was fixed by degree order, and on
+    graphs without neighborhood structure every tile touches most chunks.
+    This pass rebuilds tile membership around the chunk axis instead. Each
+    single-tile run is decomposed into its per-node segment spans (the unit
+    that can move without perturbing any output row's accumulation order),
+    units are bucketed by their mean source chunk and packed first-fit-
+    decreasing (:func:`pack_segments`) into fresh tiles, and buckets are
+    emitted in chunk order, so consecutive tiles draw from the same region of
+    the feature matrix. Multi-tile runs (nodes split across tiles) are
+    atomic: their tiles are copied verbatim and the block is ordered among
+    the buckets by its mean touched chunk.
+
+    Bitwise contract with the unpacked plan: every output row accumulates
+    the same lane products in the same order. A unit's lanes move as one
+    contiguous block (the intra-segment sum is unchanged); a tile that used
+    all ``S`` segments carries its trailing padding lanes along with the
+    last unit, because the in-memory scan folds their signed-zero products
+    into that segment's partial sum; and fresh padding in packed tiles maps
+    to the sentinel segment, whose partial sum the executor discards (its
+    gather index points at a row the tile already reads, so padding never
+    drags a foreign chunk into the tile's working set). Plans with
+    ``segments_per_tile == 1`` have no sentinel segment to give fresh
+    padding and are returned unchanged.
+    """
+    E, S = plan.edges_per_tile, plan.segments_per_tile
+    T = plan.num_tiles
+    if S < 2 or T <= 1 or chunk_rows <= 0:
+        return plan
+    sentinel = plan.num_nodes
+    lane_chunk = plan.gather_idx.astype(np.int64) // chunk_rows
+    valid = plan.edge_ids >= 0
+    runs = tile_runs(plan)
+
+    # blocks: (sort key, kind, payload). "verbatim" payload = (lo, hi) tile
+    # span of a multi-tile run; "pack" payload = unit indices of one new tile.
+    blocks: List[Tuple[float, str, object]] = []
+    single: List[int] = []
+    n_empty = 0  # all-padding tiles (union size-class filler): re-appended
+    for r in range(runs.size - 1):
+        lo, hi = int(runs[r]), int(runs[r + 1])
+        if hi - lo > 1:
+            v = valid[lo:hi]
+            key = float(lane_chunk[lo:hi][v].mean()) if v.any() else 0.0
+            blocks.append((key, "verbatim", (lo, hi)))
+        elif bool((plan.out_node[lo] == sentinel).all()):
+            n_empty += 1
+        else:
+            single.append(lo)
+
+    # Per-segment lane spans of the single-tile runs, extracted in one flat
+    # pass: a span starts where the segment id changes (or a tile begins).
+    # Trailing padding lanes share segment id S-1, so when a tile used all S
+    # segments they merge into the last real span automatically — exactly
+    # the lanes whose products the in-memory scan folds into that segment.
+    u_tile = u_start = u_len = u_out = u_key = np.zeros(0, np.int64)
+    if single:
+        single_arr = np.asarray(single, np.int64)
+        K = single_arr.size
+        s_flat = plan.seg_ids[single_arr].astype(np.int64).ravel()
+        tid = np.repeat(np.arange(K, dtype=np.int64), E)
+        is_start = np.ones(K * E, bool)
+        is_start[1:] = (s_flat[1:] != s_flat[:-1]) | (tid[1:] != tid[:-1])
+        starts = np.flatnonzero(is_start)
+        lens = np.diff(np.append(starts, K * E))
+        span_tile = single_arr[tid[starts]]
+        span_seg = s_flat[starts]
+        span_out = plan.out_node[span_tile, span_seg].astype(np.int64)
+        ch_flat = lane_chunk[single_arr].ravel()
+        v_flat = valid[single_arr].ravel()
+        ch_sum = np.add.reduceat(np.where(v_flat, ch_flat, 0), starts)
+        v_cnt = np.add.reduceat(v_flat.astype(np.int64), starts)
+        real = span_out != sentinel  # pure-padding spans are dropped
+        u_tile = span_tile[real]
+        u_start = (starts - tid[starts] * E)[real]
+        u_len = lens[real]
+        u_out = span_out[real]
+        u_key = ch_sum[real] // np.maximum(v_cnt[real], 1)
+
+    # Bucket units by mean source chunk; FFD-pack each bucket into tiles.
+    # A packed tile holds at most S-1 units so segment S-1 stays sentinel
+    # (fresh padding must never pollute a real segment's sum).
+    max_units = max(S - 1, 1)
+    for ckey in np.unique(u_key):
+        sel = np.flatnonzero(u_key == ckey)
+        tile_of, _, ntiles = pack_segments(u_len[sel], E)
+        groups: List[List[int]] = [[] for _ in range(ntiles)]
+        for j, i in enumerate(sel):
+            groups[int(tile_of[j])].append(int(i))
+        if any(len(gr) > max_units for gr in groups):
+            # Rare (more than S-1 units fit in E lanes): greedy longest-first
+            # refill under both the lane and the segment budget.
+            groups = []
+            cur: List[int] = []
+            lanes = 0
+            for i in sel[np.argsort(-u_len[sel], kind="stable")]:
+                ln = int(u_len[i])
+                if cur and (lanes + ln > E or len(cur) >= max_units):
+                    groups.append(cur)
+                    cur, lanes = [], 0
+                cur.append(int(i))
+                lanes += ln
+            if cur:
+                groups.append(cur)
+        for gr in groups:
+            if gr:
+                blocks.append((float(ckey), "pack", gr))
+    blocks.sort(key=lambda b: b[0])
+
+    n_pack = sum(1 for b in blocks if b[1] == "pack")
+    n_verb = sum(b[2][1] - b[2][0] for b in blocks if b[1] == "verbatim")
+    newT = max(n_pack + n_verb + n_empty, 1)
+    new_g = np.zeros((newT, E), np.int32)
+    new_c = np.zeros((newT, E), np.float32)
+    new_s = np.full((newT, E), S - 1, np.int32)
+    new_o = np.full((newT, S), sentinel, np.int32)
+    new_e = np.full((newT, E), -1, np.int32)
+
+    # Layout pass: verbatim blocks copy whole tiles; packed tiles record one
+    # (unit -> destination lane/segment) placement each, copied flat below.
+    p_unit: List[int] = []
+    p_dst_tile: List[int] = []
+    p_dst_off: List[int] = []
+    p_seg: List[int] = []
+    pack_fill: List[Tuple[int, int]] = []  # (tile, lanes used)
+    dst = 0
+    for _, kind, payload in blocks:
+        if kind == "verbatim":
+            lo, hi = payload  # type: ignore[misc]
+            n = hi - lo
+            new_g[dst : dst + n] = plan.gather_idx[lo:hi]
+            new_c[dst : dst + n] = plan.coeff[lo:hi]
+            new_s[dst : dst + n] = plan.seg_ids[lo:hi]
+            new_o[dst : dst + n] = plan.out_node[lo:hi]
+            new_e[dst : dst + n] = plan.edge_ids[lo:hi]
+            dst += n
+        else:
+            off = 0
+            for si, i in enumerate(payload):  # type: ignore[arg-type]
+                p_unit.append(i)
+                p_dst_tile.append(dst)
+                p_dst_off.append(off)
+                p_seg.append(si)
+                off += int(u_len[i])
+            pack_fill.append((dst, off))
+            dst += 1
+
+    if p_unit:
+        idx = np.asarray(p_unit, np.int64)
+        dt = np.asarray(p_dst_tile, np.int64)
+        do = np.asarray(p_dst_off, np.int64)
+        sg = np.asarray(p_seg, np.int64)
+        lens = u_len[idx]
+        total = int(lens.sum())
+        within = np.arange(total, dtype=np.int64) - np.repeat(
+            np.cumsum(lens) - lens, lens
+        )
+        src = np.repeat(u_tile[idx] * E + u_start[idx], lens) + within
+        dflat = np.repeat(dt * E + do, lens) + within
+        new_g.ravel()[dflat] = plan.gather_idx.ravel()[src]
+        new_c.ravel()[dflat] = plan.coeff.ravel()[src]
+        new_e.ravel()[dflat] = plan.edge_ids.ravel()[src]
+        new_s.ravel()[dflat] = np.repeat(sg, lens).astype(np.int32)
+        new_o[dt, sg] = u_out[idx].astype(np.int32)
+        for t, fill in pack_fill:
+            if fill < E:
+                new_g[t, fill:] = new_g[t, 0]
+
+    return EdgeTilePlan(
+        gather_idx=new_g,
+        coeff=new_c,
+        seg_ids=new_s,
+        out_node=new_o,
+        node_ids=plan.node_ids,
+        edge_ids=new_e,
+        num_nodes=plan.num_nodes,
+        edges_per_tile=E,
+        segments_per_tile=S,
+        total_edges=plan.total_edges,
+    )

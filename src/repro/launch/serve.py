@@ -70,6 +70,8 @@ def serve_gnn(cfg, args) -> None:
         key=jax.random.PRNGKey(0),
         num_shards=args.num_shards,
         feature_budget_bytes=budget or None,
+        stream_packing=True if args.stream_packing else None,
+        stream_reorder=False if args.no_stream_reorder else None,
     )
     g = make_dataset(
         args.dataset, max_nodes=args.nodes, max_feature_dim=cfg.d_model, seed=0
@@ -93,6 +95,7 @@ def serve_gnn(cfg, args) -> None:
         tag = "hit " if r.cache_hit else "cold"
         stream = (
             f"  streamed {r.bytes_streamed >> 10}KB hit={r.chunk_hit_rate:.2f}"
+            f" overlap={r.prefetch_overlap:.2f} stall={r.stall_ms:.1f}ms"
             if r.streamed
             else ""
         )
@@ -343,6 +346,13 @@ def main():
                          "chunk-wise from the host feature store (0 = cfg "
                          "default / off). Outputs are bitwise-identical to "
                          "the in-memory path.")
+    ap.add_argument("--stream-packing", action="store_true",
+                    help="streamed path: rebuild tile membership around "
+                         "source chunks (scheduler.pack_tiles_by_chunk) "
+                         "instead of only reordering runs")
+    ap.add_argument("--no-stream-reorder", action="store_true",
+                    help="streamed path: keep plan tile order (the control "
+                         "arm for the locality reorder pass)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=not args.full)

@@ -14,10 +14,22 @@ fixed-budget device chunk cache:
 * **reuse-distance eviction** — the schedule is known ahead of time, so
   eviction is Belady-optimal: the resident chunk with the farthest next use
   goes first.
-* **double buffering** — after a tile's step is issued (async dispatch),
-  chunks for the next ``prefetch_depth`` tiles are uploaded into free slots
-  so the copy overlaps the running tile's aggregation; the overlap fraction
-  (prefetched / total uploads) is reported in :class:`StreamStats`.
+* **overlapped staging** — with ``prefetch_depth > 0`` a background host
+  worker runs an exact *shadow copy* of the cache state machine a few tiles
+  ahead of the consumer, gathering upcoming chunks (and sparse row residues)
+  and fencing their device copies off the critical path. The consumer takes
+  staged copies by key; every copy carries wall-clock start/stop timestamps
+  (``jax.block_until_ready`` fenced), so ``StreamStats.copy_ms`` is the true
+  cost of the copies and ``stall_ms`` the time the consumer actually blocked
+  — ``prefetch_overlap = 1 - stall/copy`` is measured, not inferred. Slot
+  decisions are made by the deterministic host state machine alone, so
+  outputs are bitwise-identical with staging on or off.
+* **sparse residue** — a visit whose chunk loses the Belady comparison (its
+  next use is farther than every resident chunk's) bypasses the cache: only
+  the rows the tile actually gathers move, as a padded row block scattered
+  into the gather buffer — same values as a full-chunk upload, a small
+  fraction of the bytes. Thrashing budgets stop streaming whole chunks to
+  serve a handful of lanes (the reddit 1/8-budget pathology).
 
 Bitwise contract: the streamed executors reproduce the in-memory engine
 paths bit for bit. Gathered rows are exact copies of the dense rows (f32
@@ -33,8 +45,21 @@ block is gathered and transformed in one piece.
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
+import time
 from functools import partial
-from typing import Callable, Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
+from typing import (
+    Callable,
+    Dict,
+    FrozenSet,
+    List,
+    Mapping,
+    NamedTuple,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 import jax
 import jax.numpy as jnp
@@ -101,20 +126,30 @@ class StreamStats:
     """Telemetry of one (or several merged) streamed executions.
 
     ``accesses = chunk_hits + chunk_misses`` counts tile→chunk visits;
-    ``uploads = chunk_misses + prefetched`` counts host→device chunk copies
-    (a prefetched chunk's later visit is a hit, its copy overlapped compute).
+    ``uploads = chunk_misses + prefetched`` counts non-hit servings (full
+    chunk copies plus sparse-residue visits; a prefetched chunk's later
+    visit is a hit). ``stall_ms``/``copy_ms`` are wall-clock: every feature
+    copy is timestamped and device-fenced, and ``stall_ms`` accumulates only
+    the time the consuming thread actually blocked, so
+    ``prefetch_overlap = 1 - stall/copy`` reports how much of the copy cost
+    was hidden behind compute. Both stay 0 on the synchronous path
+    (``prefetch_depth == 0`` or ``async_stage=False``), where no overlap
+    claim is made.
     """
 
     bytes_streamed: int = 0  # feature bytes moved host->device
     instr_bytes: int = 0  # per-tile plan arrays (the instruction stream)
     chunk_hits: int = 0
-    chunk_misses: int = 0  # demand uploads (visit found chunk absent)
+    chunk_misses: int = 0  # demand servings (visit found chunk absent)
     prefetched: int = 0  # uploads issued ahead of their first visit
     evictions: int = 0
     waves: int = 0
     tiles: int = 0
     fallbacks: int = 0  # dense materializations (budget violated, loud)
     fallback_bytes: int = 0
+    sparse_rows: int = 0  # rows served as sparse residue (cache bypassed)
+    stall_ms: float = 0.0  # consumer wall time blocked on feature copies
+    copy_ms: float = 0.0  # wall time of the copies themselves (fenced)
 
     @property
     def accesses(self) -> int:
@@ -130,8 +165,10 @@ class StreamStats:
 
     @property
     def prefetch_overlap(self) -> float:
-        """Fraction of chunk copies that overlapped compute (double buffer)."""
-        return self.prefetched / self.uploads if self.uploads else 0.0
+        """Wall-clock fraction of copy time hidden behind compute."""
+        if self.copy_ms <= 0.0:
+            return 0.0
+        return min(max(1.0 - self.stall_ms / self.copy_ms, 0.0), 1.0)
 
     def merge(self, other: "StreamStats") -> None:
         for f in dataclasses.fields(self):
@@ -160,11 +197,20 @@ class StreamedFeatures:
         *,
         prefetch_depth: int = 1,
         reorder: bool = True,
+        packing: bool = False,
+        async_stage: bool = True,
     ):
         self.store = store
         self.budget_bytes = int(budget_bytes)
         self.prefetch_depth = int(prefetch_depth)
         self.reorder = bool(reorder)
+        # packing: serve through chunk-packed tile plans
+        # (scheduler.pack_tiles_by_chunk) instead of only reordering runs.
+        self.packing = bool(packing)
+        # async_stage: overlap host gathers/uploads with compute via the
+        # staging worker (wall-clock stall/copy telemetry); False keeps the
+        # fully synchronous path (same outputs bit for bit).
+        self.async_stage = bool(async_stage)
         self.stats = StreamStats()
 
     @property
@@ -243,6 +289,254 @@ def _tile_step_i8(
     return out.at[out_node].add(partial_sums)
 
 
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(
+    gathered: jnp.ndarray, rows: jnp.ndarray, lanes: jnp.ndarray
+) -> jnp.ndarray:
+    # Sparse residue: rows gathered host-side land directly on their lanes.
+    # Padding entries carry an out-of-bounds lane index and are dropped.
+    return gathered.at[lanes].set(rows, mode="drop")
+
+
+# --------------------------------------------------------- cache state model
+class _TileMoves(NamedTuple):
+    hits: Tuple[int, ...]  # chunks already resident (pinned for the wave)
+    uploads: Tuple[Tuple[int, int], ...]  # (chunk, slot) admitted this tile
+    sparse: Tuple[int, ...]  # chunks served as row residue (not admitted)
+
+
+class _CacheState:
+    """Pure host model of the chunk cache: slot map + Belady cursors.
+
+    Every decision is a deterministic function of (schedule, visit order),
+    which is what makes staging exact: the worker advances a ``clone()`` of
+    this state a few tiles ahead and the real execution replays the same
+    moves. It is also why staged and unstaged runs are bitwise-identical —
+    slot assignment never depends on timing.
+    """
+
+    __slots__ = (
+        "num_slots", "positions", "cursor", "slot_of", "chunk_in", "free",
+        "evictions",
+    )
+
+    def __init__(self, num_slots: int, positions: Dict[int, np.ndarray]):
+        self.num_slots = int(num_slots)
+        self.positions = positions  # shared, read-only
+        self.cursor = {c: 0 for c in positions}
+        self.slot_of: Dict[int, int] = {}
+        self.chunk_in: List[int] = [-1] * self.num_slots
+        self.free: List[int] = list(range(self.num_slots))
+        self.evictions = 0
+
+    def clone(self) -> "_CacheState":
+        st = object.__new__(_CacheState)
+        st.num_slots = self.num_slots
+        st.positions = self.positions
+        st.cursor = dict(self.cursor)
+        st.slot_of = dict(self.slot_of)
+        st.chunk_in = list(self.chunk_in)
+        st.free = list(self.free)
+        st.evictions = self.evictions
+        return st
+
+    def next_use(self, c: int) -> int:
+        p = self.positions.get(c)
+        if p is None:
+            return _INF
+        k = self.cursor[c]
+        return int(p[k]) if k < p.size else _INF
+
+    def _next_use_after(self, c: int) -> int:
+        """Next visit position strictly after the one being served now."""
+        p = self.positions.get(c)
+        if p is None:
+            return _INF
+        k = self.cursor[c] + 1
+        return int(p[k]) if k < p.size else _INF
+
+    def _evict(self, pinned: set, *, min_use: int) -> Optional[int]:
+        """Free the resident chunk with the farthest next use (Belady).
+
+        A victim is taken only when its next use is strictly beyond
+        ``min_use`` — callers pass the incoming chunk's next use, so an
+        admission never displaces hotter data. Returns None when no
+        admissible victim exists.
+        """
+        victim, victim_use = -1, min_use
+        for slot, c in enumerate(self.chunk_in):
+            if c < 0 or c in pinned:
+                continue
+            use = self.next_use(c)
+            if use > victim_use:
+                victim, victim_use = slot, use
+        if victim < 0:
+            return None
+        del self.slot_of[self.chunk_in[victim]]
+        self.chunk_in[victim] = -1
+        self.evictions += 1
+        return victim
+
+    def _admit(self, c: int, slot: int) -> None:
+        self.slot_of[c] = slot
+        self.chunk_in[slot] = c
+
+    def decide_tile(self, chunks: Sequence[int]) -> _TileMoves:
+        """Serve one tile's chunk visits; commits slot/cursor state.
+
+        Missing chunks are admitted into free slots, else over a Belady
+        victim whose next use is strictly beyond the chunk's *own* next use
+        after this visit (true Belady: if the incoming chunk is the
+        farthest-future of all, admitting it would be the wrong eviction) —
+        losers are served as sparse residue instead of thrashing a slot.
+        """
+        hits: List[int] = []
+        uploads: List[Tuple[int, int]] = []
+        sparse: List[int] = []
+        pinned: set = set()
+        for c in chunks:
+            c = int(c)
+            if c in self.slot_of:
+                hits.append(c)
+                pinned.add(c)
+        for c in chunks:
+            c = int(c)
+            if c in pinned:
+                continue
+            if self.free:
+                slot: Optional[int] = self.free.pop()
+            else:
+                slot = self._evict(pinned, min_use=self._next_use_after(c))
+            if slot is None:
+                sparse.append(c)
+            else:
+                self._admit(c, slot)
+                uploads.append((c, slot))
+                pinned.add(c)
+        for c in chunks:
+            c = int(c)
+            if c in self.cursor:
+                self.cursor[c] += 1
+        return _TileMoves(tuple(hits), tuple(uploads), tuple(sparse))
+
+    def prefetch_moves(
+        self,
+        pos: int,
+        order: np.ndarray,
+        tile_chunks: Sequence[np.ndarray],
+        depth: int,
+    ) -> List[Tuple[int, int]]:
+        """Admissions for the next ``depth`` tiles' chunks; commits state.
+
+        Free slots first, else a Belady-conditional eviction (victim's next
+        use strictly beyond the prefetched chunk's); stops at the first
+        chunk no slot will take.
+        """
+        moves: List[Tuple[int, int]] = []
+        if depth <= 0:
+            return moves
+        for p in range(pos + 1, min(pos + 1 + depth, order.size)):
+            for c in tile_chunks[int(order[p])]:
+                c = int(c)
+                if c in self.slot_of:
+                    continue
+                if self.free:
+                    slot: Optional[int] = self.free.pop()
+                else:
+                    slot = self._evict(set(), min_use=self.next_use(c))
+                    if slot is None:
+                        return moves
+                self._admit(c, slot)
+                moves.append((c, slot))
+        return moves
+
+
+# ------------------------------------------------------------ staging worker
+class _StagedItem:
+    __slots__ = ("event", "value", "build_ms")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.value = None
+        self.build_ms = 0.0
+
+
+class _StageWorker:
+    """Background host thread building keyed feature copies ahead of use.
+
+    Each request's build (host gather + device put) is timed and fenced
+    with ``jax.block_until_ready`` inside the worker, so a consumed item's
+    ``build_ms`` is the true wall cost of that copy and the consumer's
+    event wait is the true stall. Items are one-shot: ``take`` removes the
+    key, so a chunk uploaded, evicted, and staged again later gets a fresh
+    build.
+    """
+
+    def __init__(self, build_fn: Callable[[tuple], object]):
+        self._build = build_fn
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._items: Dict[tuple, _StagedItem] = {}
+        self._lock = threading.Lock()
+        self._dead = False
+        self._thread = threading.Thread(
+            target=self._run, name="chunk-stage", daemon=True
+        )
+        self._thread.start()
+
+    @property
+    def outstanding(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+    def request(self, key: tuple) -> bool:
+        """Enqueue a build for ``key``; False if already staged/in flight."""
+        with self._lock:
+            if key in self._items:
+                return False
+            self._items[key] = _StagedItem()
+        self._q.put(key)
+        return True
+
+    def take(self, key: tuple):
+        """Blocking claim: ``(value, build_ms, wait_ms)`` or None."""
+        with self._lock:
+            item = self._items.get(key)
+        if item is None:
+            return None
+        t0 = time.perf_counter()
+        item.event.wait()
+        wait_ms = (time.perf_counter() - t0) * 1e3
+        with self._lock:
+            self._items.pop(key, None)
+        if item.value is None:
+            return None
+        return item.value, item.build_ms, wait_ms
+
+    def _run(self) -> None:
+        while True:
+            key = self._q.get()
+            if key is None:
+                return
+            with self._lock:
+                item = self._items.get(key)
+            if item is None or self._dead:
+                if item is not None:
+                    item.event.set()
+                continue
+            t0 = time.perf_counter()
+            try:
+                item.value = self._build(key)
+            except Exception:  # consumer falls back to the inline build
+                item.value = None
+            item.build_ms = (time.perf_counter() - t0) * 1e3
+            item.event.set()
+
+    def stop(self) -> None:
+        self._dead = True
+        self._q.put(None)
+        self._thread.join()
+
+
 # ------------------------------------------------------------- chunk cache
 class ChunkPrefetcher:
     """Fixed-budget device chunk cache executing one plan stream.
@@ -264,6 +558,7 @@ class ChunkPrefetcher:
         stats: Optional[StreamStats] = None,
         quant_scale=None,
         tiles: Optional[DeviceTileStream] = None,
+        async_stage: bool = True,
     ):
         if schedule.chunk_rows != store.chunk_rows:
             raise ValueError(
@@ -285,6 +580,7 @@ class ChunkPrefetcher:
             np.float32(store.agg_scale) if quant_scale is None else np.float32(quant_scale)
         )
         self.prefetch_depth = max(int(prefetch_depth), 0)
+        self.async_stage = bool(async_stage)
         self.stats = stats if stats is not None else StreamStats()
         # Device-cached instruction stream (owner charged its upload once);
         # None = upload per-tile plan slices per call (the uncached path,
@@ -299,19 +595,26 @@ class ChunkPrefetcher:
         self._buf = jnp.zeros(
             (self.num_slots, store.chunk_rows, store.dim), dtype
         )
-        self._slot_of: Dict[int, int] = {}
-        self._chunk_in: List[int] = [-1] * self.num_slots
-        self._free: List[int] = list(range(self.num_slots))
-        # Belady bookkeeping: per-chunk sorted visit positions + a cursor.
-        self._positions: Dict[int, np.ndarray] = {}
-        self._cursor: Dict[int, int] = {}
+        # Belady bookkeeping: per-chunk sorted visit positions + a cursor,
+        # held by the deterministic cache state machine (the staging worker
+        # simulates a clone of it a few tiles ahead).
+        positions: Dict[int, List[int]] = {}
         for pos, t in enumerate(schedule.order):
             for c in schedule.tile_chunks[int(t)]:
-                self._positions.setdefault(int(c), []).append(pos)  # type: ignore[arg-type]
-        self._positions = {
-            c: np.asarray(p, np.int64) for c, p in self._positions.items()
-        }
-        self._cursor = {c: 0 for c in self._positions}
+                positions.setdefault(int(c), []).append(pos)
+        self._state = _CacheState(
+            self.num_slots,
+            {c: np.asarray(p, np.int64) for c, p in positions.items()},
+        )
+        self._worker: Optional[_StageWorker] = None
+        # Predicted sparse chunk set per schedule position (written by the
+        # shadow pass, read by the worker's build and validated on consume).
+        self._sparse_sets: Dict[int, FrozenSet[int]] = {}
+
+    # -------------------------------------------------------------- metrics
+    def stats_dict(self) -> Dict[str, float]:
+        """Telemetry snapshot (counters + wall-clock stall/copy/overlap)."""
+        return self.stats.as_dict()
 
     # ------------------------------------------------------------ plumbing
     def _host_chunk(self, c: int) -> np.ndarray:
@@ -321,72 +624,132 @@ class ChunkPrefetcher:
             return self.store.chunk_i8(c)  # precomputed under the same scale
         return FeatureStore._quantize_block(self.store.chunk_f32(c), self.quant_scale)
 
-    def _next_use(self, c: int) -> int:
-        p = self._positions.get(c)
-        if p is None:
-            return _INF
-        k = self._cursor[c]
-        return int(p[k]) if k < p.size else _INF
+    def _host_rows(self, c: int, offs: np.ndarray) -> np.ndarray:
+        """Row gather from one chunk in the stream's representation —
+        bitwise the rows a full-chunk upload would have served (the int8
+        re-quantization is elementwise, so a row subset quantizes
+        identically to the same rows of the whole chunk)."""
+        if self.stream == "f32":
+            return self.store.chunk_f32(c)[offs]
+        if self.quant_scale == self.store.agg_scale:
+            return self.store.chunk_i8(c)[offs]
+        return FeatureStore._quantize_block(
+            self.store.chunk_f32(c)[offs], self.quant_scale
+        )
 
-    def _consume(self, c: int) -> None:
-        if c in self._cursor:
-            self._cursor[c] += 1
+    def _host_sparse(self, t: int, chunks: FrozenSet[int]):
+        """Stage one tile's sparse residue: (lanes, rows, real row count).
 
-    def _evict_slot(self, pinned: set, *, min_use: int = -1) -> Optional[int]:
-        """Free the resident chunk with the farthest next use (Belady).
-
-        ``min_use`` makes the eviction conditional: a victim is only taken
-        when its next use is strictly beyond it — the prefetch path passes
-        the incoming chunk's next use so prefetching never displaces hotter
-        data. Returns None when no admissible victim exists.
+        Gathers exactly the lanes whose source chunk was not admitted, pads
+        the row count to a power-of-two bucket (stable device shapes) with
+        out-of-bounds lane indices that the scatter drops, and fences the
+        device copies so the caller's timestamps bound the true copy cost.
         """
-        victim, victim_use = -1, min_use
-        for slot, c in enumerate(self._chunk_in):
-            if c < 0 or c in pinned:
-                continue
-            use = self._next_use(c)
-            if use > victim_use:
-                victim, victim_use = slot, use
-        if victim < 0:
-            return None
-        del self._slot_of[self._chunk_in[victim]]
-        self._chunk_in[victim] = -1
-        self.stats.evictions += 1
-        return victim
+        lane_chunk = self.schedule.lane_chunk[t]
+        lane_off = self.schedule.lane_off[t]
+        cs = np.fromiter(chunks, np.int64, len(chunks))
+        sel = np.flatnonzero(np.isin(lane_chunk, cs))
+        k = int(sel.size)
+        kp = 1 << max(k - 1, 0).bit_length() if k else 1
+        dtype = np.float32 if self.stream == "f32" else np.int8
+        rows = np.zeros((kp, self.store.dim), dtype)
+        sel_chunk = lane_chunk[sel]
+        for c in sorted(chunks):
+            m = np.flatnonzero(sel_chunk == c)
+            if m.size:
+                rows[m] = self._host_rows(int(c), lane_off[sel[m]])
+        lanes = np.full(kp, lane_chunk.size, np.int32)  # OOB pad -> dropped
+        lanes[:k] = sel
+        staged = (jnp.asarray(lanes), jnp.asarray(rows), k)
+        jax.block_until_ready(staged[:2])
+        return staged
+
+    def _build_staged(self, key: tuple):
+        """Worker-side build: fenced device copies keyed like the consumer
+        will claim them."""
+        if key[0] == "chunk":
+            return jax.block_until_ready(jnp.asarray(self._host_chunk(key[1])))
+        _, pos, t = key
+        return self._host_sparse(t, self._sparse_sets.get(pos, frozenset()))
 
     def _upload(self, c: int, slot: int, *, prefetch: bool) -> None:
-        self._buf = _upload_slot(
-            self._buf, jnp.asarray(self._host_chunk(c)), jnp.int32(slot)
+        """Device copy of one admitted chunk (slot already committed by the
+        state machine). Staged copies are claimed by key; unstaged ones are
+        built inline and count fully as stall (the consumer blocked for the
+        whole copy)."""
+        staged = (
+            self._worker.take(("chunk", c)) if self._worker is not None else None
         )
-        self._slot_of[c] = slot
-        self._chunk_in[slot] = c
+        if staged is not None:
+            dev, build_ms, wait_ms = staged
+            self.stats.copy_ms += build_ms
+            self.stats.stall_ms += wait_ms
+        elif self._worker is not None:
+            t0 = time.perf_counter()
+            dev = jax.block_until_ready(jnp.asarray(self._host_chunk(c)))
+            dt = (time.perf_counter() - t0) * 1e3
+            self.stats.copy_ms += dt
+            self.stats.stall_ms += dt
+        else:  # synchronous path: untimed, no overlap claim
+            dev = jnp.asarray(self._host_chunk(c))
+        self._buf = _upload_slot(self._buf, dev, jnp.int32(slot))
         self.stats.bytes_streamed += self.chunk_bytes
         if prefetch:
             self.stats.prefetched += 1
         else:
             self.stats.chunk_misses += 1
 
-    def _prefetch_ahead(self, pos: int) -> None:
-        """Upload chunks the next ``prefetch_depth`` tiles need so the copy
-        overlaps the just-issued tile step (async dispatch) — into free slots
-        first, else by evicting a resident chunk whose next use is strictly
-        farther than the prefetched chunk's (the Belady comparison, so
-        prefetching never displaces hotter data)."""
-        if self.prefetch_depth <= 0:
-            return
+    def _sparse_pass(
+        self, pos: int, t: int, sparse: Tuple[int, ...], gathered: jnp.ndarray
+    ) -> jnp.ndarray:
+        """Scatter the tile's non-admitted chunks' rows onto their lanes."""
+        chunks = frozenset(sparse)
+        staged = None
+        if self._worker is not None and self._sparse_sets.get(pos) == chunks:
+            staged = self._worker.take(("rows", pos, t))
+        if staged is not None:
+            (lanes_dev, rows_dev, k), build_ms, wait_ms = staged
+            self.stats.copy_ms += build_ms
+            self.stats.stall_ms += wait_ms
+        elif self._worker is not None:
+            t0 = time.perf_counter()
+            lanes_dev, rows_dev, k = self._host_sparse(t, chunks)
+            dt = (time.perf_counter() - t0) * 1e3
+            self.stats.copy_ms += dt
+            self.stats.stall_ms += dt
+        else:
+            lanes_dev, rows_dev, k = self._host_sparse(t, chunks)
+        self.stats.bytes_streamed += int(rows_dev.nbytes)
+        self.stats.sparse_rows += k
+        self.stats.chunk_misses += len(sparse)
+        return _scatter_rows(gathered, rows_dev, lanes_dev)
+
+    def _stage_ahead(
+        self, shadow: _CacheState, shadow_pos: int, pos: int
+    ) -> int:
+        """Advance the shadow state machine so tiles up to ``pos + depth``
+        have their demand uploads, prefetches and sparse residues staged.
+        The shadow replays exactly the decisions the real state will make
+        (both are deterministic), so every request key matches a future
+        consume. Pauses when too many items are outstanding."""
         order = self.schedule.order
-        for p in range(pos + 1, min(pos + 1 + self.prefetch_depth, order.size)):
-            for c in self.schedule.tile_chunks[int(order[p])]:
-                c = int(c)
-                if c in self._slot_of:
-                    continue
-                if self._free:
-                    slot = self._free.pop()
-                else:
-                    slot = self._evict_slot(set(), min_use=self._next_use(c))
-                    if slot is None:
-                        return
-                self._upload(c, slot, prefetch=True)
+        cap = 2 * (self.prefetch_depth + 1) + self.num_slots + 8
+        while shadow_pos < order.size and shadow_pos <= pos + self.prefetch_depth:
+            if self._worker.outstanding >= cap:
+                break
+            t = int(order[shadow_pos])
+            mv = shadow.decide_tile(self.schedule.tile_chunks[t])
+            for c, _slot in mv.uploads:
+                self._worker.request(("chunk", c))
+            if mv.sparse:
+                self._sparse_sets[shadow_pos] = frozenset(mv.sparse)
+                self._worker.request(("rows", shadow_pos, t))
+            for c, _slot in shadow.prefetch_moves(
+                shadow_pos, order, self.schedule.tile_chunks, self.prefetch_depth
+            ):
+                self._worker.request(("chunk", c))
+            shadow_pos += 1
+        return shadow_pos
 
     # ----------------------------------------------------------- execution
     def aggregate(
@@ -399,8 +762,10 @@ class ChunkPrefetcher:
 
         Bitwise-identical to ``aggregate_edge_tiles`` on the dense matrix
         (f32 stream) / on the dequantized matrix (i8 stream): same gathered
-        values, same per-tile op sequence, per-row scatter order preserved
-        by the run-respecting schedule.
+        values (resident chunks by masked select, sparse residues by row
+        scatter onto disjoint lanes), same per-tile op sequence, per-row
+        scatter order preserved by the run-respecting schedule. Staging
+        changes when copies happen, never what the device computes.
         """
         if self.stream == "i8" and qp is None:
             raise ValueError("int8 stream needs the aggregation QuantParams")
@@ -411,82 +776,84 @@ class ChunkPrefetcher:
         lane_bytes = plan.gather_idx[0].nbytes + plan.coeff[0].nbytes + (
             plan.seg_ids[0].nbytes + plan.out_node[0].nbytes
         )
-        for pos, t in enumerate(self.schedule.order):
-            t = int(t)
-            # (chunk, offset) lane splits are plan-static — precomputed on
-            # the schedule at plan time, not re-derived per request.
-            lane_chunk = self.schedule.lane_chunk[t]
-            lane_off = (
-                self.tiles.lane_off[t]
-                if self.tiles is not None
-                else jnp.asarray(self.schedule.lane_off[t], jnp.int32)
-            )
-            todo = [int(c) for c in self.schedule.tile_chunks[t]]
-            gathered = jnp.zeros(
-                (lanes,) + (self.store.dim,),
-                jnp.float32 if self.stream == "f32" else jnp.int8,
-            )
-            self.stats.tiles += 1
-            while todo:
-                wave: List[int] = []
-                pinned: set = set()
-                rest: List[int] = []
-                for c in todo:
-                    if c in self._slot_of:
-                        wave.append(c)
-                        pinned.add(c)
-                        self.stats.chunk_hits += 1
-                    else:
-                        rest.append(c)
-                for c in list(rest):
-                    if len(pinned) >= self.num_slots:
-                        break
-                    if self._free:
-                        slot = self._free.pop()
-                    else:
-                        slot = self._evict_slot(pinned)
-                        if slot is None:
-                            break
+        order = self.schedule.order
+        state = self._state
+        shadow: Optional[_CacheState] = None
+        shadow_pos = 0
+        if self.async_stage and self.prefetch_depth > 0 and order.size > 1:
+            self._worker = _StageWorker(self._build_staged)
+            shadow = state.clone()
+        try:
+            for pos, t in enumerate(order):
+                t = int(t)
+                if shadow is not None:
+                    shadow_pos = self._stage_ahead(shadow, shadow_pos, pos)
+                # (chunk, offset) lane splits are plan-static — precomputed
+                # on the schedule at plan time, not re-derived per request.
+                lane_chunk = self.schedule.lane_chunk[t]
+                lane_off = (
+                    self.tiles.lane_off[t]
+                    if self.tiles is not None
+                    else jnp.asarray(self.schedule.lane_off[t], jnp.int32)
+                )
+                gathered = jnp.zeros(
+                    (lanes,) + (self.store.dim,),
+                    jnp.float32 if self.stream == "f32" else jnp.int8,
+                )
+                self.stats.tiles += 1
+                ev0 = state.evictions
+                moves = state.decide_tile(self.schedule.tile_chunks[t])
+                self.stats.evictions += state.evictions - ev0
+                self.stats.chunk_hits += len(moves.hits)
+                for c, slot in moves.uploads:
                     self._upload(c, slot, prefetch=False)
-                    wave.append(c)
-                    pinned.add(c)
-                    rest.remove(c)
-                for c in wave:
-                    self._consume(c)
-                slot_lut = np.zeros(self.schedule.num_chunks, np.int32)
-                in_wave = np.zeros(self.schedule.num_chunks, bool)
-                for c in wave:
-                    slot_lut[c] = self._slot_of[c]
-                    in_wave[c] = True
-                mask = in_wave[lane_chunk]
-                slot_idx = jnp.asarray(slot_lut[lane_chunk], jnp.int32)
-                gathered = _gather_wave(
-                    gathered, self._buf, slot_idx, lane_off, jnp.asarray(mask)
-                )
-                self.stats.waves += 1
-                todo = rest
-            if self.tiles is not None:
-                # Device-resident instruction stream: indexing a cached
-                # array is a device-side slice, not an upload — warm
-                # requests move zero plan bytes.
-                coeff = self.tiles.coeff[t]
-                seg_ids = self.tiles.seg_ids[t]
-                out_node = self.tiles.out_node[t]
-            else:
-                coeff = jnp.asarray(plan.coeff[t])
-                seg_ids = jnp.asarray(plan.seg_ids[t])
-                out_node = jnp.asarray(plan.out_node[t])
-                self.stats.instr_bytes += lane_bytes
-            if self.stream == "f32":
-                out = _tile_step_f32(
-                    out, gathered, coeff, seg_ids, out_node, segments_per_tile=S
-                )
-            else:
-                out = _tile_step_i8(
-                    out, gathered, qp.scale, qp.zero_point, coeff, seg_ids,
-                    out_node, segments_per_tile=S,
-                )
-            self._prefetch_ahead(pos)
+                wave = moves.hits + tuple(c for c, _ in moves.uploads)
+                if wave:
+                    slot_lut = np.zeros(self.schedule.num_chunks, np.int32)
+                    in_wave = np.zeros(self.schedule.num_chunks, bool)
+                    for c in wave:
+                        slot_lut[c] = state.slot_of[c]
+                        in_wave[c] = True
+                    mask = in_wave[lane_chunk]
+                    slot_idx = jnp.asarray(slot_lut[lane_chunk], jnp.int32)
+                    gathered = _gather_wave(
+                        gathered, self._buf, slot_idx, lane_off, jnp.asarray(mask)
+                    )
+                    self.stats.waves += 1
+                if moves.sparse:
+                    gathered = self._sparse_pass(pos, t, moves.sparse, gathered)
+                if self.tiles is not None:
+                    # Device-resident instruction stream: indexing a cached
+                    # array is a device-side slice, not an upload — warm
+                    # requests move zero plan bytes.
+                    coeff = self.tiles.coeff[t]
+                    seg_ids = self.tiles.seg_ids[t]
+                    out_node = self.tiles.out_node[t]
+                else:
+                    coeff = jnp.asarray(plan.coeff[t])
+                    seg_ids = jnp.asarray(plan.seg_ids[t])
+                    out_node = jnp.asarray(plan.out_node[t])
+                    self.stats.instr_bytes += lane_bytes
+                if self.stream == "f32":
+                    out = _tile_step_f32(
+                        out, gathered, coeff, seg_ids, out_node,
+                        segments_per_tile=S,
+                    )
+                else:
+                    out = _tile_step_i8(
+                        out, gathered, qp.scale, qp.zero_point, coeff, seg_ids,
+                        out_node, segments_per_tile=S,
+                    )
+                ev0 = state.evictions
+                for c, slot in state.prefetch_moves(
+                    pos, order, self.schedule.tile_chunks, self.prefetch_depth
+                ):
+                    self._upload(c, slot, prefetch=True)
+                self.stats.evictions += state.evictions - ev0
+        finally:
+            if self._worker is not None:
+                self._worker.stop()
+                self._worker = None
         return out[:n]
 
 
@@ -525,6 +892,7 @@ def aggregate_streamed(
                 np.float32(np.asarray(qp_.scale)) if qp_ is not None else None
             ),
             tiles=tiles.get(tag) if tiles is not None else None,
+            async_stage=sf.async_stage,
         )
         return pf.aggregate(plans[tag], qp=qp_)
 

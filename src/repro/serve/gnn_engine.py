@@ -90,7 +90,9 @@ class GNNResponse:
     streamed: bool = False  # features stayed host-resident, chunk-streamed
     bytes_streamed: int = 0  # feature bytes moved host->device by the call
     chunk_hit_rate: float = 0.0  # chunk-cache hits / accesses
-    prefetch_overlap: float = 0.0  # uploads overlapped with compute / uploads
+    prefetch_overlap: float = 0.0  # wall-clock copy time hidden behind compute
+    stall_ms: float = 0.0  # wall time the stream blocked on feature copies
+    copy_ms: float = 0.0  # wall time of the feature copies themselves
 
     @property
     def run_ms_per_member(self) -> float:
@@ -136,6 +138,14 @@ class GNNServeEngine:
         ``cfg.gnn_feature_budget_bytes`` (0 = off).
     feature_chunk_rows: rows per feature chunk (0 derives a size from the
         budget). Default ``cfg.gnn_feature_chunk_rows``.
+    stream_packing: serve streamed requests through chunk-packed tile plans
+        (``scheduler.pack_tiles_by_chunk``; bitwise-identical outputs, tiles
+        draw from fewer chunks). Default ``cfg.gnn_stream_packing``.
+    stream_reorder: locality-reorder tile runs on the streamed path; False
+        keeps plan order (the reorder-vs-pack control arm benchmarks A/B
+        without hand-built prefetchers). Default ``cfg.gnn_stream_reorder``.
+    stream_prefetch_depth: tiles of lookahead granted to the async staging
+        worker and slot prefetcher (0 = fully synchronous streaming).
     """
 
     def __init__(
@@ -152,6 +162,9 @@ class GNNServeEngine:
         union_edge_bucket: Optional[int] = None,
         feature_budget_bytes: Optional[int] = None,
         feature_chunk_rows: Optional[int] = None,
+        stream_packing: Optional[bool] = None,
+        stream_reorder: Optional[bool] = None,
+        stream_prefetch_depth: int = 2,
         key=None,
     ):
         if cfg.family != "gnn":
@@ -183,6 +196,13 @@ class GNNServeEngine:
             if feature_chunk_rows is None
             else feature_chunk_rows
         )
+        self.stream_packing = (
+            cfg.gnn_stream_packing if stream_packing is None else stream_packing
+        )
+        self.stream_reorder = (
+            cfg.gnn_stream_reorder if stream_reorder is None else stream_reorder
+        )
+        self.stream_prefetch_depth = max(int(stream_prefetch_depth), 0)
         if self.feature_budget_bytes > 0 and self.engine_cfg.use_kernel:
             # The streamed executors are jnp-only (chunk-blocked passes are
             # bitwise-equal to the dense jnp path; the Pallas kernels
@@ -231,7 +251,7 @@ class GNNServeEngine:
         # the weight-quant cache.
         self._stores: "OrderedDict[tuple, Tuple[np.ndarray, object]]" = OrderedDict()
         self._last_stream = None  # StreamStats of the most recent _run
-        self.stats: Dict[str, int] = {
+        self.stats: Dict[str, float] = {
             "requests": 0,
             "batches": 0,
             "cache_hits": 0,
@@ -250,6 +270,8 @@ class GNNServeEngine:
             "chunk_misses": 0,
             "prefetched_uploads": 0,
             "stream_fallbacks": 0,
+            "stall_ms": 0.0,
+            "copy_ms": 0.0,
         }
 
     @property
@@ -622,9 +644,17 @@ class GNNServeEngine:
         rows = self.feature_chunk_rows or default_chunk_rows(
             features.shape[0], features.shape[1], self.feature_budget_bytes
         )
+        def wrap(store):
+            return StreamedFeatures(
+                store,
+                self.feature_budget_bytes,
+                prefetch_depth=self.stream_prefetch_depth,
+                reorder=self.stream_reorder,
+                packing=self.stream_packing,
+            )
+
         if not cache_store:
-            store = FeatureStore.from_array(features, chunk_rows=rows)
-            return StreamedFeatures(store, self.feature_budget_bytes)
+            return wrap(FeatureStore.from_array(features, chunk_rows=rows))
         key_arr = store_key if store_key is not None else features
         key = (id(key_arr), features.shape[0], rows)
         entry = self._stores.get(key)
@@ -635,8 +665,7 @@ class GNNServeEngine:
                 self._stores.popitem(last=False)
         else:
             self._stores.move_to_end(key)
-        store = self._stores[key][1]
-        return StreamedFeatures(store, self.feature_budget_bytes)
+        return wrap(self._stores[key][1])
 
     def _run(
         self,
@@ -681,6 +710,8 @@ class GNNServeEngine:
             self.stats["chunk_misses"] += s.chunk_misses
             self.stats["prefetched_uploads"] += s.prefetched
             self.stats["stream_fallbacks"] += s.fallbacks
+            self.stats["stall_ms"] += s.stall_ms
+            self.stats["copy_ms"] += s.copy_ms
         return y, run_ms
 
     def _stream_fields(self) -> Dict[str, object]:
@@ -693,6 +724,8 @@ class GNNServeEngine:
             "bytes_streamed": s.bytes_streamed,
             "chunk_hit_rate": s.hit_rate,
             "prefetch_overlap": s.prefetch_overlap,
+            "stall_ms": s.stall_ms,
+            "copy_ms": s.copy_ms,
         }
 
     @staticmethod
@@ -857,14 +890,21 @@ class GNNServeEngine:
         return loaded
 
     # ------------------------------------------------------------- metrics
-    def cache_info(self) -> Dict[str, int]:
+    def cache_info(self) -> Dict[str, float]:
         """Plan-cache counters plus derived streaming rates.
 
         ``chunk_hit_rate`` / ``prefetch_overlap`` aggregate over every
         streamed request this engine served (0.0 when nothing streamed).
+        ``prefetch_overlap`` is wall-clock: the fraction of measured copy
+        time the streams did NOT block on (``1 - stall_ms / copy_ms``).
         """
         accesses = self.stats["chunk_hits"] + self.stats["chunk_misses"]
-        uploads = self.stats["chunk_misses"] + self.stats["prefetched_uploads"]
+        copy_ms = self.stats["copy_ms"]
+        overlap = (
+            min(max(1.0 - self.stats["stall_ms"] / copy_ms, 0.0), 1.0)
+            if copy_ms > 0.0
+            else 0.0
+        )
         return {
             "size": len(self._cache),
             "capacity": self.plan_cache_size,
@@ -872,9 +912,7 @@ class GNNServeEngine:
             "chunk_hit_rate": (
                 self.stats["chunk_hits"] / accesses if accesses else 0.0
             ),
-            "prefetch_overlap": (
-                self.stats["prefetched_uploads"] / uploads if uploads else 0.0
-            ),
+            "prefetch_overlap": overlap,
         }
 
     def shard_report(self) -> Optional[Dict[str, object]]:

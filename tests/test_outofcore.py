@@ -8,6 +8,8 @@ chunk-cache eviction and multi-wave tiles.
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, st
+
 jax = pytest.importorskip("jax")
 import jax.numpy as jnp
 
@@ -17,6 +19,7 @@ from repro.core.quantization import compute_scale_zp
 from repro.core.scheduler import (
     build_chunk_schedule,
     build_edge_tile_plan,
+    pack_tiles_by_chunk,
     tile_runs,
 )
 from repro.graphs.csr import Graph, from_edge_list
@@ -482,3 +485,259 @@ def test_direct_prefetcher_still_accounts_instr_bytes():
     )
     pf.aggregate(plan).block_until_ready()
     assert stats.instr_bytes > 0
+
+
+# -------------------------------------- locality packing: pack_tiles_by_chunk
+def _row_edge_sequences(plan):
+    """Per destination row: real edge ids in accumulation order.
+
+    Accumulation order is the streamed scatter-add's: tiles in plan order,
+    lanes in lane order within a tile; a lane's contribution lands on the
+    out_node of its segment. Padding lanes (edge_id -1) and sentinel
+    segments (out_node == num_nodes) carry no edge.
+    """
+    rows = np.take_along_axis(plan.out_node, plan.seg_ids, axis=1)
+    real = (plan.edge_ids >= 0) & (rows < plan.num_nodes)
+    seqs = {}
+    for r, e in zip(rows[real].tolist(), plan.edge_ids[real].tolist()):
+        seqs.setdefault(r, []).append(e)
+    return seqs
+
+
+def _assert_repack_invariants(g, plan, packed, chunk_rows):
+    from repro.core.aggregation import aggregate_edge_tiles, to_device_plan
+
+    # Same edges, same per-row accumulation order — the order-preserving
+    # permutation-with-repacking property. (Sequence equality subsumes the
+    # per-row edge-multiset equality.)
+    assert _row_edge_sequences(packed) == _row_edge_sequences(plan)
+    assert packed.total_edges == plan.total_edges
+    assert packed.num_nodes == plan.num_nodes
+    # And the float semantics agree bitwise, not just structurally.
+    x = jnp.asarray(g.features)
+    ref = aggregate_edge_tiles(
+        x, to_device_plan(plan),
+        num_nodes=g.num_nodes, segments_per_tile=plan.segments_per_tile,
+    )
+    out = aggregate_edge_tiles(
+        x, to_device_plan(packed),
+        num_nodes=g.num_nodes, segments_per_tile=packed.segments_per_tile,
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("seed,deg,ept,chunk_rows", [
+    (0, 5.0, 64, 64),
+    (1, 12.0, 32, 128),   # hubs overflow tiles -> verbatim multi-tile runs
+    (2, 3.0, 16, 32),     # tiny tiles -> many single-segment spans
+    (3, 8.0, 128, 64),
+])
+def test_packed_plan_is_order_preserving_repack(seed, deg, ept, chunk_rows):
+    g = _graph(n=400, deg=deg, seed=seed, dim=16)
+    plan = build_edge_tile_plan(g, edges_per_tile=ept)
+    packed = pack_tiles_by_chunk(plan, chunk_rows)
+    _assert_repack_invariants(g, plan, packed, chunk_rows)
+
+
+@given(
+    n=st.integers(8, 60),
+    ept=st.sampled_from([8, 16, 32]),
+    chunk_rows=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 1_000),
+)
+def test_packed_plan_property(n, ept, chunk_rows, seed):
+    """Randomized repacking property: arbitrary small edge lists (dupes and
+    self-loops included), tile widths and chunk sizes."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(n, 6 * n))
+    src = rng.integers(0, n, m).astype(np.int64)
+    dst = rng.integers(0, n, m).astype(np.int64)
+    g = from_edge_list(src, dst, n).with_features(
+        rng.standard_normal((n, 8)).astype(np.float32)
+    )
+    plan = build_edge_tile_plan(g, edges_per_tile=ept)
+    packed = pack_tiles_by_chunk(plan, chunk_rows)
+    _assert_repack_invariants(g, plan, packed, chunk_rows)
+
+
+def test_packed_streamed_aggregate_bitwise_direct():
+    """Packed plan + unreordered schedule through the prefetcher: bitwise
+    equal to the in-memory reference at an eviction-forcing budget."""
+    from repro.core.aggregation import aggregate_edge_tiles, to_device_plan
+
+    g = _banded_graph(n=512, k=3, dim=16)
+    plan = build_edge_tile_plan(g, edges_per_tile=32)
+    ref = aggregate_edge_tiles(
+        jnp.asarray(g.features), to_device_plan(plan),
+        num_nodes=g.num_nodes, segments_per_tile=plan.segments_per_tile,
+    )
+    store = FeatureStore.from_array(g.features, chunk_rows=64)
+    packed = pack_tiles_by_chunk(plan, 64)
+    schedule = build_chunk_schedule(packed, 64, reorder=False)
+    stats = StreamStats()
+    pf = ChunkPrefetcher(
+        store, schedule, stream="f32",
+        budget_bytes=3 * store.chunk_bytes_f32, stats=stats,
+    )
+    out = pf.aggregate(packed)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert stats.bytes_streamed > 0
+
+
+# ------------------------------------- async staging: measured, not inferred
+def test_async_staging_measures_wall_clock():
+    g = _banded_graph(n=1024, k=2)
+    store = FeatureStore.from_array(g.features, chunk_rows=64)
+    plan = build_edge_tile_plan(g, edges_per_tile=32)
+    schedule = build_chunk_schedule(plan, 64)
+    stats = StreamStats()
+    pf = ChunkPrefetcher(
+        store, schedule, stream="f32",
+        budget_bytes=4 * store.chunk_bytes_f32, prefetch_depth=2, stats=stats,
+    )
+    out = pf.aggregate(plan)
+    out.block_until_ready()
+    assert stats.prefetched > 0
+    assert stats.copy_ms > 0.0  # copies were actually timed
+    assert stats.stall_ms >= 0.0
+    assert 0.0 <= stats.prefetch_overlap <= 1.0
+
+
+def test_sync_path_reports_zero_overlap():
+    """prefetch_depth=0 (or async_stage off) is the untimed historical path:
+    overlap must read 0, never a flattering inferred number."""
+    g = _banded_graph(n=256, k=2)
+    store = FeatureStore.from_array(g.features, chunk_rows=64)
+    plan = build_edge_tile_plan(g, edges_per_tile=32)
+    schedule = build_chunk_schedule(plan, 64)
+    for kw in ({"prefetch_depth": 0}, {"prefetch_depth": 2, "async_stage": False}):
+        stats = StreamStats()
+        ChunkPrefetcher(
+            store, schedule, stream="f32",
+            budget_bytes=4 * store.chunk_bytes_f32, stats=stats, **kw,
+        ).aggregate(plan)
+        assert stats.copy_ms == 0.0
+        assert stats.prefetch_overlap == 0.0
+
+
+def test_async_and_sync_staging_bitwise_identical():
+    """Staging changes WHEN copies happen, never WHAT the device computes."""
+    g = _graph(n=500, deg=6.0, seed=7, dim=16)
+    store = FeatureStore.from_array(g.features, chunk_rows=64)
+    plan = build_edge_tile_plan(g, edges_per_tile=64)
+    schedule = build_chunk_schedule(plan, 64)
+
+    def run(**kw):
+        pf = ChunkPrefetcher(
+            store, schedule, stream="f32",
+            budget_bytes=3 * store.chunk_bytes_f32, stats=StreamStats(), **kw,
+        )
+        return np.asarray(pf.aggregate(plan))
+
+    ref = run(prefetch_depth=0)
+    np.testing.assert_array_equal(run(prefetch_depth=2, async_stage=True), ref)
+    np.testing.assert_array_equal(run(prefetch_depth=2, async_stage=False), ref)
+    np.testing.assert_array_equal(run(prefetch_depth=4, async_stage=True), ref)
+
+
+def test_sparse_residue_bitwise_and_counted():
+    """Uniform-neighbour graph at a 2-slot budget: most chunk visits lose
+    the Belady comparison and must be served as sparse row residue — still
+    bitwise, with the rows counted."""
+    from repro.core.aggregation import aggregate_edge_tiles, to_device_plan
+
+    g = _graph(n=800, deg=8.0, seed=11, dim=16)
+    store = FeatureStore.from_array(g.features, chunk_rows=64)
+    plan = build_edge_tile_plan(g, edges_per_tile=64)
+    schedule = build_chunk_schedule(plan, 64)
+    ref = aggregate_edge_tiles(
+        jnp.asarray(g.features), to_device_plan(plan),
+        num_nodes=g.num_nodes, segments_per_tile=plan.segments_per_tile,
+    )
+    stats = StreamStats()
+    pf = ChunkPrefetcher(
+        store, schedule, stream="f32",
+        budget_bytes=2 * store.chunk_bytes_f32, stats=stats,
+    )
+    out = pf.aggregate(plan)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert stats.sparse_rows > 0
+    # sparse rows are charged to bytes_streamed but cost far less than
+    # serving every miss as a full chunk upload would
+    assert stats.bytes_streamed < stats.chunk_misses * store.chunk_bytes_f32
+
+
+# --------------------------------------- serve-level knobs and new telemetry
+@pytest.mark.parametrize("arch", ["gcn", "gin", "sage", "gat"])
+def test_served_packed_stream_bitwise_identical(arch):
+    """Engine-level acceptance for the packing mode: streamed == in-memory,
+    bit for bit, with gnn_stream_packing on AND off, every arch, at an
+    eviction-forcing budget."""
+    cfg = get_config(f"ample-{arch}", reduced=True)
+    g = make_dataset("cora", max_nodes=600, max_feature_dim=cfg.d_model, seed=0)
+    ref_eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    ref = ref_eng.infer(g, g.features)
+    for packing in (False, True):
+        eng = GNNServeEngine(
+            cfg, ref_eng.params,
+            feature_budget_bytes=g.features.nbytes // 4,
+            feature_chunk_rows=64, stream_packing=packing,
+        )
+        r = eng.infer(g, g.features)
+        assert r.streamed
+        np.testing.assert_array_equal(r.outputs, ref.outputs)
+
+
+def test_stream_knobs_threaded_from_config():
+    """gnn_stream_packing / gnn_stream_reorder flow config -> engine, with
+    constructor kwargs overriding — the reorder/pack A/B needs no hand-built
+    prefetchers."""
+    import dataclasses
+
+    base = get_config("ample-gcn", reduced=True)
+    cfg = dataclasses.replace(
+        base, gnn_stream_packing=True, gnn_stream_reorder=False
+    )
+    eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    assert eng.stream_packing is True and eng.stream_reorder is False
+    eng2 = GNNServeEngine(
+        cfg, stream_packing=False, stream_reorder=True,
+        key=jax.random.PRNGKey(0),
+    )
+    assert eng2.stream_packing is False and eng2.stream_reorder is True
+    # defaults match the historical behaviour
+    eng3 = GNNServeEngine(base, key=jax.random.PRNGKey(0))
+    assert eng3.stream_packing is False and eng3.stream_reorder is True
+
+
+def test_reorder_control_arm_served_bitwise():
+    """reorder=False (the control arm) must serve identical bytes too."""
+    cfg = get_config("ample-gcn", reduced=True)
+    g = make_dataset("cora", max_nodes=500, max_feature_dim=cfg.d_model, seed=0)
+    ref_eng = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    ref = ref_eng.infer(g, g.features)
+    eng = GNNServeEngine(
+        cfg, ref_eng.params,
+        feature_budget_bytes=g.features.nbytes // 4,
+        feature_chunk_rows=64, stream_reorder=False,
+    )
+    r = eng.infer(g, g.features)
+    assert r.streamed
+    np.testing.assert_array_equal(r.outputs, ref.outputs)
+
+
+def test_response_and_cache_info_carry_stall_copy_ms():
+    cfg = get_config("ample-gcn", reduced=True)
+    g = make_dataset("cora", max_nodes=600, max_feature_dim=cfg.d_model, seed=0)
+    eng = GNNServeEngine(
+        cfg, feature_budget_bytes=g.features.nbytes // 4,
+        feature_chunk_rows=64, key=jax.random.PRNGKey(0),
+    )
+    r = eng.infer(g, g.features)
+    assert r.streamed
+    assert r.copy_ms > 0.0  # async staging is the serve default (depth 2)
+    assert r.stall_ms >= 0.0
+    info = eng.cache_info()
+    assert info["copy_ms"] == pytest.approx(eng.stats["copy_ms"])
+    assert info["stall_ms"] == pytest.approx(eng.stats["stall_ms"])
+    assert 0.0 <= info["prefetch_overlap"] <= 1.0

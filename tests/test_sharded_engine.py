@@ -331,6 +331,39 @@ def test_plan_store_roundtrip_unsharded(graph, tmp_path):
             assert p.total_edges == q.total_edges
 
 
+def test_plan_store_mmap_roundtrip(graph, tmp_path):
+    """mmap_mode="r" loads the same plan with file-backed read-only arrays:
+    values compare equal, in-place writes raise, and mutating a copy never
+    reaches the file."""
+    from repro.checkpoint.plan_store import _PLAN_ARRAYS, load_plan, save_plan
+
+    cfg = EngineConfig(edges_per_tile=64)
+    plan = compile_plans(graph, cfg, modes=("gcn", "sum"))
+    path = save_plan(str(tmp_path / "m.npz"), plan, graph=graph, extra={"k": "v"})
+    rec = load_plan(path, mmap_mode="r")
+    assert rec.plan == plan and rec.extra == {"k": "v"}
+    np.testing.assert_array_equal(rec.graph.indptr, graph.indptr)
+    for mode in ("gcn", "sum"):
+        for tag, p in plan.mode_plans[mode].items():
+            q = rec.plan.mode_plans[mode][tag]
+            for name in _PLAN_ARRAYS:
+                a, b = getattr(p, name), getattr(q, name)
+                np.testing.assert_array_equal(a, b)
+                assert not b.flags.writeable
+                with pytest.raises(ValueError):
+                    b[...] = 0
+                c = b.copy()
+                c[...] = 0  # writable copy, detached from the file
+    # nothing above reached the disk bytes: a fresh load still equals plan
+    assert load_plan(path, mmap_mode="r").plan == plan
+    # sharded files memmap too
+    splan = compile_sharded_plans(graph, cfg, num_shards=2, modes=("sum",))
+    spath = save_plan(str(tmp_path / "ms.npz"), splan)
+    assert load_plan(spath, mmap_mode="r").plan == splan
+    with pytest.raises(ValueError):
+        load_plan(path, mmap_mode="r+")
+
+
 def test_plan_store_roundtrip_sharded(graph, tmp_path):
     from repro.checkpoint.plan_store import load_plan, save_plan
 
