@@ -1,0 +1,216 @@
+"""Bench regression check: fresh ``--quick`` artifacts vs committed baselines.
+
+``benchmarks/run.py --out`` persists each bench family as a JSON artifact;
+the committed ``BENCH_*.json`` files at the repo root are the accepted
+baselines. This script diffs a fresh artifact against its baseline row by
+row and reports findings at two severities:
+
+* **WARN** (default for everything): ``us_per_call`` slowdowns beyond the
+  tolerance, quality-metric drift (hit rates, overlap, SLO hit rates).
+  Wall-clock on shared CI runners is noisy, so timing regressions never
+  fail the build — they leave a visible trail in the log instead.
+* **FAIL** (hard, reused from the out-of-core ``--quick`` gate in
+  ``run.py``): measured ``prefetch_overlap`` below 0.3, or ``chunk_hit_rate``
+  regressing more than 5 % absolute against the same-scale baseline. These
+  are scale-free scheduling-quality metrics, not wall-clock, so they are
+  stable enough to gate on. ``REPRO_BENCH_NO_GATE=1`` demotes them to
+  WARN — e.g. while refreshing a baseline.
+
+Baselines with a ``quick_rows`` section (BENCH_prefetch.json) are compared
+at quick scale; otherwise the artifact's ``rows`` are used and, when the
+fresh and baseline scales differ (fresh ``--quick`` vs a committed
+full-scale run), wall-clock comparison is skipped and only scale-free
+metrics are diffed.
+
+Usage (CI writes fresh artifacts to a scratch dir so the committed
+baselines stay intact)::
+
+    python -m benchmarks.run --quick --out bench_fresh/BENCH_prefetch.json \
+        --only outofcore,prefetch_calibration
+    python benchmarks/check_regression.py --fresh bench_fresh/BENCH_prefetch.json
+
+Exit status is 1 iff any FAIL finding survives.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Hard gate thresholds — keep in lockstep with run.py::_outofcore_gate.
+MIN_PREFETCH_OVERLAP = 0.3
+MAX_HIT_RATE_DROP = 0.05
+
+# Warn-only thresholds.
+SLOWDOWN_TOLERANCE = 1.5  # fresh us_per_call > 1.5x baseline -> WARN
+# Scale-free quality metrics: (field, max absolute drop before WARN).
+QUALITY_FIELDS: Tuple[Tuple[str, float], ...] = (
+    ("chunk_hit_rate", 0.01),
+    ("prefetch_overlap", 0.10),
+    ("slo_hit_rate", 0.05),
+)
+
+
+class Finding(NamedTuple):
+    severity: str  # "FAIL" | "WARN"
+    row: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.severity}] {self.row}: {self.message}"
+
+
+def _to_float(v) -> Optional[float]:
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return None
+
+
+def load_rows(path: str) -> Tuple[Dict[str, dict], bool]:
+    """Load an artifact; returns (name -> record, is_quick_scale).
+
+    Prefers the ``quick_rows`` section when present (the same-scale baseline
+    the quick gate compares against), else falls back to ``rows``.
+    """
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("quick_rows"):
+        return {r["name"]: r for r in payload["quick_rows"]}, True
+    return {r["name"]: r for r in payload.get("rows", [])}, bool(
+        payload.get("quick")
+    )
+
+
+def check_hard_gates(fresh: Dict[str, dict], base: Dict[str, dict]) -> List[Finding]:
+    """The PR-8 out-of-core gate criteria, applied artifact-wide."""
+    out: List[Finding] = []
+    for name, rec in sorted(fresh.items()):
+        ov = _to_float(rec.get("prefetch_overlap"))
+        if ov is not None and ov < MIN_PREFETCH_OVERLAP:
+            out.append(Finding(
+                "FAIL", name,
+                f"prefetch_overlap {ov:.3f} < {MIN_PREFETCH_OVERLAP}",
+            ))
+        hit = _to_float(rec.get("chunk_hit_rate"))
+        ref = _to_float(base.get(name, {}).get("chunk_hit_rate"))
+        if hit is not None and ref is not None and hit < ref - MAX_HIT_RATE_DROP:
+            out.append(Finding(
+                "FAIL", name,
+                f"chunk_hit_rate {hit:.3f} regressed >"
+                f"{MAX_HIT_RATE_DROP:.0%} vs baseline {ref:.3f}",
+            ))
+    return out
+
+
+def check_soft_drift(
+    fresh: Dict[str, dict],
+    base: Dict[str, dict],
+    *,
+    same_scale: bool,
+    slowdown: float = SLOWDOWN_TOLERANCE,
+) -> List[Finding]:
+    """Warn-only comparisons: wall-clock slowdowns and quality drift."""
+    out: List[Finding] = []
+    for name, rec in sorted(fresh.items()):
+        ref = base.get(name)
+        if ref is None:
+            out.append(Finding("WARN", name, "no baseline row (new bench?)"))
+            continue
+        if same_scale:
+            us, us_ref = _to_float(rec.get("us_per_call")), _to_float(
+                ref.get("us_per_call")
+            )
+            if us and us_ref and us > us_ref * slowdown:
+                out.append(Finding(
+                    "WARN", name,
+                    f"us_per_call {us:.0f} is {us / us_ref:.2f}x baseline "
+                    f"{us_ref:.0f} (tolerance {slowdown:.2f}x)",
+                ))
+        for field, max_drop in QUALITY_FIELDS:
+            got, want = _to_float(rec.get(field)), _to_float(ref.get(field))
+            if got is not None and want is not None and got < want - max_drop:
+                out.append(Finding(
+                    "WARN", name,
+                    f"{field} {got:.3f} drifted below baseline "
+                    f"{want:.3f} (tolerance {max_drop})",
+                ))
+    for name in sorted(set(base) - set(fresh)):
+        out.append(Finding("WARN", name, "baseline row missing from fresh run"))
+    return out
+
+
+def check_artifact(
+    fresh_path: str, baseline_path: Optional[str] = None
+) -> List[Finding]:
+    """All findings for one fresh artifact vs its committed baseline."""
+    if baseline_path is None:
+        baseline_path = os.path.join(REPO_ROOT, os.path.basename(fresh_path))
+    fresh, fresh_quick = load_rows(fresh_path)
+    have_baseline = os.path.exists(baseline_path) and not os.path.samefile(
+        fresh_path, baseline_path
+    )
+    if not have_baseline:
+        # No committed baseline (or comparing a file to itself): hard gates
+        # still apply — they don't need a baseline for the overlap floor.
+        base: Dict[str, dict] = {}
+        base_quick = fresh_quick
+        note = "no baseline"
+    else:
+        base, base_quick = load_rows(baseline_path)
+        note = os.path.relpath(baseline_path, REPO_ROOT)
+    findings = check_hard_gates(fresh, base)
+    if base:
+        findings += check_soft_drift(
+            fresh, base, same_scale=(fresh_quick == base_quick)
+        )
+    print(
+        f"{os.path.basename(fresh_path)}: {len(fresh)} rows vs {note} "
+        f"({len(base)} rows)"
+        + ("" if fresh_quick == base_quick else " [scale mismatch: "
+           "wall-clock comparison skipped]"),
+        flush=True,
+    )
+    return findings
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", nargs="+", required=True,
+                    help="fresh artifact JSON path(s) from run.py --out")
+    ap.add_argument("--baseline", default=None,
+                    help="explicit baseline path (single --fresh only); "
+                         "default: same basename at the repo root")
+    args = ap.parse_args(argv)
+    if args.baseline and len(args.fresh) != 1:
+        ap.error("--baseline requires exactly one --fresh artifact")
+
+    all_findings: List[Finding] = []
+    for path in args.fresh:
+        all_findings += check_artifact(path, args.baseline)
+
+    no_gate = bool(os.environ.get("REPRO_BENCH_NO_GATE"))
+    if no_gate:
+        all_findings = [
+            Finding("WARN", f.row, f.message + " [gate disabled]")
+            if f.severity == "FAIL" else f
+            for f in all_findings
+        ]
+    for f in all_findings:
+        print(str(f), flush=True)
+    fails = [f for f in all_findings if f.severity == "FAIL"]
+    warns = [f for f in all_findings if f.severity == "WARN"]
+    print(
+        f"check_regression: {len(fails)} FAIL, {len(warns)} WARN"
+        + (" (REPRO_BENCH_NO_GATE)" if no_gate else ""),
+        flush=True,
+    )
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1012,9 +1012,17 @@ def main() -> None:
                     help="comma-separated substrings of bench names to skip")
     ap.add_argument("--out", default=None,
                     help="write rows as a JSON artifact (e.g. BENCH_serve.json)")
+    ap.add_argument("--trace-out", default=None,
+                    help="record request-lifecycle spans during the benches "
+                         "and write Chrome-trace-event JSON here (open in "
+                         "Perfetto); empty = tracing off")
     args = ap.parse_args()
     wanted = [s for s in (args.only or "").split(",") if s]
     unwanted = [s for s in (args.skip or "").split(",") if s]
+    if args.trace_out:
+        from repro.observe import trace as otrace
+
+        otrace.enable()
     print("name,us_per_call,derived")
     for bench in BENCHES:
         if wanted and not any(s in bench.__name__ for s in wanted):
@@ -1022,6 +1030,13 @@ def main() -> None:
         if any(s in bench.__name__ for s in unwanted):
             continue
         bench(args.quick)
+    if args.trace_out:
+        rec = otrace.get_recorder()
+        rec.export(args.trace_out)
+        print(
+            f"trace: {len(rec.spans())} spans -> {args.trace_out} "
+            f"(dropped={rec.dropped})"
+        )
     if args.out:
         write_artifact(args.out, args.quick)
 

@@ -181,6 +181,34 @@ def main():
               f"queue_p99={t['queue_wait_ms']['p99']:.1f} ms "
               f"slo_hit_rate={t['slo_hit_rate']:.2f}")
 
+    # 10. Observability: request tracing + the unified metrics registry
+    #     (src/repro/observe). Tracing is off by default and free when off;
+    #     enable() installs a recorder and every serving layer starts
+    #     recording lifecycle spans — queue/plan/execute on the consumer
+    #     lane, per-chunk copies on the staging lanes, stalls where the
+    #     consumer actually blocked — all on one perf_counter timeline, so
+    #     trace-derived totals reconcile with the reported *_ms fields.
+    #     The written trace.json loads in https://ui.perfetto.dev (or
+    #     chrome://tracing): look for copy spans overlapping execute.
+    from repro.observe import metrics as ometrics, trace as otrace
+
+    rec = otrace.enable()
+    traced = ooc.infer(g, g.features)  # a streamed request, now traced
+    path = rec.export("trace.json")
+    mine = [s for s in rec.spans() if s.trace_id == traced.trace_id]
+    copy_ms = sum(s.dur_ms for s in mine if s.name.startswith("copy:"))
+    print(f"trace: {len(rec.spans())} spans -> {path} "
+          f"(request {traced.trace_id}: {len(mine)} spans, "
+          f"copy spans {copy_ms:.1f}ms vs reported {traced.copy_ms:.1f}ms)")
+    otrace.disable()
+    #     Metrics need no enabling — the engines' stats dicts ARE registry
+    #     cells (StatsView), so the Prometheus dump always agrees with
+    #     engine.stats / cache_info(). One line per labeled counter:
+    text = ometrics.get_registry().prometheus_text()
+    line = next(l for l in text.splitlines()
+                if l.startswith("gnn_serve_requests") and ooc.instance in l)
+    print(f"metrics: {len(text.splitlines())} exposition lines, e.g. {line}")
+
 
 if __name__ == "__main__":
     main()

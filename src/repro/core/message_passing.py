@@ -45,6 +45,7 @@ from repro.core.transformation import (
     transform_mixed_precision,
 )
 from repro.graphs.csr import Graph, gcn_norm_coeffs
+from repro.observe import trace as otrace
 from repro.graphs.partition import (
     Partition,
     ShardSubgraph,
@@ -848,15 +849,19 @@ class AmpleEngine:
         qp = None
         if self.cfg.mixed_precision and "int8" in plans:
             qp = self._activation_qp(None, "agg", make_qp=sf.agg_qp)
-        return aggregate_streamed(
-            sf,
-            plans,
-            schedules,
-            num_nodes=self.graph.num_nodes,
-            mixed=self.cfg.mixed_precision,
-            qp=qp,
-            tiles=tiles,
-        )
+        with otrace.get_recorder().span(
+            f"layer:aggregate:{mode}", cat="engine",
+            trace_id=getattr(sf, "trace_id", ""),
+        ):
+            return aggregate_streamed(
+                sf,
+                plans,
+                schedules,
+                num_nodes=self.graph.num_nodes,
+                mixed=self.cfg.mixed_precision,
+                qp=qp,
+                tiles=tiles,
+            )
 
     def _transform_streamed(
         self,

@@ -353,8 +353,21 @@ def main():
     ap.add_argument("--no-stream-reorder", action="store_true",
                     help="streamed path: keep plan tile order (the control "
                          "arm for the locality reorder pass)")
+    ap.add_argument("--trace-out", default="",
+                    help="record request-lifecycle spans and write a Chrome-"
+                         "trace-event JSON here (load it in Perfetto or "
+                         "chrome://tracing); empty = tracing disabled, the "
+                         "zero-overhead default")
+    ap.add_argument("--metrics-dump", default="",
+                    help="after serving, dump the unified metrics registry "
+                         "in Prometheus text exposition format to this path "
+                         "('-' = stdout)")
     args = ap.parse_args()
 
+    from repro.observe import metrics as ometrics, trace as otrace
+
+    if args.trace_out:
+        otrace.enable()
     cfg = get_config(args.arch, reduced=not args.full)
     if cfg.family == "gnn" and args.tenants:
         serve_gnn_tenants(cfg, args)
@@ -362,6 +375,21 @@ def main():
         serve_gnn(cfg, args)
     else:
         serve_lm(cfg, args)
+    if args.trace_out:
+        rec = otrace.get_recorder()
+        rec.export(args.trace_out)
+        print(
+            f"trace: {len(rec.spans())} spans -> {args.trace_out} "
+            f"(dropped={rec.dropped}); open in https://ui.perfetto.dev"
+        )
+    if args.metrics_dump:
+        text = ometrics.get_registry().prometheus_text()
+        if args.metrics_dump == "-":
+            print(text, end="")
+        else:
+            with open(args.metrics_dump, "w") as f:
+                f.write(text)
+            print(f"metrics: registry dump -> {args.metrics_dump}")
 
 
 if __name__ == "__main__":

@@ -69,6 +69,7 @@ from repro.core import scheduler as sched
 from repro.core.quantization import INT8_MAX, QuantParams
 from repro.core.transformation import transform_dense
 from repro.memory.feature_store import FeatureStore
+from repro.observe import trace as otrace
 
 __all__ = [
     "StreamStats",
@@ -212,6 +213,10 @@ class StreamedFeatures:
         # fully synchronous path (same outputs bit for bit).
         self.async_stage = bool(async_stage)
         self.stats = StreamStats()
+        # Per-request correlation id (observe.trace): stamped by the serving
+        # engine before the forward pass, read by the prefetchers so every
+        # copy/stall span carries the request it served.
+        self.trace_id = ""
 
     @property
     def shape(self) -> Tuple[int, int]:
@@ -559,6 +564,7 @@ class ChunkPrefetcher:
         quant_scale=None,
         tiles: Optional[DeviceTileStream] = None,
         async_stage: bool = True,
+        trace_id: str = "",
     ):
         if schedule.chunk_rows != store.chunk_rows:
             raise ValueError(
@@ -582,6 +588,7 @@ class ChunkPrefetcher:
         self.prefetch_depth = max(int(prefetch_depth), 0)
         self.async_stage = bool(async_stage)
         self.stats = stats if stats is not None else StreamStats()
+        self.trace_id = trace_id  # request id stamped on copy/stall spans
         # Device-cached instruction stream (owner charged its upload once);
         # None = upload per-tile plan slices per call (the uncached path,
         # used by direct ChunkPrefetcher construction).
@@ -666,17 +673,32 @@ class ChunkPrefetcher:
 
     def _build_staged(self, key: tuple):
         """Worker-side build: fenced device copies keyed like the consumer
-        will claim them."""
+        will claim them. The copy span is recorded here, on the staging
+        thread's own timeline (lane "copy"), at the stamps the copy really
+        occupied — which is what lets an exported trace show copies
+        overlapping the consumer's compute."""
+        t0 = time.perf_counter()
         if key[0] == "chunk":
-            return jax.block_until_ready(jnp.asarray(self._host_chunk(key[1])))
-        _, pos, t = key
-        return self._host_sparse(t, self._sparse_sets.get(pos, frozenset()))
+            val = jax.block_until_ready(jnp.asarray(self._host_chunk(key[1])))
+            name = "copy:chunk"
+        else:
+            _, pos, t = key
+            val = self._host_sparse(t, self._sparse_sets.get(pos, frozenset()))
+            name = "copy:rows"
+        rec = otrace.get_recorder()
+        if rec.enabled:
+            rec.add_span(
+                name, t0, time.perf_counter(), cat="stream", lane="copy",
+                trace_id=self.trace_id, args={"stream": self.stream},
+            )
+        return val
 
     def _upload(self, c: int, slot: int, *, prefetch: bool) -> None:
         """Device copy of one admitted chunk (slot already committed by the
         state machine). Staged copies are claimed by key; unstaged ones are
         built inline and count fully as stall (the consumer blocked for the
         whole copy)."""
+        rec = otrace.get_recorder()
         staged = (
             self._worker.take(("chunk", c)) if self._worker is not None else None
         )
@@ -684,12 +706,29 @@ class ChunkPrefetcher:
             dev, build_ms, wait_ms = staged
             self.stats.copy_ms += build_ms
             self.stats.stall_ms += wait_ms
+            if rec.enabled and wait_ms > 0.0:
+                # The wait just ended: reconstruct [t1 - wait, t1] from the
+                # same measurement stall_ms accumulated.
+                t1 = time.perf_counter()
+                rec.add_span("stall", t1 - wait_ms / 1e3, t1, cat="stream",
+                             trace_id=self.trace_id, args={"chunk": int(c)})
         elif self._worker is not None:
             t0 = time.perf_counter()
             dev = jax.block_until_ready(jnp.asarray(self._host_chunk(c)))
-            dt = (time.perf_counter() - t0) * 1e3
+            t1 = time.perf_counter()
+            dt = (t1 - t0) * 1e3
             self.stats.copy_ms += dt
             self.stats.stall_ms += dt
+            if rec.enabled:
+                # Unstaged inline build: one interval is both the copy and
+                # the stall (the consumer blocked for the whole copy). Its
+                # copy span gets its own lane — the staging thread may be
+                # mid-copy on "copy" at the same instant.
+                rec.add_span("copy:chunk", t0, t1, cat="stream",
+                             lane="copy-inline", trace_id=self.trace_id,
+                             args={"stream": self.stream, "inline": True})
+                rec.add_span("stall", t0, t1, cat="stream",
+                             trace_id=self.trace_id, args={"chunk": int(c)})
         else:  # synchronous path: untimed, no overlap claim
             dev = jnp.asarray(self._host_chunk(c))
         self._buf = _upload_slot(self._buf, dev, jnp.int32(slot))
@@ -704,6 +743,7 @@ class ChunkPrefetcher:
     ) -> jnp.ndarray:
         """Scatter the tile's non-admitted chunks' rows onto their lanes."""
         chunks = frozenset(sparse)
+        rec = otrace.get_recorder()
         staged = None
         if self._worker is not None and self._sparse_sets.get(pos) == chunks:
             staged = self._worker.take(("rows", pos, t))
@@ -711,12 +751,23 @@ class ChunkPrefetcher:
             (lanes_dev, rows_dev, k), build_ms, wait_ms = staged
             self.stats.copy_ms += build_ms
             self.stats.stall_ms += wait_ms
+            if rec.enabled and wait_ms > 0.0:
+                t1 = time.perf_counter()
+                rec.add_span("stall", t1 - wait_ms / 1e3, t1, cat="stream",
+                             trace_id=self.trace_id, args={"tile": int(t)})
         elif self._worker is not None:
             t0 = time.perf_counter()
             lanes_dev, rows_dev, k = self._host_sparse(t, chunks)
-            dt = (time.perf_counter() - t0) * 1e3
+            t1 = time.perf_counter()
+            dt = (t1 - t0) * 1e3
             self.stats.copy_ms += dt
             self.stats.stall_ms += dt
+            if rec.enabled:
+                rec.add_span("copy:rows", t0, t1, cat="stream",
+                             lane="copy-inline", trace_id=self.trace_id,
+                             args={"stream": self.stream, "inline": True})
+                rec.add_span("stall", t0, t1, cat="stream",
+                             trace_id=self.trace_id, args={"tile": int(t)})
         else:
             lanes_dev, rows_dev, k = self._host_sparse(t, chunks)
         self.stats.bytes_streamed += int(rows_dev.nbytes)
@@ -783,6 +834,8 @@ class ChunkPrefetcher:
         if self.async_stage and self.prefetch_depth > 0 and order.size > 1:
             self._worker = _StageWorker(self._build_staged)
             shadow = state.clone()
+        rec = otrace.get_recorder()
+        agg_t0 = time.perf_counter() if rec.enabled else 0.0
         try:
             for pos, t in enumerate(order):
                 t = int(t)
@@ -854,6 +907,13 @@ class ChunkPrefetcher:
             if self._worker is not None:
                 self._worker.stop()
                 self._worker = None
+            if rec.enabled:
+                rec.add_span(
+                    f"stream:{self.stream}", agg_t0, time.perf_counter(),
+                    cat="stream", trace_id=self.trace_id,
+                    args={"tiles": int(order.size),
+                          "staged": self.async_stage and self.prefetch_depth > 0},
+                )
         return out[:n]
 
 
@@ -893,6 +953,7 @@ def aggregate_streamed(
             ),
             tiles=tiles.get(tag) if tiles is not None else None,
             async_stage=sf.async_stage,
+            trace_id=sf.trace_id,
         )
         return pf.aggregate(plans[tag], qp=qp_)
 
@@ -938,6 +999,8 @@ def transform_streamed(
     equal the monolithic matmul row for row.
     """
     store = sf.store
+    rec = otrace.get_recorder()
+    fte_t0 = time.perf_counter() if rec.enabled else 0.0
     out = jnp.zeros((store.num_rows, w.shape[1]), jnp.float32)
     for tag, ids in node_group_ids.items():
         if ids.size == 0:
@@ -982,6 +1045,11 @@ def transform_streamed(
                 )
         else:
             raise ValueError(f"unknown precision tag {tag!r}")
+    if rec.enabled:
+        rec.add_span(
+            "stream:fte", fte_t0, time.perf_counter(), cat="stream",
+            trace_id=sf.trace_id,
+        )
     return out
 
 

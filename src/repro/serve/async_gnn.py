@@ -41,7 +41,14 @@ from typing import Deque, Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig
 from repro.graphs.csr import Graph
-from repro.serve.gnn_engine import GNNRequest, GNNResponse, GNNServeEngine
+from repro.observe import metrics as ometrics
+from repro.observe import trace as otrace
+from repro.serve.gnn_engine import (
+    GNNRequest,
+    GNNResponse,
+    GNNServeEngine,
+    request_stamp,
+)
 
 __all__ = ["GNNTicket", "AsyncGNNEngine"]
 
@@ -61,7 +68,8 @@ class GNNTicket:
     seq: int  # admission order, assigned by submit()
     request: GNNRequest
     response: Optional[GNNResponse] = None
-    arrival: float = 0.0  # time.monotonic() at submit; drives the SLO close
+    arrival: float = 0.0  # request_stamp() at submit; drives the SLO close
+    trace_id: str = ""  # per-request correlation id (observe.trace)
     error: Optional[BaseException] = None  # terminal failure, attached after
     # the window's execution retries were exhausted (see window_retries)
     failures: int = 0  # executions of this ticket's window that raised
@@ -93,7 +101,7 @@ class GNNTicket:
         (``TimeoutError`` when exceeded); a ticket whose window exhausted
         its execution retries re-raises the attached error.
         """
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else time.perf_counter() + timeout
         while not self.done:
             if self._engine is None:
                 raise RuntimeError(
@@ -111,7 +119,7 @@ class GNNTicket:
                     "admissible work — was it detached?"
                 )
             if deadline is not None:
-                remaining = deadline - time.monotonic()
+                remaining = deadline - time.perf_counter()
                 if remaining <= 0:
                     raise TimeoutError(
                         f"ticket {self.seq} still pending after {timeout}s"
@@ -209,21 +217,29 @@ class AsyncGNNEngine:
         # waiter threads at once; only one executes a window at a time, the
         # rest wake on their ticket's completion event.
         self._drive_lock = threading.RLock()
-        self.stats: Dict[str, int] = {
-            "submitted": 0,
-            "completed": 0,
-            "steps": 0,
-            "max_queue_depth": 0,
-            "held_windows": 0,  # partial windows held open for late arrivals
-            "deadline_closes": 0,  # partial windows admitted at the deadline
-            "window_failures": 0,  # executions that raised (requeued or fatal)
-            "failed_tickets": 0,  # tickets completed exceptionally (retries out)
-        }
+        # Registry-backed counters behind the historical dict API; see
+        # GNNServeEngine.stats for the rationale.
+        self.instance = ometrics.next_instance("gnn_async")
+        self.stats: ometrics.StatsView = ometrics.StatsView(
+            ometrics.get_registry(),
+            "gnn_async",
+            {"engine": self.instance},
+            keys=(
+                "submitted",
+                "completed",
+                "steps",
+                "max_queue_depth",
+                "held_windows",  # partial windows held open for late arrivals
+                "deadline_closes",  # partial windows admitted at the deadline
+                "window_failures",  # executions that raised (requeued or fatal)
+                "failed_tickets",  # tickets completed exceptionally (retries out)
+            ),
+        )
 
     # ------------------------------------------------------------ admission
     def submit(
         self, graph: Graph, features, *, arch: str = "",
-        arrival: Optional[float] = None,
+        arrival: Optional[float] = None, trace_id: str = "",
     ) -> GNNTicket:
         """Admit one request into the queue; returns its ticket immediately.
 
@@ -231,20 +247,33 @@ class AsyncGNNEngine:
         feature matrix or an empty graph raises now, before the request can
         poison a union batch other members are riding in. ``arrival`` lets
         an upstream front (the tenancy router) carry its own admission
-        timestamp through, so ``queue_ms`` covers the full wait from the
-        moment the caller handed the request over, not just this queue.
+        timestamp through (a ``request_stamp()``/``perf_counter`` value), so
+        ``queue_ms`` covers the full wait from the moment the caller handed
+        the request over, not just this queue. ``trace_id`` likewise carries
+        an upstream correlation id; one is minted here when tracing is
+        enabled and none was passed.
         """
         arch = self.engine._arch(arch)
         features = self.engine._validate_request(graph, features)
-        at = time.monotonic() if arrival is None else float(arrival)
+        at = request_stamp() if arrival is None else float(arrival)
+        rec = otrace.get_recorder()
+        if rec.enabled and not trace_id:
+            trace_id = otrace.new_trace_id()
         ticket = GNNTicket(
             seq=self._seq,
             request=GNNRequest(
-                graph=graph, features=features, arch=arch, admitted_at=at
+                graph=graph, features=features, arch=arch, admitted_at=at,
+                trace_id=trace_id,
             ),
             arrival=at,
+            trace_id=trace_id,
             _engine=self,
         )
+        if rec.enabled:
+            rec.add_instant(
+                "submit", cat="serve", trace_id=trace_id,
+                args={"seq": ticket.seq, "nodes": graph.num_nodes},
+            )
         self._seq += 1
         self._queue.append(ticket)
         self.stats["submitted"] += 1
@@ -266,7 +295,7 @@ class AsyncGNNEngine:
         timeout applies (idle queue, or no timeout configured)."""
         if self.window_timeout_ms <= 0 or not self._queue:
             return None
-        age = time.monotonic() - self._queue[0].arrival
+        age = request_stamp() - self._queue[0].arrival
         return max(self.window_timeout_ms / 1e3 - age, 0.0)
 
     def _admit(self, *, flush: bool = False) -> List[GNNTicket]:
@@ -303,7 +332,7 @@ class AsyncGNNEngine:
             and not budget_full
         )
         if partial and not flush and self.window_timeout_ms > 0:
-            age_ms = (time.monotonic() - batch[0].arrival) * 1e3
+            age_ms = (request_stamp() - batch[0].arrival) * 1e3
             if age_ms < self.window_timeout_ms:
                 # Hold the window open for late arrivals; the admission
                 # order is untouched (back at the head, in order). Counted
@@ -312,8 +341,26 @@ class AsyncGNNEngine:
                 if self._held_head != batch[0].seq:
                     self._held_head = batch[0].seq
                     self.stats["held_windows"] += 1
+                    rec = otrace.get_recorder()
+                    if rec.enabled:
+                        rec.add_instant(
+                            "window_hold", cat="serve",
+                            trace_id=batch[0].trace_id,
+                            args={"head_seq": batch[0].seq,
+                                  "size": len(batch)},
+                        )
                 return []
             self.stats["deadline_closes"] += 1
+            rec = otrace.get_recorder()
+            if rec.enabled:
+                # The hold interval as a span: the head waited [arrival,
+                # now] for a window that never filled.
+                t1 = request_stamp()
+                rec.add_span(
+                    "window_hold", t1 - age_ms / 1e3, t1, cat="serve",
+                    trace_id=batch[0].trace_id,
+                    args={"head_seq": batch[0].seq, "deadline_close": True},
+                )
         return batch
 
     def step(self, *, flush: bool = False) -> List[GNNTicket]:

@@ -50,8 +50,26 @@ from repro.distributed.graph_shard import ShardedAmpleEngine
 from repro.graphs.csr import Graph, disjoint_union
 from repro.graphs.partition import Partition, partition_by_edges, validate_partition
 from repro.models.gnn import api as gnn_api
+from repro.observe import metrics as ometrics
+from repro.observe import trace as otrace
 
-__all__ = ["GNNRequest", "GNNResponse", "GNNServeEngine"]
+__all__ = ["GNNRequest", "GNNResponse", "GNNServeEngine", "request_stamp"]
+
+
+def request_stamp() -> float:
+    """The serving stack's one lifecycle clock: ``time.perf_counter()``.
+
+    Every admission/arrival stamp (``GNNRequest.admitted_at``,
+    ``GNNTicket.arrival``, ``RoutedTicket.arrival``) and every duration
+    (``plan_ms``/``run_ms``/``stall_ms``/``copy_ms``) must come from this
+    clock. Mixing clocks (the old code stamped lifecycle points with
+    ``time.monotonic()``) silently breaks queue-wait arithmetic on
+    platforms where the two clocks differ, and splits the trace into two
+    irreconcilable timelines. Routed (tenancy) and direct async requests
+    both stamp through here, at admission — the parity the satellite tests
+    pin down.
+    """
+    return time.perf_counter()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,9 +79,13 @@ class GNNRequest:
     graph: Graph
     features: np.ndarray  # f32[N, D]
     arch: str = ""  # "" -> the engine config's arch
-    admitted_at: float = 0.0  # time.monotonic() at admission; 0 = unqueued.
+    admitted_at: float = 0.0  # time.perf_counter() at admission; 0 = unqueued.
     # Set by queueing fronts (AsyncGNNEngine.submit, the tenancy router) so
-    # the response's queue_ms attributes wait separately from compute.
+    # the response's queue_ms attributes wait separately from compute. The
+    # stamp shares the perf_counter clock with every duration measurement,
+    # so admission->execution renders as one span on the trace timeline.
+    trace_id: str = ""  # per-request correlation id (observe.trace); ""
+    # when tracing is disabled — the engine then skips span recording.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +115,8 @@ class GNNResponse:
     prefetch_overlap: float = 0.0  # wall-clock copy time hidden behind compute
     stall_ms: float = 0.0  # wall time the stream blocked on feature copies
     copy_ms: float = 0.0  # wall time of the feature copies themselves
+    trace_id: str = ""  # correlation id of this request's trace spans ("" =
+    # tracing disabled or no id assigned upstream)
 
     @property
     def run_ms_per_member(self) -> float:
@@ -251,28 +275,39 @@ class GNNServeEngine:
         # the weight-quant cache.
         self._stores: "OrderedDict[tuple, Tuple[np.ndarray, object]]" = OrderedDict()
         self._last_stream = None  # StreamStats of the most recent _run
-        self.stats: Dict[str, float] = {
-            "requests": 0,
-            "batches": 0,
-            "cache_hits": 0,
-            "cache_misses": 0,
-            "planner_calls": 0,
-            "evictions": 0,
-            "shard_hits": 0,
-            "warm_loads": 0,
-            "member_hits": 0,
-            "member_misses": 0,
-            "class_hits": 0,
-            "class_misses": 0,
-            "streamed_requests": 0,
-            "bytes_streamed": 0,
-            "chunk_hits": 0,
-            "chunk_misses": 0,
-            "prefetched_uploads": 0,
-            "stream_fallbacks": 0,
-            "stall_ms": 0.0,
-            "copy_ms": 0.0,
-        }
+        # Historical dict API over registry-backed cells: the metrics
+        # registry (observe.metrics) holds the single copy of every counter;
+        # this view keeps `engine.stats[...]` value-identical to the old
+        # ad-hoc dict (ints stay ints, the *_ms accumulators stay floats).
+        self.instance = ometrics.next_instance("gnn_serve")
+        self.stats: ometrics.StatsView = ometrics.StatsView(
+            ometrics.get_registry(),
+            "gnn_serve",
+            {"engine": self.instance},
+            keys=(
+                "requests",
+                "batches",
+                "cache_hits",
+                "cache_misses",
+                "planner_calls",
+                "evictions",
+                "shard_hits",
+                "warm_loads",
+                "member_hits",
+                "member_misses",
+                "class_hits",
+                "class_misses",
+                "streamed_requests",
+                "bytes_streamed",
+                "chunk_hits",
+                "chunk_misses",
+                "prefetched_uploads",
+                "stream_fallbacks",
+                "stall_ms",
+                "copy_ms",
+            ),
+            float_keys=("stall_ms", "copy_ms"),
+        )
 
     @property
     def sharded(self) -> bool:
@@ -676,6 +711,7 @@ class GNNServeEngine:
         *,
         cache_store: bool = True,
         store_key=None,
+        trace_id: str = "",
     ) -> Tuple[np.ndarray, float]:
         """Execution step: one padded device call over an assembled plan.
 
@@ -694,6 +730,7 @@ class GNNServeEngine:
             sf = self._feature_stream(
                 features, cache_store=cache_store, store_key=store_key
             )
+            sf.trace_id = trace_id  # prefetcher stamps copy/stall spans
             batch_features = sf
             self._last_stream = sf.stats
         t0 = time.perf_counter()
@@ -702,7 +739,15 @@ class GNNServeEngine:
             {"graph": prepared, "features": batch_features, "engine": engine},
         )
         y = np.asarray(jax.block_until_ready(y))
-        run_ms = (time.perf_counter() - t0) * 1e3
+        t1 = time.perf_counter()
+        run_ms = (t1 - t0) * 1e3
+        rec = otrace.get_recorder()
+        if rec.enabled:
+            # Same stamps as run_ms, so the execute span reconciles exactly.
+            rec.add_span(
+                "execute", t0, t1, cat="serve", trace_id=trace_id,
+                args={"arch": arch, "streamed": self._last_stream is not None},
+            )
         if self._last_stream is not None:
             s = self._last_stream
             self.stats["bytes_streamed"] += s.bytes_streamed
@@ -730,21 +775,33 @@ class GNNServeEngine:
 
     @staticmethod
     def _queue_ms(admitted_at: float, exec_start: float) -> float:
-        """Admission→execution wait; 0.0 for requests that never queued."""
+        """Admission→execution wait; 0.0 for requests that never queued.
+
+        Both stamps are ``time.perf_counter()`` — the one clock the whole
+        serving stack uses (see ``request_stamp``) — so this subtraction,
+        the trace's queue span, and every duration share a timeline.
+        """
         if admitted_at <= 0.0:
             return 0.0
         return max(exec_start - admitted_at, 0.0) * 1e3
 
     def infer(
-        self, graph: Graph, features, *, arch: str = "", admitted_at: float = 0.0
+        self,
+        graph: Graph,
+        features,
+        *,
+        arch: str = "",
+        admitted_at: float = 0.0,
+        trace_id: str = "",
     ) -> GNNResponse:
         """Serve one request; plans come from the LRU cache when warm.
 
         With padded unions enabled the request is served as a batch of one —
         its member plan piece then pre-warms every future batch containing
-        this structure. ``admitted_at`` (a ``time.monotonic()`` stamp) marks
-        when the request was admitted upstream; the response's ``queue_ms``
-        reports the wait between then and execution start.
+        this structure. ``admitted_at`` (a ``time.perf_counter()`` stamp, see
+        ``request_stamp``) marks when the request was admitted upstream; the
+        response's ``queue_ms`` reports the wait between then and execution
+        start.
         """
         arch = self._arch(arch)
         # The store-cache identity is the CALLER's object: validation may
@@ -752,7 +809,14 @@ class GNNServeEngine:
         # derived array would rebuild the store on every warm request.
         original = features
         features = self._validate_request(graph, features)
-        queue_ms = self._queue_ms(admitted_at, time.monotonic())
+        rec = otrace.get_recorder()
+        if rec.enabled and not trace_id:
+            trace_id = otrace.new_trace_id()
+        exec_start = time.perf_counter()
+        queue_ms = self._queue_ms(admitted_at, exec_start)
+        if rec.enabled and admitted_at > 0.0:
+            rec.add_span("queue", admitted_at, exec_start, cat="serve",
+                         trace_id=trace_id)
         if self.padded_unions:
             prepared, plan, engine, hit, plan_ms = self._plan_for_padded([graph], arch)
             features = self._pad_features(features, prepared.num_nodes)
@@ -760,7 +824,16 @@ class GNNServeEngine:
             prepared, plan, engine, hit, plan_ms = self._plan_for_sharded(graph, arch)
         else:
             prepared, plan, engine, hit, plan_ms = self._plan_for(graph, arch)
-        y, run_ms = self._run(arch, prepared, engine, features, store_key=original)
+        if rec.enabled:
+            rec.add_span(
+                "plan", exec_start, time.perf_counter(), cat="serve",
+                trace_id=trace_id,
+                args={"cache_hit": hit, "plan_ms": plan_ms},
+            )
+        y, run_ms = self._run(
+            arch, prepared, engine, features, store_key=original,
+            trace_id=trace_id,
+        )
         self.stats["requests"] += 1
         if self._last_stream is not None:
             self.stats["streamed_requests"] += 1
@@ -772,6 +845,7 @@ class GNNServeEngine:
             run_ms=run_ms,
             num_shards=getattr(plan, "num_shards", 1),
             queue_ms=queue_ms,
+            trace_id=trace_id,
             **self._stream_fields(),
         )
 
@@ -800,12 +874,33 @@ class GNNServeEngine:
         for r in requests[1:]:
             self._arch(r.arch)  # every request must match this engine's arch
         feats = [self._validate_request(r.graph, r.features) for r in requests]
-        exec_start = time.monotonic()
+        rec = otrace.get_recorder()
+        exec_start = time.perf_counter()
         queue_waits = [self._queue_ms(r.admitted_at, exec_start) for r in requests]
+        batch_tid = requests[0].trace_id
+        if rec.enabled:
+            if not batch_tid:
+                batch_tid = otrace.new_trace_id()
+            # Per-member queue spans carry each request's own id; the
+            # window-level plan/execute spans carry the lead member's.
+            for r in requests:
+                if r.admitted_at > 0.0:
+                    rec.add_span("queue", r.admitted_at, exec_start,
+                                 cat="serve", trace_id=r.trace_id or batch_tid)
         members = [r.graph for r in requests]
         prepared, plan, engine, hit, plan_ms = self._plan_for_batch(members, arch)
+        if rec.enabled:
+            rec.add_span(
+                "plan", exec_start, time.perf_counter(), cat="serve",
+                trace_id=batch_tid,
+                args={"cache_hit": hit, "plan_ms": plan_ms,
+                      "batch": len(requests)},
+            )
         features = self._pad_features(np.concatenate(feats, axis=0), prepared.num_nodes)
-        y, run_ms = self._run(arch, prepared, engine, features, cache_store=False)
+        y, run_ms = self._run(
+            arch, prepared, engine, features, cache_store=False,
+            trace_id=batch_tid,
+        )
         # Counted only on success, so a failed-and-requeued continuous-batching
         # window doesn't double-count when it retries.
         self.stats["requests"] += len(requests)
@@ -817,6 +912,7 @@ class GNNServeEngine:
         out: List[GNNResponse] = []
         start = 0
         stream_fields = self._stream_fields()
+        scatter_t0 = time.perf_counter()
         for r, q_ms in zip(requests, queue_waits):
             stop = start + r.graph.num_nodes
             out.append(
@@ -829,10 +925,16 @@ class GNNServeEngine:
                     num_shards=getattr(plan, "num_shards", 1),
                     batch_size=len(requests),
                     queue_ms=q_ms,
+                    trace_id=r.trace_id or batch_tid,
                     **stream_fields,
                 )
             )
             start = stop
+        if rec.enabled:
+            rec.add_span(
+                "scatter", scatter_t0, time.perf_counter(), cat="serve",
+                trace_id=batch_tid, args={"batch": len(requests)},
+            )
         return out
 
     # --------------------------------------------------------- persistence

@@ -141,7 +141,7 @@ class _TenantStats:
     slo_hits: int = 0
     slo_violations: int = 0
     completed_nodes: int = 0
-    first_event: float = 0.0  # monotonic time of the first admission
+    first_event: float = 0.0  # perf_counter time of the first admission
     last_completion: float = 0.0
 
 
@@ -154,8 +154,17 @@ class TenantTelemetry:
     """
 
     def __init__(self, rel_error: float = 0.025):
+        from repro.observe import metrics as ometrics
+
         self.rel_error = rel_error
         self._tenants: Dict[str, _TenantStats] = {}
+        # Each tenant's histograms are *adopted* by the process-wide metrics
+        # registry (one shared object, no second copy), so the Prometheus
+        # dump carries per-tenant latency quantiles without the router doing
+        # anything. The instance label keeps concurrent telemetry objects
+        # (common in tests) from aliasing each other's tenants.
+        self._registry = ometrics.get_registry()
+        self.instance = ometrics.next_instance("tenant_telemetry")
 
     def _get(self, tenant: str) -> _TenantStats:
         ts = self._tenants.get(tenant)
@@ -165,6 +174,16 @@ class TenantTelemetry:
                 queue_wait=StreamingHistogram(rel_error=self.rel_error),
             )
             self._tenants[tenant] = ts
+            self._registry.register_histogram(
+                "tenant_latency_ms", ts.latency,
+                help="end-to-end latency per tenant",
+                tenant=tenant, telemetry=self.instance,
+            )
+            self._registry.register_histogram(
+                "tenant_queue_wait_ms", ts.queue_wait,
+                help="admission->execution wait per tenant",
+                tenant=tenant, telemetry=self.instance,
+            )
         return ts
 
     def __contains__(self, tenant: str) -> bool:
@@ -175,7 +194,10 @@ class TenantTelemetry:
         ts = self._get(tenant)
         ts.submitted += 1
         if ts.first_event == 0.0:
-            ts.first_event = time.monotonic() if now is None else now
+            # perf_counter: the serving stack's one lifecycle clock (see
+            # serve.gnn_engine.request_stamp) — router-passed `now` stamps
+            # and the default must come from the same clock.
+            ts.first_event = time.perf_counter() if now is None else now
 
     def record_rejected(self, tenant: str) -> None:
         self._get(tenant).rejected += 1
@@ -203,7 +225,7 @@ class TenantTelemetry:
         ts.queue_wait.record(queue_ms)
         ts.completed += 1
         ts.completed_nodes += nodes
-        ts.last_completion = time.monotonic() if now is None else now
+        ts.last_completion = time.perf_counter() if now is None else now
         ok = slo_ms <= 0 or latency_ms <= slo_ms
         if slo_ms > 0:
             if ok:

@@ -42,8 +42,10 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.graphs.csr import Graph
+from repro.observe import metrics as ometrics
+from repro.observe import trace as otrace
 from repro.serve.async_gnn import AsyncGNNEngine, GNNTicket
-from repro.serve.gnn_engine import GNNResponse, GNNServeEngine
+from repro.serve.gnn_engine import GNNResponse, GNNServeEngine, request_stamp
 from repro.serve.telemetry import TenantTelemetry
 from repro.serve.tenancy.registry import TenantRegistry, TenantSpec, TokenBucket
 
@@ -70,8 +72,9 @@ class RoutedTicket:
     graph: Graph
     features: object  # validated f32[N, D]
     arch: str
-    arrival: float  # time.monotonic() at router admission
+    arrival: float  # request_stamp() at router admission
     preemptions: int = 0  # times bumped out of a staged window by a higher class
+    trace_id: str = ""  # per-request correlation id (observe.trace)
     _router: Optional["TenantRouter"] = dataclasses.field(
         default=None, repr=False, compare=False
     )
@@ -99,7 +102,7 @@ class RoutedTicket:
         bounds the total wait; a ticket whose window exhausted execution
         retries re-raises the attached error.
         """
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else time.perf_counter() + timeout
         while not self.done:
             if self._router is None:
                 raise RuntimeError(
@@ -116,7 +119,7 @@ class RoutedTicket:
                     "no admissible work"
                 )
             if deadline is not None:
-                remaining = deadline - time.monotonic()
+                remaining = deadline - time.perf_counter()
                 if remaining <= 0:
                     raise TimeoutError(
                         f"routed ticket {self.seq} still pending after "
@@ -216,16 +219,24 @@ class TenantRouter:
         self.window_log: Deque[Tuple[Tuple[str, int], ...]] = deque(
             maxlen=window_log_size
         )
-        self.stats: Dict[str, int] = {
-            "submitted": 0,
-            "completed": 0,
-            "rejected": 0,  # token-bucket rejections at the door
-            "preempted": 0,  # staged members bumped by a higher class
-            "windows": 0,  # executed window count
-            "held_windows": 0,
-            "deadline_closes": 0,
-            "failed": 0,  # tickets whose window exhausted execution retries
-        }
+        # Registry-backed counters behind the historical dict API; see
+        # GNNServeEngine.stats for the rationale.
+        self.instance = ometrics.next_instance("gnn_router")
+        self.stats: ometrics.StatsView = ometrics.StatsView(
+            ometrics.get_registry(),
+            "gnn_router",
+            {"router": self.instance},
+            keys=(
+                "submitted",
+                "completed",
+                "rejected",  # token-bucket rejections at the door
+                "preempted",  # staged members bumped by a higher class
+                "windows",  # executed window count
+                "held_windows",
+                "deadline_closes",
+                "failed",  # tickets whose window exhausted execution retries
+            ),
+        )
 
     # --------------------------------------------------------------- tenants
     def add_tenant(self, name: str, **kwargs) -> TenantSpec:
@@ -257,22 +268,34 @@ class TenantRouter:
         strictly-lower-class members out of a full staged window.
         """
         spec = self.registry.get(tenant)
+        rec = otrace.get_recorder()
         if not self._bucket(spec).try_acquire():
             self.stats["rejected"] += 1
             self.telemetry.record_rejected(tenant)
+            if rec.enabled:
+                rec.add_instant("reject", cat="tenancy",
+                                args={"tenant": tenant})
             raise RateLimitExceeded(tenant)
         serve_engine = self.engine.engine
         arch = serve_engine._arch(arch)
         features = serve_engine._validate_request(graph, features)
+        trace_id = otrace.new_trace_id() if rec.enabled else ""
         ticket = RoutedTicket(
             seq=self._seq,
             tenant=tenant,
             graph=graph,
             features=features,
             arch=arch,
-            arrival=time.monotonic(),
+            arrival=request_stamp(),
+            trace_id=trace_id,
             _router=self,
         )
+        if rec.enabled:
+            rec.add_instant(
+                "admit", t=ticket.arrival, cat="tenancy", trace_id=trace_id,
+                args={"tenant": tenant, "seq": ticket.seq,
+                      "nodes": graph.num_nodes},
+            )
         self._seq += 1
         self._queue(tenant).append(ticket)
         self.stats["submitted"] += 1
@@ -348,6 +371,7 @@ class TenantRouter:
             return  # even a clean sweep of lower classes can't make room
         # Requeue evicted members at their queue heads, preserving their
         # original staged order (reverse iteration + appendleft).
+        rec = otrace.get_recorder()
         for v in sorted(evicted, key=lambda rt: self._staged.index(rt), reverse=True):
             self._staged.remove(v)
             self._staged_nodes -= v.graph.num_nodes
@@ -355,6 +379,11 @@ class TenantRouter:
             self._queues[v.tenant].appendleft(v)
             self.stats["preempted"] += 1
             self.telemetry.record_preempted(v.tenant)
+            if rec.enabled:
+                rec.add_instant(
+                    "preempt", cat="tenancy", trace_id=v.trace_id,
+                    args={"tenant": v.tenant, "by": spec.name},
+                )
         q.popleft()
         self._staged.append(head)
         self._staged_nodes += n
@@ -465,7 +494,7 @@ class TenantRouter:
                 oldest = min(heads)
         if oldest is None:
             return None
-        return max(self.hold_ms / 1e3 - (time.monotonic() - oldest), 0.0)
+        return max(self.hold_ms / 1e3 - (request_stamp() - oldest), 0.0)
 
     def step(self, *, flush: bool = False) -> List[RoutedTicket]:
         """One router tick: fill a window by DWRR, execute it, complete it.
@@ -476,9 +505,18 @@ class TenantRouter:
         engine's retry bound stays in flight — the error propagates, and the
         next step retries it before composing anything new.
         """
+        rec = otrace.get_recorder()
         if self._inflight:
             return self._run_engine()  # retry the failed window first
+        fill_t0 = time.perf_counter()
         self._fill_staged()
+        if rec.enabled and self._staged:
+            rec.add_span(
+                "dwrr_fill", fill_t0, time.perf_counter(), cat="tenancy",
+                trace_id=self._staged[0].trace_id,
+                args={"staged": len(self._staged),
+                      "nodes": self._staged_nodes},
+            )
         if not self._staged:
             return []
         partial = (
@@ -488,17 +526,33 @@ class TenantRouter:
         )
         if partial and not flush and self.hold_ms > 0:
             oldest = min(rt.arrival for rt in self._staged)
-            if (time.monotonic() - oldest) * 1e3 < self.hold_ms:
+            if (request_stamp() - oldest) * 1e3 < self.hold_ms:
                 if self._held_head != self._staged[0].seq:
                     self._held_head = self._staged[0].seq
                     self.stats["held_windows"] += 1
+                    if rec.enabled:
+                        rec.add_instant(
+                            "window_hold", cat="tenancy",
+                            trace_id=self._staged[0].trace_id,
+                            args={"head_seq": self._staged[0].seq,
+                                  "size": len(self._staged)},
+                        )
                 return []
             self.stats["deadline_closes"] += 1
+            if rec.enabled:
+                t1 = request_stamp()
+                rec.add_span(
+                    "window_hold", oldest, t1, cat="tenancy",
+                    trace_id=self._staged[0].trace_id,
+                    args={"head_seq": self._staged[0].seq,
+                          "deadline_close": True},
+                )
         staged, self._staged, self._staged_nodes = self._staged, [], 0
         self.window_log.append(tuple((rt.tenant, rt.seq) for rt in staged))
         for rt in staged:
             rt._ticket = self.engine.submit(
-                rt.graph, rt.features, arch=rt.arch, arrival=rt.arrival
+                rt.graph, rt.features, arch=rt.arch, arrival=rt.arrival,
+                trace_id=rt.trace_id,
             )
         self._inflight = staged
         return self._run_engine()
@@ -530,7 +584,7 @@ class TenantRouter:
             self.telemetry.record_failure(rt.tenant)
             return
         resp = rt.response
-        latency_ms = (time.monotonic() - rt.arrival) * 1e3
+        latency_ms = (request_stamp() - rt.arrival) * 1e3
         self.stats["completed"] += 1
         self.telemetry.record_completion(
             rt.tenant,

@@ -540,10 +540,10 @@ def test_queue_ms_zero_on_direct_sync_calls(pool):
 def test_queue_ms_honors_explicit_admission_stamp(pool):
     """A queueing front (the tenancy router) can carry its own admission
     timestamp through the sync path and get an honest end-to-end wait."""
-    import time
+    from repro.serve.gnn_engine import request_stamp
 
     eng = GNNServeEngine(_cfg("gcn"), key=jax.random.PRNGKey(0))
-    admitted_at = time.monotonic() - 0.2  # admitted 200ms ago upstream
+    admitted_at = request_stamp() - 0.2  # admitted 200ms ago upstream
     r = eng.infer(pool[0], pool[0].features, admitted_at=admitted_at)
     assert r.queue_ms >= 190.0
     rs = eng.infer_batch([
