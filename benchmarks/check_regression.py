@@ -52,6 +52,14 @@ QUALITY_FIELDS: Tuple[Tuple[str, float], ...] = (
     ("chunk_hit_rate", 0.01),
     ("prefetch_overlap", 0.10),
     ("slo_hit_rate", 0.05),
+    ("halo_overlap", 0.15),
+    ("halo_reduction_vs_edges", 0.10),
+)
+# Scale-free quality metrics where HIGHER is worse: (field, max absolute
+# rise before WARN). halo_frac is halo rows per owned node — a partitioner
+# change that inflates the exchange volume shows up here.
+INVERTED_QUALITY_FIELDS: Tuple[Tuple[str, float], ...] = (
+    ("halo_frac", 0.10),
 )
 
 
@@ -138,6 +146,14 @@ def check_soft_drift(
                     "WARN", name,
                     f"{field} {got:.3f} drifted below baseline "
                     f"{want:.3f} (tolerance {max_drop})",
+                ))
+        for field, max_rise in INVERTED_QUALITY_FIELDS:
+            got, want = _to_float(rec.get(field)), _to_float(ref.get(field))
+            if got is not None and want is not None and got > want + max_rise:
+                out.append(Finding(
+                    "WARN", name,
+                    f"{field} {got:.3f} drifted above baseline "
+                    f"{want:.3f} (tolerance {max_rise})",
                 ))
     for name in sorted(set(base) - set(fresh)):
         out.append(Finding("WARN", name, "baseline row missing from fresh run"))

@@ -167,7 +167,12 @@ def save_plan(
             "num_edges": plan.num_edges,
         }
         header["cfg"] = _cfg_header(plan.cfg)
+        header["partition_kind"] = plan.partition.kind
         arrays["partition_starts"] = np.asarray(plan.partition.starts, np.int64)
+        if plan.partition.order is not None:
+            # non-contiguous (min-cut) assignment: the permutation is part of
+            # the partition identity and must survive the round-trip
+            arrays["partition_order"] = np.asarray(plan.partition.order, np.int64)
         arrays["tags"] = np.asarray(plan.precision_tags, dtype="U8")
         shard_headers = []
         for k, sp in enumerate(plan.shards):
@@ -177,11 +182,19 @@ def save_plan(
                     "fingerprint": sp.fingerprint,
                     "lo": sp.shard.lo,
                     "hi": sp.shard.hi,
-                    "edge_range": list(sp.shard.edge_range),
+                    "edge_range": (
+                        list(sp.shard.edge_range)
+                        if sp.shard.edge_range is not None
+                        else None
+                    ),
                     "graph_name": sp.shard.graph.name,
                     "plan": _plan_header(sp.plan),
                 }
             )
+            if sp.shard.edge_idx is not None:
+                arrays[f"{prefix}edge_idx"] = np.asarray(
+                    sp.shard.edge_idx, np.int64
+                )
             arrays[f"{prefix}halo"] = np.asarray(sp.shard.halo, np.int64)
             arrays[f"{prefix}indptr"] = sp.shard.graph.indptr
             arrays[f"{prefix}indices"] = sp.shard.graph.indices
@@ -295,7 +308,16 @@ def _decode_record(path: str, z) -> PlanRecord:
         )
     elif header["kind"] == "sharded_plan":
         starts = np.asarray(z["partition_starts"], np.int64)
-        part = Partition(starts=starts)
+        order = (
+            np.asarray(z["partition_order"], np.int64)
+            if "partition_order" in z
+            else None
+        )
+        # files from before the partitioner field default to the contiguous
+        # edge-balanced kind (the only partitioner that existed then)
+        part = Partition(
+            starts=starts, order=order, kind=header.get("partition_kind", "edges")
+        )
         tags = np.asarray(z["tags"]).astype(str)
         groups = {t: np.nonzero(tags == t)[0] for t in np.unique(tags)}
         shards = []
@@ -309,16 +331,20 @@ def _decode_record(path: str, z) -> PlanRecord:
                 num_nodes=(hi - lo) + int(halo.size),
                 name=sh["graph_name"],
             )
+            edge_range = sh.get("edge_range")
             sub = ShardSubgraph(
                 index=k,
                 lo=lo,
                 hi=hi,
                 halo=halo,
-                local_ids=np.concatenate(
-                    [np.arange(lo, hi, dtype=np.int64), halo]
-                ),
+                local_ids=np.concatenate([part.owned(k), halo]),
                 graph=local_g,
-                edge_range=tuple(sh["edge_range"]),
+                edge_range=tuple(edge_range) if edge_range is not None else None,
+                edge_idx=(
+                    np.asarray(z[f"{prefix}edge_idx"], np.int64)
+                    if f"{prefix}edge_idx" in z
+                    else None
+                ),
             )
             shards.append(
                 ShardPlan(

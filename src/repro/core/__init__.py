@@ -3,6 +3,7 @@ from repro.core.scheduler import (
     EdgeTilePlan, BucketPlan, PaddedPlan,
     build_edge_tile_plan, build_bucket_plan, build_padded_plan,
     build_mixed_precision_plans, pack_segments,
+    split_plan_by_halo, tile_runs,
     graph_fingerprint, plan_fingerprint,
     partition_fingerprint, shard_plan_fingerprint,
 )

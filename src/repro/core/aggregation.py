@@ -111,6 +111,7 @@ def aggregate_edge_tiles(
     segments_per_tile: int,
     use_kernel: bool = False,
     edge_coeff: Optional[jnp.ndarray] = None,
+    out_init: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Event-driven aggregation: scan tiles, segment-reduce, scatter-add.
 
@@ -129,12 +130,23 @@ def aggregate_edge_tiles(
     aggregates every head in ONE tile scan — per-head coefficients broadcast
     over the head's feature slice, and each head's lane/segment reduction
     order is identical to its solo 1-D run (bitwise per head on this path).
+
+    ``out_init`` (f32[num_nodes, …]) seeds the scatter accumulator instead of
+    zeros — the continuation hook of the split interior/boundary execution
+    (``scheduler.split_plan_by_halo``): the boundary scan picks up exactly
+    where the interior scan left off, so split == unsplit bitwise. jnp path
+    only (the Pallas kernel owns its accumulator).
     """
     coeff = dplan.coeff
     if edge_coeff is not None:
         tc = tile_edge_coeff(dplan, edge_coeff)  # [T, E] or [T, E, H]
         coeff = coeff[..., None] * tc if tc.ndim == 3 else coeff * tc
     if use_kernel:
+        if out_init is not None:
+            raise ValueError(
+                "out_init continuation is only supported on the jnp path; "
+                "run the kernel path unsplit"
+            )
         if coeff.ndim == 3:
             from repro.kernels.segment_agg import attn_ops
 
@@ -172,7 +184,16 @@ def aggregate_edge_tiles(
             segments_per_tile=segments_per_tile,
         )
 
-    out = jnp.zeros((num_nodes + 1,) + x.shape[1:], x.dtype)
+    if out_init is None:
+        out = jnp.zeros((num_nodes + 1,) + x.shape[1:], x.dtype)
+    else:
+        # one scratch sentinel row appended; values carry over bitwise
+        out = jnp.concatenate(
+            [
+                out_init.astype(x.dtype),
+                jnp.zeros((1,) + x.shape[1:], x.dtype),
+            ]
+        )
 
     def body(out, tile):
         gather_idx, coeff, seg_ids, out_node = tile

@@ -49,6 +49,7 @@ from repro.observe import trace as otrace
 from repro.graphs.partition import (
     Partition,
     ShardSubgraph,
+    make_partition,
     partition_by_edges,
     shard_subgraph,
     validate_partition,
@@ -384,8 +385,7 @@ class ShardPlan:
 
     @property
     def num_edges(self) -> int:
-        e_lo, e_hi = self.shard.edge_range
-        return e_hi - e_lo
+        return self.shard.num_edges
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -462,7 +462,7 @@ def shard_plan_key(
     ).hexdigest()
     return sched.shard_plan_fingerprint(
         g,
-        part.starts,
+        part,
         k,
         repr(cfg),
         *sorted(dict.fromkeys(modes)),
@@ -498,8 +498,9 @@ def compile_shard_plan(
     if mode_coeffs is None:
         mode_coeffs = {m: aggregation_coefficients(g, m) for m in dict.fromkeys(modes)}
     sub = shard_subgraph(g, part, k)
-    e_lo, e_hi = sub.edge_range
-    local_coeffs = {m: np.asarray(c)[e_lo:e_hi] for m, c in mode_coeffs.items()}
+    local_coeffs = {
+        m: sub.slice_edges(np.asarray(c)) for m, c in mode_coeffs.items()
+    }
     local_tags = tags[sub.local_ids]
     plan = compile_plans(
         sub.graph,
@@ -518,6 +519,7 @@ def compile_sharded_plans(
     *,
     num_shards: Optional[int] = None,
     partition: Optional[Partition] = None,
+    partitioner: str = "edges",
     modes: Sequence[str] = ("sum",),
     precision_tags: Optional[np.ndarray] = None,
     shard_plans: Optional[Mapping[int, ShardPlan]] = None,
@@ -525,17 +527,20 @@ def compile_sharded_plans(
     """Partition-aware planning pipeline: Partition in, sharded plan out.
 
     Give either an explicit ``partition`` (validated against ``g``) or
-    ``num_shards`` (edge-balanced contiguous cut via ``partition_by_edges``).
-    Degree-Quant tags and per-mode coefficients are computed once globally,
-    then each shard is compiled over its local subgraph. ``shard_plans``
-    supplies already-compiled shards by index (the serving layer's per-shard
-    cache hits); only missing shards run the planner.
+    ``num_shards`` — then ``partitioner`` selects the algorithm ("edges" =
+    contiguous edge-balanced cut, "mincut" = halo-minimizing multilevel
+    refinement; see ``graphs.partition.make_partition``). The partitioner
+    identity is folded into ``partition_fp`` so plans never collide across
+    partitioners. Degree-Quant tags and per-mode coefficients are computed
+    once globally, then each shard is compiled over its local subgraph.
+    ``shard_plans`` supplies already-compiled shards by index (the serving
+    layer's per-shard cache hits); only missing shards run the planner.
     """
     cfg = cfg if cfg is not None else EngineConfig()
     if partition is None:
         if num_shards is None:
             raise ValueError("pass either partition or num_shards")
-        partition = partition_by_edges(g, num_shards)
+        partition = make_partition(g, num_shards, partitioner)
     else:
         validate_partition(g, partition)
         if num_shards is not None and partition.num_shards != num_shards:
@@ -569,7 +574,7 @@ def compile_sharded_plans(
         for k in range(partition.num_shards)
     )
     groups = {tag: np.nonzero(tags == tag)[0] for tag in np.unique(tags)}
-    partition_fp = sched.partition_fingerprint(g, partition.starts)
+    partition_fp = sched.partition_fingerprint(g, partition)
     h = hashlib.blake2b(digest_size=16)
     h.update(partition_fp.encode())
     for s in shards:

@@ -2,8 +2,12 @@
 from repro.graphs.csr import (
     Graph, add_self_loops, disjoint_union, from_edge_list, gcn_norm_coeffs, validate,
 )
-from repro.graphs.datasets import PAPER_DATASETS, DatasetSpec, make_dataset, make_lognormal_graph
+from repro.graphs.datasets import (
+    PAPER_DATASETS, DatasetSpec, make_clustered_graph, make_dataset,
+    make_lognormal_graph,
+)
 from repro.graphs.partition import (
-    Partition, ShardSubgraph, halo_nodes, partition_by_edges,
+    Partition, ShardSubgraph, halo_nodes, make_partition, partition_by_edges,
+    partition_cut_edges, partition_halo_volume, partition_min_cut,
     shard_edge_counts, shard_subgraph, validate_partition,
 )

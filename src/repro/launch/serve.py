@@ -69,6 +69,8 @@ def serve_gnn(cfg, args) -> None:
         cfg,
         key=jax.random.PRNGKey(0),
         num_shards=args.num_shards,
+        partitioner=args.partitioner or None,
+        halo_overlap=True if args.halo_overlap else None,
         feature_budget_bytes=budget or None,
         stream_packing=True if args.stream_packing else None,
         stream_reorder=False if args.no_stream_reorder else None,
@@ -99,16 +101,23 @@ def serve_gnn(cfg, args) -> None:
             if r.streamed
             else ""
         )
+        halo = (
+            f"  halo {r.halo_bytes >> 10}KB {r.halo_ms:.1f}ms"
+            f" overlap={r.halo_overlap:.2f}"
+            if r.halo_bytes
+            else ""
+        )
         print(
             f"request {i}: plan[{tag}] {r.plan_ms:7.1f} ms  run {r.run_ms:6.1f} ms  "
-            f"out {r.outputs.shape}  shards={r.num_shards}{stream}"
+            f"out {r.outputs.shape}  shards={r.num_shards}{stream}{halo}"
         )
 
     if eng.sharded:
         # Cluster-level lane economics: work balance + halo-exchange volume.
         rep = eng.shard_report()
         print(
-            f"shard balance: edge_balance={rep['edge_balance']:.3f} "
+            f"shard balance: partitioner={rep['partitioner']} "
+            f"edge_balance={rep['edge_balance']:.3f} "
             f"edges_per_shard={rep['edges_per_shard']}"
         )
         print(
@@ -312,6 +321,15 @@ def main():
     ap.add_argument("--num-shards", type=int, default=1,
                     help="partition the served graph into this many "
                          "edge-balanced shards (1 = single-plan path)")
+    ap.add_argument("--partitioner", default="",
+                    help="sharded-path partitioner: 'edges' (contiguous "
+                         "edge-balanced ranges) or 'mincut' (halo-minimizing "
+                         "multilevel; params inline, e.g. 'mincut(seed=1)'). "
+                         "Empty = cfg.gnn_partitioner")
+    ap.add_argument("--halo-overlap", action="store_true",
+                    help="sharded path: overlap each shard's halo exchange "
+                         "with its interior-tile aggregation (outputs stay "
+                         "bitwise-identical; responses report halo_overlap)")
     ap.add_argument("--continuous-batching", action="store_true",
                     help="serve the small-graph stream through the "
                          "event-driven AsyncGNNEngine admission queue")

@@ -126,7 +126,9 @@ def make_engine(
     *,
     num_shards: Optional[int] = None,
     partition=None,
+    partitioner: Optional[str] = None,
     mesh=None,
+    halo_overlap: Optional[bool] = None,
 ) -> AmpleEngine:
     """Build the execution engine ``cfg`` calls for over a *prepared* graph.
 
@@ -134,6 +136,9 @@ def make_engine(
     overrides) selects between the single-plan ``AmpleEngine`` and the
     partition-aware ``ShardedAmpleEngine`` — the arch apply functions are
     agnostic, so gcn/gin/sage thread through either unchanged.
+    ``gnn_partitioner`` picks the splitting algorithm ("edges" contiguous /
+    "mincut" halo-minimizing) and ``gnn_halo_overlap`` the overlapped halo
+    exchange; the keyword arguments override the config fields.
     """
     shards = cfg.gnn_num_shards if num_shards is None else num_shards
     if partition is None and shards <= 1:
@@ -145,9 +150,19 @@ def make_engine(
         engine_config(cfg),
         num_shards=None if partition is not None else shards,
         partition=partition,
+        partitioner=(
+            cfg.gnn_partitioner if partitioner is None else partitioner
+        ) or "edges",
         modes=(agg_mode(cfg),),
     )
-    return ShardedAmpleEngine(prepared, splan, mesh=mesh)
+    return ShardedAmpleEngine(
+        prepared,
+        splan,
+        mesh=mesh,
+        halo_overlap=(
+            cfg.gnn_halo_overlap if halo_overlap is None else halo_overlap
+        ),
+    )
 
 
 # --------------------------------------------------- uniform entry points

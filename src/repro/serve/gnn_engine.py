@@ -48,7 +48,7 @@ from repro.core.message_passing import (
 from repro.core.scheduler import plan_fingerprint, size_class, union_bucket_fingerprint
 from repro.distributed.graph_shard import ShardedAmpleEngine
 from repro.graphs.csr import Graph, disjoint_union
-from repro.graphs.partition import Partition, partition_by_edges, validate_partition
+from repro.graphs.partition import Partition, make_partition, validate_partition
 from repro.models.gnn import api as gnn_api
 from repro.observe import metrics as ometrics
 from repro.observe import trace as otrace
@@ -117,6 +117,13 @@ class GNNResponse:
     copy_ms: float = 0.0  # wall time of the feature copies themselves
     trace_id: str = ""  # correlation id of this request's trace spans ("" =
     # tracing disabled or no id assigned upstream)
+    # Halo-exchange telemetry (sharded host-loop path; zero elsewhere). Like
+    # run_ms these describe the whole device call this request rode in.
+    halo_ms: float = 0.0  # wall time of the fenced halo row fetches
+    halo_bytes: int = 0  # feature bytes crossing shard boundaries this call
+    halo_overlap: float = 0.0  # fraction of halo fetch time hidden behind
+    # interior-tile aggregation (1 - wait/fetch); 0.0 when overlap is off
+    # or the engine is unsharded
 
     @property
     def run_ms_per_member(self) -> float:
@@ -143,8 +150,19 @@ class GNNServeEngine:
         one plan per shard); 1 is the existing single-plan path.
     partition: explicit ``Partition`` override (validated per graph); implies
         the sharded path and fixes ``num_shards`` to its shard count.
+    partitioner: algorithm that splits served graphs when no explicit
+        ``partition`` is given — "edges" (contiguous edge-balanced ranges)
+        or "mincut" (halo-minimizing multilevel; params inline, e.g.
+        "mincut(seed=1)"). Default ``cfg.gnn_partitioner``. Part of the plan
+        cache key: the same graph served under two partitioners yields two
+        distinct cached plans.
     mesh: optional 1-D ``("shard",)`` device mesh for SPMD shard execution;
-        without one, shards run as a host loop on the local device.
+        without one, shards run as a host loop on the local device. Must
+        hold exactly ``num_shards`` devices.
+    halo_overlap: overlap each shard's halo exchange with its interior-tile
+        aggregation (outputs bitwise-identical; see
+        ``scheduler.split_plan_by_halo``). Default ``cfg.gnn_halo_overlap``.
+        Mutually exclusive with the Pallas kernel path.
     union_node_bucket / union_edge_bucket: >0 switches batched serving to
         **padded union size classes**: member graphs are planned (and cached)
         individually, the union plan is assembled by index relabelling, and
@@ -181,7 +199,9 @@ class GNNServeEngine:
         plan_cache_size: int = 32,
         num_shards: int = 1,
         partition: Optional[Partition] = None,
+        partitioner: Optional[str] = None,
         mesh=None,
+        halo_overlap: Optional[bool] = None,
         union_node_bucket: Optional[int] = None,
         union_edge_bucket: Optional[int] = None,
         feature_budget_bytes: Optional[int] = None,
@@ -203,7 +223,31 @@ class GNNServeEngine:
         self.plan_cache_size = plan_cache_size
         self.partition = partition
         self.num_shards = partition.num_shards if partition is not None else num_shards
+        self.partitioner = (
+            cfg.gnn_partitioner if partitioner is None else partitioner
+        ) or "edges"
         self.mesh = mesh
+        self.halo_overlap = (
+            cfg.gnn_halo_overlap if halo_overlap is None else halo_overlap
+        )
+        if self.halo_overlap and self.engine_cfg.use_kernel:
+            # Same contract as the streamed-path refusal below: the split
+            # interior/boundary schedule continues a scan accumulator, which
+            # the fused Pallas kernel has no hook for — refuse loudly rather
+            # than silently serving unsplit.
+            raise ValueError(
+                "halo_overlap and use_kernel are mutually exclusive: the "
+                "overlapped halo exchange continues the jnp scan accumulator "
+                "(the Pallas kernel owns its own). Drop "
+                "ModelConfig.gnn_use_kernel / EngineConfig.use_kernel, or "
+                "set gnn_halo_overlap=False / --halo-overlap off."
+            )
+        if mesh is not None and mesh.devices.size != self.num_shards:
+            raise ValueError(
+                f"mesh has {mesh.devices.size} devices but num_shards="
+                f"{self.num_shards}; pass --num-shards {mesh.devices.size} "
+                f"(or a mesh with one device per shard)"
+            )
         self.union_node_bucket = (
             cfg.gnn_union_node_bucket if union_node_bucket is None else union_node_bucket
         )
@@ -305,9 +349,14 @@ class GNNServeEngine:
                 "stream_fallbacks",
                 "stall_ms",
                 "copy_ms",
+                "halo_exchanges",
+                "halo_bytes",
+                "halo_ms",
+                "halo_wait_ms",
             ),
-            float_keys=("stall_ms", "copy_ms"),
+            float_keys=("stall_ms", "copy_ms", "halo_ms", "halo_wait_ms"),
         )
+        self._last_halo: Optional[Dict[str, float]] = None
 
     @property
     def sharded(self) -> bool:
@@ -339,8 +388,14 @@ class GNNServeEngine:
                 parts.append(
                     "starts:" + ",".join(str(int(s)) for s in self.partition.starts)
                 )
+                parts.append(f"kind:{self.partition.kind}")
             else:
                 parts.append(f"shards:{self.num_shards}")
+                parts.append(f"partitioner:{self.partitioner}")
+            if self.halo_overlap:
+                # plan contents are identical, but the cached engine holds
+                # split-plan device state — keep the entries distinct
+                parts.append("halo_overlap")
         return plan_fingerprint(g, *parts)
 
     def _plan_for(
@@ -514,7 +569,7 @@ class GNNServeEngine:
             validate_partition(prepared, self.partition)
             part = self.partition
         else:
-            part = partition_by_edges(prepared, self.num_shards)
+            part = make_partition(prepared, self.num_shards, self.partitioner)
         modes = (gnn_api.agg_mode(cfg),)
         if members is not None and self.engine_cfg.mixed_precision:
             tags = self._member_tags(cfg, members)
@@ -558,7 +613,9 @@ class GNNServeEngine:
             prepared, self.engine_cfg,
             partition=part, modes=modes, precision_tags=eff_tags, shard_plans=warm,
         )
-        engine = ShardedAmpleEngine(prepared, splan, mesh=self.mesh)
+        engine = ShardedAmpleEngine(
+            prepared, splan, mesh=self.mesh, halo_overlap=self.halo_overlap
+        )
         hit = not missing
         self.stats["cache_hits" if hit else "cache_misses"] += 1
         self._cache[key] = (prepared, splan, engine)
@@ -725,6 +782,7 @@ class GNNServeEngine:
         """
         cfg = dataclasses.replace(self.cfg, gnn_arch=arch)
         self._last_stream = None
+        self._last_halo = None
         batch_features = features
         if self._stream_eligible(engine, features):
             sf = self._feature_stream(
@@ -733,6 +791,10 @@ class GNNServeEngine:
             sf.trace_id = trace_id  # prefetcher stamps copy/stall spans
             batch_features = sf
             self._last_stream = sf.stats
+        halo_before = None
+        if isinstance(engine, ShardedAmpleEngine):
+            engine.trace_id = trace_id  # halo spans join this request's trace
+            halo_before = dict(engine.halo_stats)
         t0 = time.perf_counter()
         y, _ = gnn_api.gnn_forward(
             self.params, cfg,
@@ -757,6 +819,19 @@ class GNNServeEngine:
             self.stats["stream_fallbacks"] += s.fallbacks
             self.stats["stall_ms"] += s.stall_ms
             self.stats["copy_ms"] += s.copy_ms
+        if halo_before is not None:
+            # This call's halo traffic = engine accumulator delta (the engine
+            # is shared across cached requests; only the delta is ours).
+            delta = {
+                k: engine.halo_stats.get(k, 0.0) - halo_before.get(k, 0.0)
+                for k in ("halo_ms", "halo_wait_ms", "halo_bytes", "halo_exchanges")
+            }
+            if delta["halo_exchanges"] > 0:
+                self._last_halo = delta
+                self.stats["halo_exchanges"] += int(delta["halo_exchanges"])
+                self.stats["halo_bytes"] += int(delta["halo_bytes"])
+                self.stats["halo_ms"] += delta["halo_ms"]
+                self.stats["halo_wait_ms"] += delta["halo_wait_ms"]
         return y, run_ms
 
     def _stream_fields(self) -> Dict[str, object]:
@@ -771,6 +846,28 @@ class GNNServeEngine:
             "prefetch_overlap": s.prefetch_overlap,
             "stall_ms": s.stall_ms,
             "copy_ms": s.copy_ms,
+        }
+
+    def _halo_fields(self) -> Dict[str, object]:
+        """Response fields describing the most recent ``_run``'s halo traffic.
+
+        ``halo_overlap`` is wall-clock truth, mirroring ``prefetch_overlap``:
+        the fraction of fenced halo-fetch time the aggregation did NOT block
+        on (``1 - halo_wait_ms / halo_ms``).
+        """
+        h = self._last_halo
+        if h is None:
+            return {}
+        halo_ms = h["halo_ms"]
+        overlap = (
+            min(max(1.0 - h["halo_wait_ms"] / halo_ms, 0.0), 1.0)
+            if halo_ms > 0.0
+            else 0.0
+        )
+        return {
+            "halo_ms": halo_ms,
+            "halo_bytes": int(h["halo_bytes"]),
+            "halo_overlap": overlap,
         }
 
     @staticmethod
@@ -847,6 +944,7 @@ class GNNServeEngine:
             queue_ms=queue_ms,
             trace_id=trace_id,
             **self._stream_fields(),
+            **self._halo_fields(),
         )
 
     def infer_batch(self, requests: Sequence[GNNRequest]) -> List[GNNResponse]:
@@ -911,7 +1009,7 @@ class GNNServeEngine:
         self.stats["batches"] += 1
         out: List[GNNResponse] = []
         start = 0
-        stream_fields = self._stream_fields()
+        stream_fields = {**self._stream_fields(), **self._halo_fields()}
         scatter_t0 = time.perf_counter()
         for r, q_ms in zip(requests, queue_waits):
             stop = start + r.graph.num_nodes
@@ -977,7 +1075,8 @@ class GNNServeEngine:
                 continue
             if isinstance(rec.plan, ShardedExecutionPlan):
                 engine: AmpleEngine = ShardedAmpleEngine(
-                    rec.graph, rec.plan, mesh=self.mesh
+                    rec.graph, rec.plan, mesh=self.mesh,
+                    halo_overlap=self.halo_overlap,
                 )
                 for sp in rec.plan.shards:
                     self._shard_plans[sp.fingerprint] = sp
@@ -1007,6 +1106,12 @@ class GNNServeEngine:
             if copy_ms > 0.0
             else 0.0
         )
+        halo_ms = self.stats["halo_ms"]
+        halo_overlap = (
+            min(max(1.0 - self.stats["halo_wait_ms"] / halo_ms, 0.0), 1.0)
+            if halo_ms > 0.0
+            else 0.0
+        )
         return {
             "size": len(self._cache),
             "capacity": self.plan_cache_size,
@@ -1015,6 +1120,7 @@ class GNNServeEngine:
                 self.stats["chunk_hits"] / accesses if accesses else 0.0
             ),
             "prefetch_overlap": overlap,
+            "halo_overlap": halo_overlap,
         }
 
     def shard_report(self) -> Optional[Dict[str, object]]:

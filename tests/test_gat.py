@@ -222,3 +222,21 @@ def test_gat_served_outofcore_bitwise(graph):
     r = eng.infer(graph, graph.features)
     assert r.streamed
     np.testing.assert_array_equal(r.outputs, ref.outputs)
+
+
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_gat_mincut_overlap_matches_unsharded(graph, num_shards):
+    """GAT (runtime [E,H] attention) served over min-cut shards with
+    overlapped halo exchange — parity plus halo telemetry on the response."""
+    cfg = _cfg(heads=2)
+    solo = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    y1 = solo.infer(graph, graph.features).outputs
+    sharded = GNNServeEngine(
+        cfg, solo.params, num_shards=num_shards, partitioner="mincut",
+        halo_overlap=True,
+    )
+    r = sharded.infer(graph, graph.features)
+    np.testing.assert_allclose(y1, r.outputs, atol=5e-5, rtol=1e-4)
+    assert r.halo_bytes > 0
+    assert 0.0 <= r.halo_overlap <= 1.0
+    assert sharded.shard_report()["partitioner"].startswith("mincut(")

@@ -515,3 +515,30 @@ def test_check_regression_gate_disable(tmp_path, monkeypatch):
     assert cr.main(["--fresh", str(fp)]) == 1
     monkeypatch.setenv("REPRO_BENCH_NO_GATE", "1")
     assert cr.main(["--fresh", str(fp)]) == 0
+
+
+def test_halo_overlap_spans_reconcile_with_response(recorder):
+    """Overlapped sharded request: halo_gather/halo_wait spans on the halo
+    lane, recorded from the same stamps as the halo_ms/halo_wait_ms
+    accounting, carrying the request's trace_id."""
+    g = _graph(n=400)
+    eng = GNNServeEngine(
+        _cfg(), key=jax.random.PRNGKey(0), num_shards=2,
+        partitioner="mincut", halo_overlap=True,
+    )
+    eng.infer(g, g.features)  # warm plans + jit outside the window
+    r = eng.infer(g, g.features)
+    assert r.halo_bytes > 0
+    mine = [s for s in recorder.spans() if s.trace_id == r.trace_id]
+    gathers = [s for s in mine if s.name == "halo_gather"]
+    waits = [s for s in mine if s.name == "halo_wait"]
+    assert gathers and waits
+    assert all(s.cat == "halo" for s in gathers)
+    # span-derived totals match the reported fields (same stamps -> exact)
+    assert sum(s.dur_ms for s in gathers) == pytest.approx(r.halo_ms, rel=1e-6)
+    wait_total = sum(s.dur_ms for s in waits)
+    stats_wait = eng.stats["halo_wait_ms"]
+    assert wait_total >= 0.0 and stats_wait >= 0.0
+    assert 0.0 <= r.halo_overlap <= 1.0
+    # the gather runs on its own lane, apart from the consumer's spans
+    assert {s.lane for s in gathers} == {"halo"}

@@ -195,3 +195,48 @@ def test_concat_tile_plans_rejects_geometry_mismatch():
         concat_tile_plans([a, b], [0, 20], num_nodes=40)
     with pytest.raises(ValueError, match="beyond"):
         concat_tile_plans([a], [30], num_nodes=40)
+
+
+# ----------------------------------------------- interior/boundary halo split
+def test_split_plan_by_halo_partitions_tiles_and_edges():
+    """Every tile lands in exactly one half, real-edge counts are conserved,
+    interior tiles never gather a halo row, and each run (partial-response
+    chain) stays whole inside one half."""
+    from repro.core import split_plan_by_halo, tile_runs
+
+    g = make_lognormal_graph(220, 3.0, seed=13)
+    plan = build_edge_tile_plan(g, edges_per_tile=32)
+    num_owned = 140  # rows >= 140 play the halo role
+    interior, boundary = split_plan_by_halo(plan, num_owned)
+    assert interior.gather_idx.shape[0] + boundary.gather_idx.shape[0] == \
+        plan.gather_idx.shape[0]
+    assert interior.total_edges + boundary.total_edges == plan.total_edges
+    real_int = interior.coeff != 0
+    assert not np.any(real_int & (interior.gather_idx >= num_owned))
+    # every boundary run really touches the halo
+    bounds = tile_runs(boundary)
+    for r in range(bounds.shape[0] - 1):
+        t0, t1 = int(bounds[r]), int(bounds[r + 1])
+        real = boundary.coeff[t0:t1] != 0
+        assert np.any(real & (boundary.gather_idx[t0:t1] >= num_owned))
+    # edge multiset is preserved across the split
+    whole = _edge_multiset_from_tiles(plan)
+    merged = _edge_multiset_from_tiles(interior)
+    for k, v in _edge_multiset_from_tiles(boundary).items():
+        merged[k] = merged.get(k, 0.0) + v
+    assert set(merged) == set(whole)
+    for k in whole:
+        np.testing.assert_allclose(merged[k], whole[k], rtol=1e-6)
+
+
+def test_split_plan_by_halo_degenerate_halves():
+    from repro.core import split_plan_by_halo
+
+    g = make_lognormal_graph(120, 3.0, seed=14)
+    plan = build_edge_tile_plan(g, edges_per_tile=32)
+    interior, boundary = split_plan_by_halo(plan, g.num_nodes)
+    assert boundary.gather_idx.shape[0] == 0 and boundary.total_edges == 0
+    assert interior.total_edges == plan.total_edges
+    interior2, boundary2 = split_plan_by_halo(plan, 0)
+    assert interior2.total_edges == 0
+    assert boundary2.total_edges == plan.total_edges

@@ -404,3 +404,127 @@ def test_serve_engine_warm_start_from_disk(graph, tmp_path, num_shards):
     assert warm.cache_hit and warm.plan_ms == 0.0
     assert b.stats["planner_calls"] == 0
     np.testing.assert_array_equal(cold.outputs, warm.outputs)
+
+
+# -------------------------------- min-cut partitioner + overlapped halo serve
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_mincut_serving_matches_unsharded(arch, num_shards, graph):
+    """Acceptance: the halo-minimizing partitioner serves every arch with the
+    same outputs as the unsharded engine (non-contiguous shards, edge_idx
+    coefficient slicing)."""
+    cfg = _cfg(arch, precision="mixed")
+    base = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    ref = base.infer(graph, graph.features)
+    eng = GNNServeEngine(
+        cfg, base.params, num_shards=num_shards, partitioner="mincut"
+    )
+    r = eng.infer(graph, graph.features)
+    assert r.num_shards == num_shards
+    np.testing.assert_allclose(r.outputs, ref.outputs, atol=5e-4, rtol=1e-4)
+    rep = eng.shard_report()
+    assert rep["partitioner"].startswith("mincut(")
+
+
+def test_partitioner_cache_keys_distinct(graph):
+    """edges vs mincut plans must never collide in the serve cache."""
+    cfg = _cfg("gcn")
+    eng_a = GNNServeEngine(cfg, key=jax.random.PRNGKey(0), num_shards=2)
+    eng_b = GNNServeEngine(
+        cfg, eng_a.params, num_shards=2, partitioner="mincut"
+    )
+    ra = eng_a.infer(graph, graph.features)
+    rb = eng_b.infer(graph, graph.features)
+    assert ra.fingerprint != rb.fingerprint
+    np.testing.assert_allclose(ra.outputs, rb.outputs, atol=5e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("partitioner", ["edges", "mincut"])
+def test_halo_overlap_bitwise_vs_unsplit(graph, partitioner):
+    """Acceptance: interior/boundary split execution is bitwise-identical to
+    the unsplit scan — overlap must be a pure scheduling change."""
+    cfg = EngineConfig(edges_per_tile=64, mixed_precision=True)
+    from repro.graphs import make_partition
+
+    part = make_partition(graph, 3, partitioner)
+    splan = compile_sharded_plans(graph, cfg, partition=part, modes=("gcn",))
+    x = jnp.asarray(graph.features)
+    plain = ShardedAmpleEngine(graph, splan)
+    split = ShardedAmpleEngine(graph, splan, halo_overlap=True)
+    np.testing.assert_array_equal(
+        np.asarray(plain.aggregate(x, mode="gcn")),
+        np.asarray(split.aggregate(x, mode="gcn")),
+    )
+    assert split.halo_stats.get("halo_exchanges", 0) > 0
+    assert split.halo_stats.get("halo_bytes", 0) > 0
+    assert split.halo_stats.get("halo_ms", 0.0) >= 0.0
+
+
+def test_halo_overlap_serving_and_response_fields(graph):
+    """halo_* telemetry rides the response and reconciles with engine stats."""
+    cfg = _cfg("gcn")
+    base = GNNServeEngine(cfg, key=jax.random.PRNGKey(0))
+    ref = base.infer(graph, graph.features)
+    eng = GNNServeEngine(
+        cfg, base.params, num_shards=2, partitioner="mincut", halo_overlap=True
+    )
+    r = eng.infer(graph, graph.features)
+    np.testing.assert_allclose(r.outputs, ref.outputs, atol=5e-4, rtol=1e-4)
+    assert r.halo_bytes > 0 and r.halo_ms >= 0.0
+    assert 0.0 <= r.halo_overlap <= 1.0
+    info = eng.cache_info()
+    assert info["halo_exchanges"] > 0
+    assert info["halo_bytes"] >= r.halo_bytes
+    assert 0.0 <= info["halo_overlap"] <= 1.0
+    # unsharded requests carry no halo telemetry
+    assert ref.halo_bytes == 0 and ref.halo_overlap == 0.0
+
+
+def test_halo_overlap_rejects_kernel_path(graph):
+    cfg = dataclasses.replace(_cfg("gcn"), gnn_use_kernel=True)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        GNNServeEngine(
+            cfg, key=jax.random.PRNGKey(0), num_shards=2, halo_overlap=True
+        )
+    ecfg = EngineConfig(edges_per_tile=64, use_kernel=True)
+    splan = compile_sharded_plans(graph, ecfg, num_shards=2, modes=("sum",))
+    with pytest.raises(ValueError, match="gnn_halo_overlap"):
+        ShardedAmpleEngine(graph, splan, halo_overlap=True)
+
+
+def test_mesh_size_mismatch_rejected_at_construction(graph):
+    """--num-shards must match the mesh: fail at engine construction with a
+    message naming the flags, not deep inside shard_map."""
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("shard",))
+    with pytest.raises(ValueError, match="--num-shards"):
+        GNNServeEngine(
+            _cfg("gcn"), key=jax.random.PRNGKey(0), num_shards=2, mesh=mesh
+        )
+
+
+def test_plan_store_roundtrip_mincut(graph, tmp_path):
+    """Non-contiguous partitions persist: kind, order and edge_idx survive."""
+    from repro.checkpoint.plan_store import load_plan, save_plan
+    from repro.graphs import make_partition
+
+    cfg = EngineConfig(edges_per_tile=64)
+    part = make_partition(graph, 3, "mincut", seed=4)
+    splan = compile_sharded_plans(graph, cfg, partition=part, modes=("sum",))
+    path = save_plan(str(tmp_path / "mc.npz"), splan, graph=graph)
+    rec = load_plan(path)
+    assert rec.plan == splan
+    assert rec.plan.partition.kind == part.kind
+    assert rec.plan.partition_fp == splan.partition_fp
+    np.testing.assert_array_equal(rec.plan.partition.order, part.order)
+    for a, b in zip(rec.plan.shards, splan.shards):
+        assert a.fingerprint == b.fingerprint
+        if b.shard.edge_idx is not None:
+            np.testing.assert_array_equal(a.shard.edge_idx, b.shard.edge_idx)
+        np.testing.assert_array_equal(a.shard.local_ids, b.shard.local_ids)
+    x = jnp.asarray(graph.features)
+    np.testing.assert_array_equal(
+        np.asarray(ShardedAmpleEngine(graph, splan).aggregate(x, mode="sum")),
+        np.asarray(ShardedAmpleEngine(rec.graph, rec.plan).aggregate(x, mode="sum")),
+    )
